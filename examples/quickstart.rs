@@ -1,0 +1,44 @@
+//! Quickstart: build the two platforms, run one workload on each, print the
+//! headline comparison — the 60-second tour of the public API.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use commtax::benchkit::fmt_ns;
+use commtax::workload::rag::{run_rag, RagConfig};
+use commtax::workload::Platform;
+
+fn main() {
+    // 1. The two systems under test (§4/§5 of the paper).
+    let cxl = Platform::composable_cxl();
+    let rdma = Platform::conventional_rdma();
+    println!("platforms: {} vs {}", cxl.name, rdma.name);
+
+    // 2. A latency-critical path probe: one 1.5 KiB dependent remote read.
+    println!(
+        "remote 1.5KiB read: cxl={} rdma={} ({:.1}x)",
+        fmt_ns(cxl.remote_read(1536)),
+        fmt_ns(rdma.remote_read(1536)),
+        rdma.remote_read(1536) / cxl.remote_read(1536)
+    );
+
+    // 3. A full workload: the Fig 33 RAG recipe demo.
+    let cfg = RagConfig::recipe_demo();
+    let a = run_rag(&cfg, &cxl);
+    let b = run_rag(&cfg, &rdma);
+    println!("\nRAG pipeline ({} queries):", cfg.queries);
+    println!(
+        "  search     cxl={} rdma={} ({:.1}x, paper 14x)",
+        fmt_ns(a.search.total()),
+        fmt_ns(b.search.total()),
+        b.search.total() / a.search.total()
+    );
+    println!(
+        "  generation cxl={} rdma={} ({:.1}x, paper 2.78x)",
+        fmt_ns(a.generation.total()),
+        fmt_ns(b.generation.total()),
+        b.generation.total() / a.generation.total()
+    );
+    println!("  total speedup: {:.2}x", b.total() / a.total());
+}

@@ -1,0 +1,111 @@
+//! End-to-end validation driver (DESIGN.md requirement): load the real AOT
+//! artifacts, stand up the coordinator (router → dynamic batcher →
+//! executor), serve a batched stream of RAG requests where every request
+//! performs *real PJRT compute* (query encoding + corpus scoring + LLM
+//! prefill + auto-regressive decode through the KV cache), and report
+//! latency/throughput. The data-movement side (corpus residency: CXL pool
+//! vs RDMA remote) is priced by the fabric models and reported next to the
+//! measured compute so the communication tax is visible per request.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example serve_rag
+//! ```
+
+use commtax::benchkit::fmt_ns;
+use commtax::runtime::Runtime;
+use commtax::serve::{serve_with, ServeConfig};
+use commtax::sim::Rng;
+use commtax::workload::Platform;
+use std::path::Path;
+use std::time::Instant;
+
+const DIM: usize = 256;
+const CORPUS: usize = 1024;
+const VOCAB: usize = 512;
+
+fn main() -> commtax::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::cpu()?;
+    let names = rt.load_dir(dir)?;
+    println!("loaded {} artifacts on {}: {:?}", names.len(), rt.platform(), names);
+
+    // synthetic corpus: the "external knowledge base" of the RAG pipeline
+    let mut rng = Rng::new(7);
+    let corpus: Vec<f32> = (0..CORPUS * DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+
+    // per-batch executor: real PJRT compute for retrieval + generation
+    let mut decode_steps = 0u64;
+    let mut retrievals = 0u64;
+    let mut rng2 = Rng::new(13);
+    let mut exec = |batch: usize| {
+        let t0 = Instant::now();
+        for _ in 0..batch.div_ceil(4) {
+            // 1. retrieval: encode 4 queries, score the corpus, top-k
+            let q: Vec<f32> = (0..4 * DIM).map(|_| rng2.normal(0.0, 1.0) as f32).collect();
+            let out = rt
+                .execute_f32("rag_retrieve", &[(&q, &[4, DIM as i64]), (&corpus, &[CORPUS as i64, DIM as i64])])
+                .expect("retrieve");
+            retrievals += 1;
+            let top_idx = &out[1];
+            // 2. generation: prompt conditioned on retrieved ids
+            let tokens: Vec<f32> =
+                (0..4 * 32).map(|i| (top_idx[i % top_idx.len()] as usize % VOCAB) as f32).collect();
+            let pre = rt.execute_f32("tinylm_prefill", &[(&tokens, &[4, 32])]).expect("prefill");
+            let (mut kc, mut vc) = (pre[1].clone(), pre[2].clone());
+            let mut next: Vec<f32> = (0..4)
+                .map(|b| {
+                    let base = (b * 32 + 31) * VOCAB;
+                    argmax(&pre[0][base..base + VOCAB]) as f32
+                })
+                .collect();
+            // 3. decode 8 tokens through the KV cache
+            for step in 0..8 {
+                let pos = vec![(32 + step) as f32];
+                let dec = rt
+                    .execute_f32(
+                        "tinylm_decode",
+                        &[(&next, &[4, 1]), (&kc, &[2, 16, 64, 32]), (&vc, &[2, 16, 64, 32]), (&pos, &[1])],
+                    )
+                    .expect("decode");
+                kc = dec[1].clone();
+                vc = dec[2].clone();
+                next = (0..4).map(|b| argmax(&dec[0][b * VOCAB..(b + 1) * VOCAB]) as f32).collect();
+                decode_steps += 1;
+            }
+        }
+        t0.elapsed().as_nanos() as f64
+    };
+
+    let cfg = ServeConfig { requests: 64, max_batch: 4, arrival_mean: 5.0e6, ..Default::default() };
+    let report = serve_with(&cfg, &mut exec);
+
+    println!("\n== end-to-end serving (REAL PJRT compute) ==");
+    println!("requests          {}", report.latency.count());
+    println!("batches           {} (mean size {:.1})", report.batches, report.mean_batch);
+    println!("retrievals        {retrievals}  decode steps {decode_steps}");
+    println!("latency p50       {}", fmt_ns(report.latency.percentile(50.0)));
+    println!("latency p95       {}", fmt_ns(report.latency.percentile(95.0)));
+    println!("latency p99       {}", fmt_ns(report.latency.percentile(99.0)));
+    println!("throughput        {:.1} req/s", report.throughput_rps);
+
+    // data-path tax per request: simulated corpus residency comparison
+    let cxl = Platform::composable_cxl();
+    let rdma = Platform::conventional_rdma();
+    let fetch_bytes = 8 * DIM as u64 * 4; // top-k vectors fetched per request
+    println!("\n== simulated data-path tax per request (corpus residency) ==");
+    println!(
+        "cxl pool fetch    {}   rdma remote fetch {}   ratio {:.1}x",
+        fmt_ns(cxl.remote_read(fetch_bytes)),
+        fmt_ns(rdma.remote_read(fetch_bytes)),
+        rdma.remote_read(fetch_bytes) / cxl.remote_read(fetch_bytes)
+    );
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}

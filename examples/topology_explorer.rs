@@ -1,0 +1,55 @@
+//! Topology explorer (Fig 29 / Fig 41): sweep interconnect shapes and
+//! scales, printing switch counts, hop distances, and supercluster
+//! latencies under the three Fig 41 fabric shapes.
+//!
+//! ```sh
+//! cargo run --release --offline --example topology_explorer
+//! ```
+
+use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
+use commtax::fabric::switch::switches_required;
+use commtax::fabric::topology::Topology;
+
+fn main() {
+    println!("== Fig 29: topology scaling ==");
+    println!("{:<12} {:>10} {:>14} {:>10}", "shape", "endpoints", "switch nodes", "mean hops");
+    for n in [64usize, 256, 1024] {
+        let side = (n as f64).cbrt().round() as usize;
+        let groups = (n as f64).sqrt().round() as usize;
+        let shapes: Vec<(&str, Topology)> = vec![
+            ("multi-clos", Topology::multi_clos(n, 32, 8)),
+            ("torus3d", Topology::torus3d(side, side, side)),
+            ("dragonfly", Topology::dragonfly(groups, n / groups)),
+        ];
+        for (name, t) in shapes {
+            println!("{:<12} {:>10} {:>14} {:>10.2}", name, t.endpoints().len(), t.switch_count(), t.mean_hops());
+        }
+    }
+
+    println!("\n== scale-up ceiling: single-hop Clos (NVLink/UALink) ==");
+    for n in [64usize, 72, 256, 1024] {
+        let req = switches_required(commtax::fabric::topology::TopologyKind::SingleClos, n, 72);
+        let verdict = if req == usize::MAX { "NOT constructible (beyond rack scale)" } else { "ok" };
+        println!("n={n:<6} radix-72 single-hop Clos: {verdict}");
+    }
+
+    println!("\n== Fig 41: CXL-over-XLink supercluster (8 clusters, 1 MiB) ==");
+    println!("{:<12} {:>14} {:>14} {:>14}", "fabric", "intra", "inter", "tier-2 tray");
+    for shape in [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly] {
+        let clusters: Vec<XLinkCluster> =
+            (0..8).map(|i| if i % 2 == 0 { XLinkCluster::nvl72() } else { XLinkCluster::ualink(64) }).collect();
+        let mut sc = Supercluster::build(&clusters, shape, 4).with_bridge_cache(0.5);
+        let intra = sc.transfer_accel((0, 0), (0, 1), 1 << 20, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let inter = sc.transfer_accel((0, 0), (7, 0), 1 << 20, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let tray = sc.transfer_to_tray((3, 0), 0, 1 << 20, 0.0).unwrap();
+        println!(
+            "{:<12} {:>14} {:>14} {:>14}",
+            format!("{shape:?}"),
+            commtax::benchkit::fmt_ns(intra.latency),
+            commtax::benchkit::fmt_ns(inter.latency),
+            commtax::benchkit::fmt_ns(tray.latency)
+        );
+    }
+}

@@ -1,0 +1,124 @@
+"""AOT compile path: lower every L2 entry point to HLO **text** +
+manifest.json for the Rust PJRT runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and DESIGN.md.
+
+Model weights are baked into the HLO as constants (lowered via closures
+over concrete arrays), so the Rust hot path only feeds activations.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import cfd_model, dlrm_model, rag_model, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # as_hlo_text(True) == print_large_constants: baked weights must survive
+    # the text round-trip (the default elides them as '{...}').
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def entrypoints():
+    """(name, fn, input_shapes, output_shapes) for every artifact."""
+    t_params = transformer.init_params(seed=0)
+    d_params = dlrm_model.init_params(seed=0)
+    r_params = rag_model.init_params(seed=0)
+
+    B = transformer.BATCH
+    BH = B * transformer.HEADS
+    T = transformer.PREFILL_T
+    TM = transformer.MAX_T
+    HD = transformer.HEAD_DIM
+    L = transformer.LAYERS
+    V = transformer.VOCAB
+    cache = [L, BH, TM, HD]
+
+    eps = [
+        (
+            "tinylm_prefill",
+            lambda tokens: transformer.prefill(t_params, tokens),
+            [[B, T]],
+            [[B, T, V], cache, cache],
+        ),
+        (
+            "tinylm_decode",
+            lambda token, kc, vc, pos: transformer.decode_step(t_params, token, kc, vc, pos),
+            [[B, 1], cache, cache, [1]],
+            [[B, 1, V], cache, cache],
+        ),
+        (
+            "rag_retrieve",
+            lambda q, c: rag_model.retrieve(r_params, q, c),
+            [[4, rag_model.DIM], [1024, rag_model.DIM]],
+            [[4, rag_model.K], [4, rag_model.K]],
+        ),
+        (
+            "dlrm_forward",
+            lambda dense, idx: dlrm_model.dlrm_forward(d_params, dense, idx),
+            [[32, dlrm_model.N_DENSE], [32, dlrm_model.N_TABLES * dlrm_model.BAG]],
+            [[32, 1]],
+        ),
+        (
+            "cfd_relax",
+            cfd_model.relax,
+            [[cfd_model.H, cfd_model.W]],
+            [[cfd_model.H, cfd_model.W]],
+        ),
+    ]
+    return eps
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, fn, in_shapes, out_shapes in entrypoints():
+        specs = [_spec(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "input_shapes": in_shapes,
+                "output_shapes": out_shapes,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars, inputs {in_shapes}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

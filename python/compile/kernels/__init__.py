@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from .attention import attention, decode_attention
+from .embedding import embedding_bag
+from .similarity import similarity
+from .stencil import jacobi_step
+
+__all__ = [
+    "attention",
+    "decode_attention",
+    "embedding_bag",
+    "similarity",
+    "jacobi_step",
+]

@@ -1,0 +1,94 @@
+"""L1 Pallas kernels: fused scaled-dot-product attention.
+
+Two kernels:
+
+* ``attention``       — prefill: full (optionally causal) attention over a
+  sequence, gridded over the batch*head dimension so each program instance
+  owns one head's (T, d) tile in VMEM.
+* ``decode_attention`` — one auto-regressive step: a single query row
+  against the KV cache.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's prototype
+ran CUDA-style kernels; here each head's Q/K/V tile is sized for VMEM
+residency via ``BlockSpec`` (the HBM->VMEM schedule replaces the
+threadblock/shared-memory schedule) and the QK^T / PV contractions are MXU-
+shaped matmuls with f32 accumulation. ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0].astype(jnp.float32)  # (T, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        t = q.shape[0]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask, s, -1e30)
+    # numerically stable softmax
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """Fused attention. q, k, v: (BH, T, d) -> (BH, T, d).
+
+    Grid: one program per batch-head; each instance holds one (T, d) tile of
+    Q/K/V in VMEM.
+    """
+    bh, t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_kernel, causal=causal, scale=scale)
+    block = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[block, block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    q = q_ref[0].astype(jnp.float32)  # (1, d)
+    k = k_ref[0].astype(jnp.float32)  # (T, d)
+    v = v_ref[0].astype(jnp.float32)
+    valid = m_ref[0] > 0.5  # (1, T)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, T)
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, mask):
+    """One decode step with a validity mask over cache rows.
+
+    q: (BH, 1, d); caches: (BH, T, d); mask: (BH, 1, T) with 1.0 on valid
+    cache positions -> (BH, 1, d).
+    """
+    bh, t, d = k_cache.shape
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    qspec = pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0))
+    kvspec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    mspec = pl.BlockSpec((1, 1, t), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[qspec, kvspec, kvspec, mspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, mask)

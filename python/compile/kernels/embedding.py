@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: DLRM embedding-bag gather + sum-pool.
+
+Grid: one program per batch sample; the sample's bag indices select rows
+from the resident table block and sum-pool them. Uses block-gather
+(jnp.take on the VMEM-resident tile) rather than the warp-level
+scatter/gather a CUDA kernel would use (DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, table_ref, o_ref):
+    idx = idx_ref[0].astype(jnp.int32)  # (L,)
+    table = table_ref[...]  # (V, D) resident block
+    rows = jnp.take(table, idx, axis=0)  # (L, D)
+    o_ref[0] = jnp.sum(rows.astype(jnp.float32), axis=0).astype(o_ref.dtype)
+
+
+def embedding_bag(indices, table):
+    """indices: (B, L) float32 (cast to int inside), table: (V, D) ->
+    pooled (B, D)."""
+    b, l = indices.shape
+    v, d = table.shape
+    return pl.pallas_call(
+        _bag_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=True,
+    )(indices, table)

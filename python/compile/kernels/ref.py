@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+Each function mirrors one kernel's contract exactly; pytest/hypothesis
+sweeps shapes and dtypes asserting allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """(BH, T, d) attention, fp32 math."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", qf, kf) / (d ** 0.5)
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bts,bsd->btd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, mask):
+    """(BH, 1, d) single-step attention with a (BH, 1, T) validity mask."""
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,btd->bqt", qf, kf) / (d ** 0.5)
+    s = jnp.where(mask > 0.5, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqt,btd->bqd", p, vf).astype(q.dtype)
+
+
+def similarity_ref(queries, corpus):
+    """(B, d) x (N, d) -> (B, N) fp32 dot scores."""
+    return jnp.dot(
+        queries.astype(jnp.float32), corpus.astype(jnp.float32).T
+    ).astype(queries.dtype)
+
+
+def embedding_bag_ref(indices, table):
+    """(B, L) float indices, (V, D) table -> (B, D) sum-pooled."""
+    idx = indices.astype(jnp.int32)
+    rows = jnp.take(table, idx, axis=0)  # (B, L, D)
+    return rows.astype(jnp.float32).sum(axis=1).astype(table.dtype)
+
+
+def jacobi_step_ref(u):
+    """5-point Jacobi with Dirichlet boundary."""
+    uf = u.astype(jnp.float32)
+    out = 0.25 * (
+        jnp.roll(uf, -1, 0) + jnp.roll(uf, 1, 0) + jnp.roll(uf, -1, 1) + jnp.roll(uf, 1, 1)
+    )
+    interior = jnp.zeros(u.shape, dtype=bool).at[1:-1, 1:-1].set(True)
+    return jnp.where(interior, out, uf).astype(u.dtype)

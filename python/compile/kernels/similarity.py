@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: tiled query-corpus similarity scoring (RAG retrieval).
+
+Scores = Q @ C^T, gridded over corpus tiles so each program instance
+streams one (tile, d) corpus block through VMEM against the resident query
+block — the BlockSpec expresses the HBM->VMEM schedule the paper's
+prototype expressed with threadblocks. Top-k selection happens in the L2
+model (jax.lax.top_k); the kernel is the bandwidth/MXU hot-spot.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # (B, d)
+    c = c_ref[...].astype(jnp.float32)  # (tile, d)
+    o_ref[...] = jnp.dot(q, c.T, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def similarity(queries, corpus, *, tile: int = 128):
+    """queries: (B, d), corpus: (N, d) -> scores (B, N). N % tile == 0."""
+    b, d = queries.shape
+    n, _ = corpus.shape
+    assert n % tile == 0, f"corpus rows {n} not divisible by tile {tile}"
+    return pl.pallas_call(
+        _sim_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), queries.dtype),
+        interpret=True,
+    )(queries, corpus)

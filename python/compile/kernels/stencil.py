@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: 5-point Jacobi stencil step (CFD/PIC surrogate).
+
+One program instance owns the whole (H, W) field tile in VMEM (the
+evaluation fields are small); boundary cells are held fixed (Dirichlet),
+matching the halo semantics of the MPI CFD workload the L3 simulator
+models.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(u_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)
+    up = jnp.roll(u, -1, axis=0)
+    down = jnp.roll(u, 1, axis=0)
+    left = jnp.roll(u, -1, axis=1)
+    right = jnp.roll(u, 1, axis=1)
+    out = 0.25 * (up + down + left + right)
+    # Dirichlet boundary: keep edges
+    h, w = u.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    interior = (row > 0) & (row < h - 1) & (col > 0) & (col < w - 1)
+    o_ref[...] = jnp.where(interior, out, u).astype(o_ref.dtype)
+
+
+def jacobi_step(u):
+    """One Jacobi relaxation step on a (H, W) field."""
+    h, w = u.shape
+    return pl.pallas_call(
+        _jacobi_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((h, w), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((h, w), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), u.dtype),
+        interpret=True,
+    )(u)

@@ -1,0 +1,1 @@
+"""L2 JAX models built on the L1 Pallas kernels."""

@@ -1,0 +1,21 @@
+"""L2: CFD surrogate — N Jacobi relaxation steps on the L1 stencil kernel.
+
+Entry point ``relax(u)``: (H, W) field -> (relaxed field,). The step count
+is baked at lowering time (STEPS).
+"""
+
+import jax
+
+from ..kernels.stencil import jacobi_step
+
+H = 64
+W = 64
+STEPS = 8
+
+
+def relax(u):
+    """Run STEPS Jacobi iterations."""
+    def body(_, x):
+        return jacobi_step(x)
+
+    return (jax.lax.fori_loop(0, STEPS, body, u),)

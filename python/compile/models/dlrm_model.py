@@ -1,0 +1,70 @@
+"""L2: DLRM forward pass on the L1 embedding-bag kernel.
+
+Entry point ``dlrm_forward(params, dense, indices)``:
+  dense   — (B, N_DENSE) continuous features
+  indices — (B, N_TABLES * BAG) float32 bag indices (cast to int inside)
+Returns (scores,) with scores (B, 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.embedding import embedding_bag
+
+N_DENSE = 13
+N_TABLES = 4
+BAG = 8
+ROWS = 512  # rows per embedding table
+DIM = 32  # embedding dim
+BOT = [N_DENSE, 64, DIM]
+TOP = [DIM + N_TABLES * DIM + DIM * 0, 64, 1]
+
+
+def param_spec():
+    """Ordered (name, shape) parameter list."""
+    spec = []
+    for i in range(len(BOT) - 1):
+        spec.append((f"bot{i}.w", (BOT[i], BOT[i + 1])))
+        spec.append((f"bot{i}.b", (BOT[i + 1],)))
+    for t in range(N_TABLES):
+        spec.append((f"emb{t}", (ROWS, DIM)))
+    top_in = DIM + N_TABLES * DIM
+    dims = [top_in, 64, 1]
+    for i in range(len(dims) - 1):
+        spec.append((f"top{i}.w", (dims[i], dims[i + 1])))
+        spec.append((f"top{i}.b", (dims[i + 1],)))
+    return spec
+
+
+def init_params(seed: int = 0):
+    """Deterministic init."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _, shape in param_spec():
+        key, sub = jax.random.split(key)
+        scale = 1.0 / (max(shape[0], 1) ** 0.5)
+        params.append(jax.random.normal(sub, shape, dtype=jnp.float32) * scale)
+    return params
+
+
+def _unpack(params):
+    return {name: p for (name, _), p in zip(param_spec(), params)}
+
+
+def dlrm_forward(params, dense, indices):
+    """DLRM forward. dense: (B, N_DENSE); indices: (B, N_TABLES*BAG) f32."""
+    p = _unpack(params)
+    x = dense
+    for i in range(len(BOT) - 1):
+        x = jax.nn.relu(x @ p[f"bot{i}.w"] + p[f"bot{i}.b"])
+    pooled = [x]
+    for t in range(N_TABLES):
+        bag = indices[:, t * BAG : (t + 1) * BAG]
+        pooled.append(embedding_bag(bag, p[f"emb{t}"]))  # L1 kernel
+    z = jnp.concatenate(pooled, axis=-1)
+    for i in range(2):
+        w = p[f"top{i}.w"]
+        z = z @ w + p[f"top{i}.b"]
+        if i == 0:
+            z = jax.nn.relu(z)
+    return (jax.nn.sigmoid(z),)

@@ -1,0 +1,61 @@
+"""L2: RAG retrieval — query encoder + similarity scoring + top-k.
+
+Entry point ``retrieve(params, query, corpus)``:
+  query  — (B, DIM) raw query embeddings
+  corpus — (N, DIM) corpus embeddings (N % TILE == 0)
+Returns (scores_topk, indices_topk_f32): both (B, K).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.similarity import similarity
+
+DIM = 256
+K = 8
+TILE = 128
+
+
+def param_spec():
+    """Encoder MLP: two layers DIM->DIM."""
+    return [("enc0", (DIM, DIM)), ("enc1", (DIM, DIM))]
+
+
+def init_params(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _, shape in param_spec():
+        key, sub = jax.random.split(key)
+        out.append(jax.random.normal(sub, shape, dtype=jnp.float32) / (shape[0] ** 0.5))
+    return out
+
+
+def _topk(scores, k):
+    """Iterative argmax top-k.
+
+    jax.lax.top_k lowers to a `topk(..., largest=true)` HLO instruction that
+    the xla_extension 0.5.1 text parser rejects; K successive argmax+mask
+    rounds lower to plain reduce/select ops that round-trip cleanly.
+    """
+    b, _ = scores.shape
+    s = scores
+    vals, idxs = [], []
+    rows = jnp.arange(b)
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        v = s[rows, i]
+        vals.append(v)
+        idxs.append(i)
+        s = s.at[rows, i].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def retrieve(params, query, corpus):
+    """Encode the query, score against the corpus, take top-k."""
+    enc0, enc1 = params
+    q = jax.nn.tanh(query @ enc0) @ enc1
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    c = corpus / (jnp.linalg.norm(corpus, axis=-1, keepdims=True) + 1e-6)
+    scores = similarity(q, c, tile=TILE)  # L1 kernel
+    top, idx = _topk(scores, K)
+    return top, idx.astype(jnp.float32)

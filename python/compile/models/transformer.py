@@ -1,0 +1,160 @@
+"""L2: small decoder-only transformer (the serving model behind the
+end-to-end example) built on the L1 Pallas attention kernels.
+
+Two AOT entry points:
+
+* ``prefill(params, tokens)``        -> (logits, k_cache, v_cache)
+* ``decode_step(params, token, k, v, pos)`` -> (logits, k, v)
+
+Token/position inputs arrive as float32 (the Rust runtime feeds f32
+literals) and are cast to int32 internally. Weights use a deterministic
+seeded init so the Rust side and the tests agree on numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.attention import attention, decode_attention
+
+# Model hyperparameters: sized so CPU-PJRT artifact compilation and
+# execution stay interactive (weights are baked into the HLO text as
+# constants). The L3 simulator's ModelSpec::tiny_100m() covers the
+# 100M-scale *cost model*; the artifact exercises the same compute graph.
+LAYERS = 2
+HIDDEN = 128
+HEADS = 4
+HEAD_DIM = HIDDEN // HEADS
+FFN = 256
+VOCAB = 512
+# prompt length the prefill artifact is lowered at
+PREFILL_T = 32
+# KV-cache capacity of the decode artifact
+MAX_T = 64
+# batch the artifacts are lowered at
+BATCH = 4
+
+
+def param_spec():
+    """Ordered (name, shape) list — one f32 tensor each."""
+    spec = [("embed", (VOCAB, HIDDEN))]
+    for i in range(LAYERS):
+        spec += [
+            (f"l{i}.wq", (HIDDEN, HIDDEN)),
+            (f"l{i}.wk", (HIDDEN, HIDDEN)),
+            (f"l{i}.wv", (HIDDEN, HIDDEN)),
+            (f"l{i}.wo", (HIDDEN, HIDDEN)),
+            (f"l{i}.w1", (HIDDEN, FFN)),
+            (f"l{i}.w2", (FFN, HIDDEN)),
+        ]
+    spec.append(("unembed", (HIDDEN, VOCAB)))
+    return spec
+
+
+def init_params(seed: int = 0):
+    """Deterministic small-scale init as a flat list of f32 arrays."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _, shape in param_spec():
+        key, sub = jax.random.split(key)
+        scale = 1.0 / (shape[0] ** 0.5)
+        params.append(jax.random.normal(sub, shape, dtype=jnp.float32) * scale)
+    return params
+
+
+def _unpack(params):
+    spec = param_spec()
+    return {name: p for (name, _), p in zip(spec, params)}
+
+
+def _rmsnorm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _rope(x, pos):
+    """Rotary position embedding. x: (..., T, HEAD_DIM), pos: (T,) int32."""
+    half = HEAD_DIM // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x):
+    """(B, T, H) -> (B*HEADS, T, HEAD_DIM)."""
+    b, t, _ = x.shape
+    return x.reshape(b, t, HEADS, HEAD_DIM).transpose(0, 2, 1, 3).reshape(b * HEADS, t, HEAD_DIM)
+
+
+def _merge_heads(x, b):
+    """(B*HEADS, T, HEAD_DIM) -> (B, T, H)."""
+    bh, t, _ = x.shape
+    return x.reshape(b, HEADS, t, HEAD_DIM).transpose(0, 2, 1, 3).reshape(b, t, HIDDEN)
+
+
+def prefill(params, tokens):
+    """Prefill a prompt. tokens: (B, T) float32 -> (logits, k_cache, v_cache).
+
+    Caches are (LAYERS, B*HEADS, MAX_T, HEAD_DIM), zero-padded past T so
+    they feed ``decode_step`` directly.
+    """
+    p = _unpack(params)
+    tok = tokens.astype(jnp.int32)
+    b, t = tok.shape
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x = jnp.take(p["embed"], tok, axis=0)  # (B, T, H)
+    ks, vs = [], []
+    for i in range(LAYERS):
+        h = _rmsnorm(x)
+        q = _split_heads(h @ p[f"l{i}.wq"])
+        k = _split_heads(h @ p[f"l{i}.wk"])
+        v = _split_heads(h @ p[f"l{i}.wv"])
+        q = _rope(q, pos)
+        k = _rope(k, pos)
+        o = attention(q, k, v, causal=True)  # L1 kernel
+        x = x + _merge_heads(o, b) @ p[f"l{i}.wo"]
+        h2 = _rmsnorm(x)
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+        pad = ((0, 0), (0, MAX_T - t), (0, 0))
+        ks.append(jnp.pad(k, pad))
+        vs.append(jnp.pad(v, pad))
+    logits = _rmsnorm(x) @ p["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(params, token, k_cache, v_cache, pos):
+    """One decode step.
+
+    token: (B, 1) f32; caches: (LAYERS, B*HEADS, T, HEAD_DIM) with the
+    first `pos` positions valid; pos: (1,) f32 current length.
+    Returns (logits, new_k_cache, new_v_cache); caches updated at `pos`.
+    """
+    p = _unpack(params)
+    tok = token.astype(jnp.int32)
+    b = tok.shape[0]
+    t_cache = k_cache.shape[2]
+    pos_i = pos.astype(jnp.int32)[0]
+    x = jnp.take(p["embed"], tok, axis=0)  # (B, 1, H)
+    new_ks, new_vs = [], []
+    for i in range(LAYERS):
+        h = _rmsnorm(x)
+        q = _split_heads(h @ p[f"l{i}.wq"])  # (BH, 1, hd)
+        k_new = _split_heads(h @ p[f"l{i}.wk"])
+        v_new = _split_heads(h @ p[f"l{i}.wv"])
+        q = _rope(q, pos_i[None])
+        k_new = _rope(k_new, pos_i[None])
+        k = jax.lax.dynamic_update_slice(k_cache[i], k_new, (0, pos_i, 0))
+        v = jax.lax.dynamic_update_slice(v_cache[i], v_new, (0, pos_i, 0))
+        # valid cache rows: positions 0..=pos
+        valid = (jnp.arange(t_cache) <= pos_i).astype(jnp.float32)  # (T,)
+        mask = jnp.broadcast_to(valid[None, None, :], (b * HEADS, 1, t_cache))
+        o = decode_attention(q, k, v, mask)
+        x = x + _merge_heads(o, b) @ p[f"l{i}.wo"]
+        h2 = _rmsnorm(x)
+        x = x + jax.nn.gelu(h2 @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+        new_ks.append(k)
+        new_vs.append(v)
+    logits = _rmsnorm(x) @ p["unembed"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)

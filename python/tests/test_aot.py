@@ -1,0 +1,50 @@
+"""AOT path tests: HLO text round-trip integrity and manifest contract."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.models import transformer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_keeps_large_constants():
+    w = jnp.arange(4096, dtype=jnp.float32).reshape(64, 64)
+    low = jax.jit(lambda x: (x @ w,)).lower(jax.ShapeDtypeStruct((4, 64), jnp.float32))
+    text = aot.to_hlo_text(low)
+    assert "{...}" not in text, "large constants must not be elided"
+    assert "4095" in text  # last element of the weight is printed
+
+
+def test_entrypoints_cover_all_models():
+    names = [e[0] for e in aot.entrypoints()]
+    assert names == [
+        "tinylm_prefill",
+        "tinylm_decode",
+        "rag_retrieve",
+        "dlrm_forward",
+        "cfd_relax",
+    ]
+
+
+def test_manifest_shapes_match_entrypoints(tmp_path):
+    # lower only the cheapest entry to keep the test fast, then check the
+    # manifest record for it
+    name, fn, in_shapes, out_shapes = aot.entrypoints()[-1]  # cfd_relax
+    specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in in_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    rec = {"name": name, "file": f"{name}.hlo.txt", "input_shapes": in_shapes, "output_shapes": out_shapes}
+    blob = json.dumps({"artifacts": [rec]})
+    parsed = json.loads(blob)
+    assert parsed["artifacts"][0]["input_shapes"] == [[64, 64]]
+
+
+def test_prefill_entry_bakes_weights():
+    """The prefill artifact takes ONLY tokens — weights are constants."""
+    _, fn, in_shapes, _ = aot.entrypoints()[0]
+    assert in_shapes == [[transformer.BATCH, transformer.PREFILL_T]]

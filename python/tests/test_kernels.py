@@ -1,0 +1,162 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel (interpret=True) is checked against its pure-jnp
+oracle, with hypothesis sweeping shapes and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, decode_attention, embedding_bag, jacobi_step, similarity
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    t=st.sampled_from([4, 16, 33]),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**16),
+    causal=st.booleans(),
+)
+def test_attention_matches_ref(bh, t, d, seed, causal):
+    q = rand(seed, (bh, t, d))
+    k = rand(seed + 1, (bh, t, d))
+    v = rand(seed + 2, (bh, t, d))
+    out = attention(q, k, v, causal=causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causal_ignores_future():
+    # changing a future token must not change earlier outputs
+    q = rand(0, (2, 8, 16))
+    k = rand(1, (2, 8, 16))
+    v = rand(2, (2, 8, 16))
+    out1 = attention(q, k, v, causal=True)
+    k2 = k.at[:, -1, :].set(99.0)
+    v2 = v.at[:, -1, :].set(-99.0)
+    out2 = attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4]),
+    t=st.sampled_from([8, 64]),
+    d=st.sampled_from([16, 64]),
+    valid=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(bh, t, d, valid, seed):
+    valid = min(valid, t)
+    q = rand(seed, (bh, 1, d))
+    k = rand(seed + 1, (bh, t, d))
+    v = rand(seed + 2, (bh, t, d))
+    mask = jnp.broadcast_to(
+        (jnp.arange(t) < valid).astype(jnp.float32)[None, None, :], (bh, 1, t)
+    )
+    out = decode_attention(q, k, v, mask)
+    expect = ref.decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_mask_excludes_rows():
+    # with only the first row valid, output == v[0]
+    q = rand(3, (1, 1, 8))
+    k = rand(4, (1, 16, 8))
+    v = rand(5, (1, 16, 8))
+    mask = jnp.zeros((1, 1, 16)).at[0, 0, 0].set(1.0)
+    out = decode_attention(q, k, v, mask)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-6)
+
+
+# --------------------------------------------------------------- similarity
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 8]),
+    n_tiles=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_similarity_matches_ref(b, n_tiles, d, seed):
+    tile = 64
+    q = rand(seed, (b, d))
+    c = rand(seed + 1, (n_tiles * tile, d))
+    out = similarity(q, c, tile=tile)
+    expect = ref.similarity_ref(q, c)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_similarity_rejects_ragged_corpus():
+    with pytest.raises(AssertionError):
+        similarity(rand(0, (2, 16)), rand(1, (100, 16)), tile=64)
+
+
+# ---------------------------------------------------------------- embedding
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    bag=st.sampled_from([1, 4, 9]),
+    rows=st.sampled_from([8, 64]),
+    dim=st.sampled_from([4, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_embedding_bag_matches_ref(b, bag, rows, dim, seed):
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.randint(key, (b, bag), 0, rows).astype(jnp.float32)
+    table = rand(seed + 1, (rows, dim))
+    out = embedding_bag(idx, table)
+    expect = ref.embedding_bag_ref(idx, table)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_repeated_index_counts_twice():
+    table = jnp.eye(4, dtype=jnp.float32)
+    idx = jnp.array([[1.0, 1.0]])
+    out = embedding_bag(idx, table)
+    np.testing.assert_allclose(out[0], jnp.array([0.0, 2.0, 0.0, 0.0]))
+
+
+# ------------------------------------------------------------------ stencil
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.sampled_from([4, 16, 33]),
+    w=st.sampled_from([4, 16, 40]),
+    seed=st.integers(0, 2**16),
+)
+def test_jacobi_matches_ref(h, w, seed):
+    u = rand(seed, (h, w))
+    out = jacobi_step(u)
+    expect = ref.jacobi_step_ref(u)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_jacobi_preserves_boundary():
+    u = rand(7, (8, 8))
+    out = jacobi_step(u)
+    np.testing.assert_allclose(out[0, :], u[0, :])
+    np.testing.assert_allclose(out[-1, :], u[-1, :])
+    np.testing.assert_allclose(out[:, 0], u[:, 0])
+    np.testing.assert_allclose(out[:, -1], u[:, -1])
+
+
+def test_jacobi_converges_to_harmonic():
+    # repeated relaxation of an interior spike smooths monotonically
+    u = jnp.zeros((16, 16)).at[8, 8].set(1.0)
+    prev_max = 1.0
+    for _ in range(20):
+        u = jacobi_step(u)
+        m = float(jnp.max(jnp.abs(u[1:-1, 1:-1])))
+        assert m <= prev_max + 1e-6
+        prev_max = m

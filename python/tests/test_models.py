@@ -1,0 +1,107 @@
+"""L2 model tests: shapes, numerics, and prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.models import cfd_model, dlrm_model, rag_model, transformer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_prefill_shapes():
+    params = transformer.init_params(0)
+    B, T = transformer.BATCH, transformer.PREFILL_T
+    tokens = jnp.zeros((B, T), dtype=jnp.float32)
+    logits, kc, vc = transformer.prefill(params, tokens)
+    BH = B * transformer.HEADS
+    assert logits.shape == (B, T, transformer.VOCAB)
+    assert kc.shape == (transformer.LAYERS, BH, transformer.MAX_T, transformer.HEAD_DIM)
+    assert vc.shape == kc.shape
+    # cache padded past T with zeros
+    assert float(jnp.abs(kc[:, :, T:, :]).max()) == 0.0
+
+
+def test_decode_step_consistent_with_prefill():
+    """Decoding token T given prefill(0..T-1) must equal prefill(0..T)'s
+    last-position logits."""
+    params = transformer.init_params(0)
+    B = transformer.BATCH
+    T = 8
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (B, T + 1), 0, transformer.VOCAB).astype(jnp.float32)
+    # full prefill over T+1 tokens
+    logits_full, _, _ = transformer.prefill(params, tokens)
+    # prefill T, then decode one step
+    logits_pre, kc, vc = transformer.prefill(params, tokens[:, :T])
+    pos = jnp.array([T], dtype=jnp.float32)
+    logits_step, _, _ = transformer.decode_step(params, tokens[:, T:T + 1], kc, vc, pos)
+    np.testing.assert_allclose(
+        np.asarray(logits_step[:, 0]), np.asarray(logits_full[:, T]), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_updates_cache_at_pos():
+    params = transformer.init_params(0)
+    B = transformer.BATCH
+    tokens = jnp.ones((B, 4), dtype=jnp.float32)
+    _, kc, vc = transformer.prefill(params, tokens)
+    pos = jnp.array([4.0], dtype=jnp.float32)
+    _, kc2, _ = transformer.decode_step(params, jnp.ones((B, 1)), kc, vc, pos)
+    # row 4 was written, rows beyond unchanged (still zero)
+    assert float(jnp.abs(kc2[:, :, 4, :]).max()) > 0.0
+    assert float(jnp.abs(kc2[:, :, 5:, :]).max()) == 0.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_dlrm_outputs_probabilities(seed):
+    params = dlrm_model.init_params(0)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    dense = jax.random.normal(k1, (32, dlrm_model.N_DENSE))
+    idx = jax.random.randint(
+        k2, (32, dlrm_model.N_TABLES * dlrm_model.BAG), 0, dlrm_model.ROWS
+    ).astype(jnp.float32)
+    (scores,) = dlrm_model.dlrm_forward(params, dense, idx)
+    assert scores.shape == (32, 1)
+    assert bool(jnp.all((scores >= 0.0) & (scores <= 1.0)))
+
+
+def test_rag_retrieve_finds_planted_neighbor():
+    params = rag_model.init_params(0)
+    key = jax.random.PRNGKey(0)
+    corpus = jax.random.normal(key, (1024, rag_model.DIM))
+    # plant: query encodes to something; ensure top-1 score >= all others by
+    # querying with a corpus row's *pre-image* is hard; instead just check
+    # the contract: scores sorted desc, indices in range.
+    q = jax.random.normal(jax.random.PRNGKey(1), (4, rag_model.DIM))
+    top, idx = rag_model.retrieve(params, q, corpus)
+    assert top.shape == (4, rag_model.K)
+    assert bool(jnp.all(top[:, :-1] >= top[:, 1:]))  # sorted
+    assert bool(jnp.all((idx >= 0) & (idx < 1024)))
+
+
+def test_rag_self_retrieval_top1():
+    """A query equal to the encoder output's pre-image: use an encoded
+    corpus so that query == corpus row in *encoded* space is approximated
+    by feeding the same raw vector; its encoding matches exactly, so the
+    planted row must win."""
+    params = rag_model.init_params(0)
+    key = jax.random.PRNGKey(2)
+    raw = jax.random.normal(key, (1024, rag_model.DIM))
+    enc0, enc1 = params
+    encoded = jax.nn.tanh(raw @ enc0) @ enc1
+    top, idx = rag_model.retrieve(params, raw[7:11], encoded)
+    # encoded queries are scored against their own encodings -> rows 7..10
+    assert list(np.asarray(idx[:, 0]).astype(int)) == [7, 8, 9, 10]
+
+
+def test_cfd_relax_smooths():
+    u = jnp.zeros((cfd_model.H, cfd_model.W)).at[30, 30].set(10.0)
+    (out,) = cfd_model.relax(u)
+    assert out.shape == (cfd_model.H, cfd_model.W)
+    assert float(jnp.max(out[1:-1, 1:-1])) < 10.0
+    # boundary fixed
+    np.testing.assert_allclose(np.asarray(out[0]), np.zeros(cfd_model.W))

@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's fig29 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("fig29", commtax::experiments::fig29);
+    table.print();
+}

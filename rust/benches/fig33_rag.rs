@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's fig33 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("fig33", commtax::experiments::fig33);
+    table.print();
+}

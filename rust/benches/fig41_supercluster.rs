@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's fig41 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("fig41", commtax::experiments::fig41);
+    table.print();
+}

@@ -1,0 +1,82 @@
+//! §Perf hot-path microbenchmarks: the L3 paths that must not bottleneck
+//! the system (DESIGN.md §Perf targets). Regenerates the numbers recorded
+//! in EXPERIMENTS.md §Perf.
+
+use commtax::benchkit::{bench, fmt_ns};
+use commtax::coordinator::batcher::DynamicBatcher;
+use commtax::coordinator::router::{Router, RoutingStrategy};
+use commtax::fabric::link::LinkSpec;
+use commtax::fabric::routing::RoutingPolicy;
+use commtax::fabric::topology::Topology;
+use commtax::fabric::Fabric;
+use commtax::sim::{Engine, Rng};
+
+fn main() {
+    // 1. event-engine throughput (target: >= 1M events/s)
+    let r = bench("engine: 100k chained events", 2, 10, || {
+        let mut e = Engine::new();
+        fn chain(e: &mut Engine, left: u32) {
+            if left > 0 {
+                e.schedule_in(1.0, move |e2| chain(e2, left - 1));
+            }
+        }
+        chain(&mut e, 100_000);
+        e.run();
+        assert_eq!(e.processed(), 100_000);
+    });
+    let evps = 100_000.0 / (r.median() / 1e9);
+    println!("  -> {:.2} M events/s", evps / 1e6);
+
+    // 2. fabric transfer hot path (route-cached NVL72 rack)
+    let topo = Topology::single_clos(72, 9);
+    let eps = topo.endpoints().to_vec();
+    let mut fabric = Fabric::new(topo, LinkSpec::nvlink5_bundle(), RoutingPolicy::Hbr);
+    let mut rng = Rng::new(1);
+    let mut now = 0.0;
+    let r = bench("fabric: 100k transfers (HBR, cached)", 2, 10, || {
+        for _ in 0..100_000 {
+            let a = eps[rng.index(72)];
+            let b = eps[rng.index(72)];
+            if a != b {
+                now = fabric.transfer(a, b, 4096, now).unwrap().arrival;
+            }
+        }
+    });
+    println!("  -> {:.2} M transfers/s", 100_000.0 / (r.median() / 1e9) / 1e6);
+
+    // 2b. PBR (congestion-aware) path for comparison
+    let topo2 = Topology::single_clos(72, 9);
+    let eps2 = topo2.endpoints().to_vec();
+    let mut fabric2 = Fabric::new(topo2, LinkSpec::nvlink5_bundle(), RoutingPolicy::Pbr);
+    let mut now2 = 0.0;
+    let r = bench("fabric: 100k transfers (PBR)", 2, 10, || {
+        for _ in 0..100_000 {
+            let a = eps2[rng.index(72)];
+            let b = eps2[rng.index(72)];
+            if a != b {
+                now2 = fabric2.transfer(a, b, 4096, now2).unwrap().arrival;
+            }
+        }
+    });
+    println!("  -> {:.2} M transfers/s", 100_000.0 / (r.median() / 1e9) / 1e6);
+
+    // 3. batcher + router serving front-end (target: >> 1M req/s)
+    let r = bench("coordinator: 100k route+batch+complete", 2, 10, || {
+        let mut batcher = DynamicBatcher::new(8, 1000.0);
+        let mut router = Router::new(4, RoutingStrategy::LeastLoaded);
+        let mut t = 0.0;
+        for i in 0..100_000u64 {
+            t += 10.0;
+            batcher.push(i, t);
+            if let Some(b) = batcher.poll(t) {
+                let c = router.route(b.ids[0]);
+                router.complete(c);
+            }
+        }
+    });
+    println!("  -> {:.2} M requests/s", 100_000.0 / (r.median() / 1e9) / 1e6);
+
+    // 4. full experiment-suite regeneration cost
+    let (_t, ns) = commtax::benchkit::time_once("all 15 experiment tables", commtax::experiments::all_tables);
+    println!("  -> full paper regeneration in {}", fmt_ns(ns));
+}

@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's sec34 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("sec34", commtax::experiments::sec34);
+    table.print();
+}

@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's table1 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("table1", commtax::experiments::table1);
+    table.print();
+}

@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's table2 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("table2", commtax::experiments::table2);
+    table.print();
+}

@@ -1,0 +1,7 @@
+//! Bench target regenerating the paper's table3 result (see DESIGN.md
+//! per-experiment index). Prints the table and times its computation.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("table3", commtax::experiments::table3);
+    table.print();
+}

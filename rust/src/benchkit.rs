@@ -1,0 +1,123 @@
+//! Minimal benchmark harness (criterion is unavailable in this offline
+//! build — see DESIGN.md §Substitutions).
+//!
+//! Provides warmup + timed iterations with median/p95 reporting and a
+//! stable text output format shared by all `rust/benches/*` targets.
+
+use crate::sim::Summary;
+use std::time::Instant;
+
+/// One measured benchmark.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in nanoseconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Median per-iteration time (ns).
+    pub fn median(&self) -> f64 {
+        self.summary.percentile(50.0)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut summary = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        summary.add(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult { name: name.to_string(), iters, summary };
+    println!(
+        "bench {:<44} iters={:<5} median={:>12} p95={:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.median()),
+        fmt_ns(r.summary.percentile(95.0)),
+    );
+    r
+}
+
+/// Time a single invocation (for expensive end-to-end cases).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let ns = t0.elapsed().as_nanos() as f64;
+    println!("once  {:<44} time={:>12}", name, fmt_ns(ns));
+    (out, ns)
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1.0e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1.0e6)
+    } else {
+        format!("{:.3} s", ns / 1.0e9)
+    }
+}
+
+/// Human-readable bytes.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Print a table header for experiment reports.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join(" | "));
+    println!("{}", "-".repeat(cols.iter().map(|c| c.len() + 3).sum::<usize>().max(16)));
+}
+
+/// Print one table row.
+pub fn table_row(cells: &[String]) {
+    println!("{}", cells.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_times() {
+        let r = bench("noopish", 1, 8, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 8);
+        assert!(r.median() >= 0.0);
+        assert_eq!(r.summary.count(), 8);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 us");
+        assert_eq!(fmt_ns(3.2e6), "3.20 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(3 << 30), "3.00 GiB");
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ns) = time_once("x", || 42);
+        assert_eq!(v, 42);
+        assert!(ns >= 0.0);
+    }
+}

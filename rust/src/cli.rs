@@ -1,0 +1,305 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline — see
+//! DESIGN.md §Substitutions).
+//!
+//! ```text
+//! commtax report                      # all paper tables/figures
+//! commtax report --exp fig33         # one experiment
+//! commtax simulate --workload rag --platform both
+//! commtax topo --shape clos --n 72
+//! commtax serve --requests 256
+//! commtax list                       # experiment ids
+//! ```
+
+use crate::config::spec::{PlatformKind, WorkloadKind};
+use crate::experiments;
+use crate::workload::Platform;
+use std::collections::HashMap;
+
+/// Parsed argv: positional subcommand + `--key value` flags.
+pub struct Args {
+    pub cmd: String,
+    pub flags: HashMap<String, String>,
+}
+
+/// Parse argv (everything after the binary name).
+pub fn parse_args(argv: &[String]) -> Args {
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < argv.len() {
+        if let Some(key) = argv[i].strip_prefix("--") {
+            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    Args { cmd, flags }
+}
+
+/// Experiment ids accepted by `report --exp`.
+pub const EXPERIMENTS: [&str; 17] = [
+    "fig21", "fig22", "fig29", "fig31", "fig33", "fig34", "fig35", "fig36", "fig37", "fig41", "table1", "table2",
+    "table3", "sec34", "sec63", "ablations", "pd-disagg",
+];
+
+fn experiment_table(id: &str) -> Option<experiments::Table> {
+    Some(match id {
+        "fig21" => experiments::fig21(),
+        "fig22" => experiments::fig22(),
+        "fig29" => experiments::fig29(),
+        "fig31" => experiments::fig31(),
+        "fig33" => experiments::fig33(),
+        "fig34" => experiments::fig34(),
+        "fig35" => experiments::fig35(),
+        "fig36" => experiments::fig36(),
+        "fig37" => experiments::fig37(),
+        "fig41" => experiments::fig41(),
+        "table1" => experiments::table1(),
+        "table2" => experiments::table2(),
+        "table3" => experiments::table3(),
+        "sec34" => experiments::sec34(),
+        "sec63" => experiments::sec63(),
+        "ablations" => experiments::ablations(),
+        "pd-disagg" => experiments::pd_disagg(),
+        _ => return None,
+    })
+}
+
+fn run_simulate(flags: &HashMap<String, String>) -> i32 {
+    let workload = flags.get("workload").map(String::as_str).unwrap_or("rag");
+    let platform = flags.get("platform").map(String::as_str).unwrap_or("both");
+    let Ok(w) = WorkloadKind::parse(workload) else {
+        eprintln!("unknown workload '{workload}'");
+        return 2;
+    };
+    let Ok(p) = PlatformKind::parse(platform) else {
+        eprintln!("unknown platform '{platform}'");
+        return 2;
+    };
+    let platforms: Vec<Platform> = match p {
+        PlatformKind::ComposableCxl => vec![Platform::composable_cxl()],
+        PlatformKind::ConventionalRdma => vec![Platform::conventional_rdma()],
+        PlatformKind::Both => vec![Platform::composable_cxl(), Platform::conventional_rdma()],
+    };
+    for plat in &platforms {
+        let total_ns = match w {
+            WorkloadKind::Rag => {
+                crate::workload::rag::run_rag(&crate::workload::rag::RagConfig::recipe_demo(), plat).total()
+            }
+            WorkloadKind::GraphRag => {
+                crate::workload::rag::run_rag(&crate::workload::rag::RagConfig::graph_rag(), plat).total()
+            }
+            WorkloadKind::Dlrm => {
+                crate::workload::dlrm::run_dlrm(&crate::workload::dlrm::DlrmConfig::production(), plat).total()
+            }
+            WorkloadKind::Warpx => {
+                let cfg = crate::workload::mpi::MpiConfig::warpx();
+                let coherent = plat.implicit_sync;
+                let path = if coherent { cfg.cxl_path() } else { cfg.baseline_path(false) };
+                crate::workload::mpi::run_mpi(&cfg, plat, &path, coherent).total()
+            }
+            WorkloadKind::Cfd => {
+                let cfg = crate::workload::mpi::MpiConfig::cfd();
+                let coherent = plat.implicit_sync;
+                let path = if coherent { cfg.cxl_path() } else { cfg.baseline_path(true) };
+                crate::workload::mpi::run_mpi(&cfg, plat, &path, coherent).total()
+            }
+            WorkloadKind::Training => {
+                use crate::datacenter::hierarchy::{composable_path, conventional_path, HierarchyLevel};
+                let plan =
+                    crate::workload::training::ParallelismPlan { dp: 64, tp: 8, pp: 8, ep: 1, microbatches: 16 };
+                let cfg = crate::workload::training::TrainingConfig {
+                    model: crate::workload::ModelSpec::gpt3_175b(),
+                    plan,
+                    global_batch_tokens: 4 * 1024 * 1024,
+                    compute_efficiency: 0.55,
+                };
+                let dp = if plat.implicit_sync {
+                    composable_path(HierarchyLevel::Row)
+                } else {
+                    conventional_path(HierarchyLevel::Row)
+                };
+                let paths = crate::workload::training::TrainingPaths {
+                    tp: conventional_path(HierarchyLevel::Rack),
+                    pp: conventional_path(HierarchyLevel::Rack),
+                    dp,
+                    ep: conventional_path(HierarchyLevel::Rack),
+                };
+                crate::workload::training::simulate_step(&cfg, &plat.accel, &paths).total()
+            }
+            WorkloadKind::Inference => {
+                let r = crate::serve::simulate_serving(&crate::serve::ServeConfig::default(), plat);
+                println!(
+                    "  {}: p50={} p99={} throughput={:.1} req/s",
+                    plat.name,
+                    crate::benchkit::fmt_ns(r.latency.percentile(50.0)),
+                    crate::benchkit::fmt_ns(r.latency.percentile(99.0)),
+                    r.throughput_rps
+                );
+                continue;
+            }
+        };
+        println!("  {} {}: {}", w.name(), plat.name, crate::benchkit::fmt_ns(total_ns));
+    }
+    0
+}
+
+fn run_topo(flags: &HashMap<String, String>) -> i32 {
+    use crate::fabric::topology::Topology;
+    let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(72);
+    let shape = flags.get("shape").map(String::as_str).unwrap_or("clos");
+    let topo = match shape {
+        "clos" | "single-clos" => Topology::single_clos(n, (n / 8).max(1)),
+        "multi-clos" => Topology::multi_clos(n, 32, 4),
+        "torus" => {
+            let side = (n as f64).cbrt().round().max(1.0) as usize;
+            Topology::torus3d(side, side, side)
+        }
+        "dragonfly" => {
+            let g = (n as f64).sqrt().round().max(1.0) as usize;
+            Topology::dragonfly(g, n.div_ceil(g))
+        }
+        "fully-connected" => Topology::fully_connected(n),
+        other => {
+            eprintln!("unknown shape '{other}'");
+            return 2;
+        }
+    };
+    println!(
+        "shape={shape} endpoints={} switches={} directed-edges={} mean-hops={:.2}",
+        topo.endpoints().len(),
+        topo.switch_count(),
+        topo.edge_count(),
+        topo.mean_hops()
+    );
+    0
+}
+
+fn run_serve(flags: &HashMap<String, String>) -> i32 {
+    let requests: usize = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let cfg = crate::serve::ServeConfig { requests, ..Default::default() };
+    for plat in [Platform::composable_cxl(), Platform::conventional_rdma()] {
+        let r = crate::serve::simulate_serving(&cfg, &plat);
+        println!(
+            "{:<18} p50={} p95={} p99={} throughput={:.1} req/s mean-batch={:.1}",
+            plat.name,
+            crate::benchkit::fmt_ns(r.latency.percentile(50.0)),
+            crate::benchkit::fmt_ns(r.latency.percentile(95.0)),
+            crate::benchkit::fmt_ns(r.latency.percentile(99.0)),
+            r.throughput_rps,
+            r.mean_batch
+        );
+    }
+    0
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = parse_args(argv);
+    match args.cmd.as_str() {
+        "report" => {
+            let md = args.flags.get("format").map(String::as_str) == Some("md");
+            if let Some(id) = args.flags.get("exp") {
+                match experiment_table(id) {
+                    Some(t) => {
+                        if md {
+                            println!("{}", t.markdown());
+                        } else {
+                            t.print();
+                        }
+                        0
+                    }
+                    None => {
+                        eprintln!("unknown experiment '{id}'; try: {}", EXPERIMENTS.join(", "));
+                        2
+                    }
+                }
+            } else {
+                for t in experiments::all_tables() {
+                    if md {
+                        println!("{}", t.markdown());
+                    } else {
+                        t.print();
+                    }
+                }
+                0
+            }
+        }
+        "simulate" => run_simulate(&args.flags),
+        "topo" => run_topo(&args.flags),
+        "serve" => run_serve(&args.flags),
+        "list" => {
+            for e in EXPERIMENTS {
+                println!("{e}");
+            }
+            0
+        }
+        _ => {
+            println!(
+                "commtax — composable CXL / CXL-over-XLink AI-infrastructure simulator\n\
+                 usage:\n  commtax report [--exp ID]\n  commtax simulate --workload W --platform P\n  \
+                 commtax topo --shape S --n N\n  commtax serve --requests N\n  commtax list"
+            );
+            if args.cmd == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    }
+}
+
+/// Binary entry point.
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run(&argv));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = parse_args(&argv("report --exp fig33 --verbose true"));
+        assert_eq!(a.cmd, "report");
+        assert_eq!(a.flags.get("exp").unwrap(), "fig33");
+    }
+
+    #[test]
+    fn list_and_help_exit_zero() {
+        assert_eq!(run(&argv("list")), 0);
+        assert_eq!(run(&argv("help")), 0);
+    }
+
+    #[test]
+    fn unknown_command_nonzero() {
+        assert_eq!(run(&argv("frobnicate")), 2);
+    }
+
+    #[test]
+    fn unknown_experiment_nonzero() {
+        assert_eq!(run(&argv("report --exp fig99")), 2);
+    }
+
+    #[test]
+    fn topo_runs() {
+        assert_eq!(run(&argv("topo --shape clos --n 16")), 0);
+        assert_eq!(run(&argv("topo --shape dragonfly --n 64")), 0);
+        assert_eq!(run(&argv("topo --shape bogus")), 2);
+    }
+
+    #[test]
+    fn simulate_each_workload() {
+        for w in ["rag", "dlrm", "warpx", "cfd", "training", "inference"] {
+            assert_eq!(run(&argv(&format!("simulate --workload {w} --platform both"))), 0, "{w}");
+        }
+        assert_eq!(run(&argv("simulate --workload nope")), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: a minimal JSON parser ([`json`]) and typed experiment
+//! specs ([`spec`]). serde is unavailable in this offline build (DESIGN.md
+//! §Substitutions), so parsing is hand-rolled and deliberately small.
+
+pub mod json;
+pub mod spec;
+
+pub use json::Json;
+pub use spec::{ExperimentSpec, PlatformKind, WorkloadKind};

@@ -1,0 +1,163 @@
+//! Typed experiment specs parsed from JSON (CLI `--config` files).
+
+use super::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Which platform to evaluate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlatformKind {
+    ComposableCxl,
+    ConventionalRdma,
+    Both,
+}
+
+impl PlatformKind {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cxl" | "composable" | "composable-cxl" => PlatformKind::ComposableCxl,
+            "rdma" | "conventional" | "conventional-rdma" => PlatformKind::ConventionalRdma,
+            "both" => PlatformKind::Both,
+            other => bail!("unknown platform '{other}' (cxl|rdma|both)"),
+        })
+    }
+}
+
+/// Which workload to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Rag,
+    GraphRag,
+    Dlrm,
+    Warpx,
+    Cfd,
+    Training,
+    Inference,
+}
+
+impl WorkloadKind {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rag" => WorkloadKind::Rag,
+            "graph-rag" | "graphrag" => WorkloadKind::GraphRag,
+            "dlrm" => WorkloadKind::Dlrm,
+            "warpx" | "pic" => WorkloadKind::Warpx,
+            "cfd" => WorkloadKind::Cfd,
+            "training" | "train" => WorkloadKind::Training,
+            "inference" | "infer" => WorkloadKind::Inference,
+            other => bail!("unknown workload '{other}'"),
+        })
+    }
+
+    /// All workloads.
+    pub fn all() -> [WorkloadKind; 7] {
+        [
+            WorkloadKind::Rag,
+            WorkloadKind::GraphRag,
+            WorkloadKind::Dlrm,
+            WorkloadKind::Warpx,
+            WorkloadKind::Cfd,
+            WorkloadKind::Training,
+            WorkloadKind::Inference,
+        ]
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Rag => "rag",
+            WorkloadKind::GraphRag => "graph-rag",
+            WorkloadKind::Dlrm => "dlrm",
+            WorkloadKind::Warpx => "warpx",
+            WorkloadKind::Cfd => "cfd",
+            WorkloadKind::Training => "training",
+            WorkloadKind::Inference => "inference",
+        }
+    }
+}
+
+/// A parsed experiment spec.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub workload: WorkloadKind,
+    pub platform: PlatformKind,
+    /// Free-form numeric overrides (e.g. "queries", "hops", "ranks").
+    pub overrides: Vec<(String, f64)>,
+    pub seed: u64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec { workload: WorkloadKind::Rag, platform: PlatformKind::Both, overrides: Vec::new(), seed: 42 }
+    }
+}
+
+impl ExperimentSpec {
+    /// Parse from a JSON document like
+    /// `{"workload": "rag", "platform": "both", "seed": 7,
+    ///   "overrides": {"queries": 128}}`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let workload = WorkloadKind::parse(
+            v.get("workload").and_then(Json::as_str).ok_or_else(|| anyhow!("spec missing 'workload'"))?,
+        )?;
+        let platform = match v.get("platform").and_then(Json::as_str) {
+            Some(s) => PlatformKind::parse(s)?,
+            None => PlatformKind::Both,
+        };
+        let seed = v.get("seed").and_then(Json::as_u64).unwrap_or(42);
+        let mut overrides = Vec::new();
+        if let Some(Json::Object(map)) = v.get("overrides") {
+            for (k, val) in map {
+                let n = val.as_f64().ok_or_else(|| anyhow!("override '{k}' must be numeric"))?;
+                overrides.push((k.clone(), n));
+            }
+        }
+        Ok(ExperimentSpec { workload, platform, overrides, seed })
+    }
+
+    /// Look up an override.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.overrides.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let s = ExperimentSpec::parse(
+            r#"{"workload": "dlrm", "platform": "cxl", "seed": 7, "overrides": {"batches": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.workload, WorkloadKind::Dlrm);
+        assert_eq!(s.platform, PlatformKind::ComposableCxl);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.get("batches"), Some(16.0));
+        assert_eq!(s.get("absent"), None);
+    }
+
+    #[test]
+    fn defaults_platform_and_seed() {
+        let s = ExperimentSpec::parse(r#"{"workload": "cfd"}"#).unwrap();
+        assert_eq!(s.platform, PlatformKind::Both);
+        assert_eq!(s.seed, 42);
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(ExperimentSpec::parse(r#"{"workload": "quantum"}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"workload": "rag", "platform": "abacus"}"#).is_err());
+    }
+
+    #[test]
+    fn workload_names_roundtrip() {
+        for w in WorkloadKind::all() {
+            assert_eq!(WorkloadKind::parse(w.name()).unwrap(), w);
+        }
+    }
+}

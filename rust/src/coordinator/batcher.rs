@@ -1,0 +1,192 @@
+//! Dynamic batcher: collect requests into batches under a size cap and a
+//! max-wait deadline (the serving layer's admission front-end).
+
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// An entry waiting to be batched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Pending {
+    id: u64,
+    arrival: SimTime,
+}
+
+/// A formed batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// Request ids in arrival order.
+    pub ids: Vec<u64>,
+    /// Time the batch was sealed.
+    pub formed_at: SimTime,
+    /// Arrival time of its oldest member.
+    pub oldest_arrival: SimTime,
+}
+
+impl Batch {
+    /// Queueing delay of the oldest member.
+    pub fn max_wait(&self) -> f64 {
+        self.formed_at - self.oldest_arrival
+    }
+}
+
+/// Size-or-deadline dynamic batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_wait: f64,
+    queue: VecDeque<Pending>,
+    pub batches_formed: u64,
+    pub requests_batched: u64,
+}
+
+impl DynamicBatcher {
+    /// Batch up to `max_batch` requests, sealing early after `max_wait` ns.
+    pub fn new(max_batch: usize, max_wait: f64) -> Self {
+        assert!(max_batch > 0);
+        DynamicBatcher { max_batch, max_wait, queue: VecDeque::new(), batches_formed: 0, requests_batched: 0 }
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, id: u64, now: SimTime) {
+        self.queue.push_back(Pending { id, arrival: now });
+    }
+
+    /// Waiting requests.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Seal a batch if the size cap is reached or the oldest entry has
+    /// waited past the deadline.
+    pub fn poll(&mut self, now: SimTime) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest = self.queue.front().unwrap().arrival;
+        if self.queue.len() >= self.max_batch || now - oldest >= self.max_wait {
+            return Some(self.seal(now));
+        }
+        None
+    }
+
+    /// Force-seal whatever is queued (shutdown / flush).
+    pub fn flush(&mut self, now: SimTime) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.seal(now))
+        }
+    }
+
+    /// Earliest time at which `poll` could seal (for event scheduling).
+    pub fn next_deadline(&self) -> Option<SimTime> {
+        self.queue.front().map(|p| p.arrival + self.max_wait)
+    }
+
+    fn seal(&mut self, now: SimTime) -> Batch {
+        let take = self.queue.len().min(self.max_batch);
+        let mut ids = Vec::with_capacity(take);
+        let oldest = self.queue.front().unwrap().arrival;
+        for _ in 0..take {
+            ids.push(self.queue.pop_front().unwrap().id);
+        }
+        self.batches_formed += 1;
+        self.requests_batched += ids.len() as u64;
+        Batch { ids, formed_at: now, oldest_arrival: oldest }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seals_at_size_cap() {
+        let mut b = DynamicBatcher::new(4, 1e9);
+        for i in 0..4 {
+            b.push(i, 0.0);
+        }
+        let batch = b.poll(1.0).unwrap();
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn seals_at_deadline_with_partial_batch() {
+        let mut b = DynamicBatcher::new(16, 100.0);
+        b.push(1, 0.0);
+        b.push(2, 50.0);
+        assert!(b.poll(99.0).is_none());
+        let batch = b.poll(100.0).unwrap();
+        assert_eq!(batch.ids, vec![1, 2]);
+        assert_eq!(batch.max_wait(), 100.0);
+    }
+
+    #[test]
+    fn preserves_fifo_order_and_no_loss() {
+        let mut b = DynamicBatcher::new(3, 10.0);
+        for i in 0..10 {
+            b.push(i, i as f64);
+        }
+        let mut seen = Vec::new();
+        let mut t = 100.0;
+        while let Some(batch) = b.poll(t) {
+            seen.extend(batch.ids);
+            t += 1.0;
+        }
+        if let Some(batch) = b.flush(t) {
+            seen.extend(batch.ids);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>(), "no loss, no dup, FIFO");
+    }
+
+    #[test]
+    fn property_never_loses_or_duplicates() {
+        // property test: arbitrary arrival patterns & poll times
+        crate::testkit::check(
+            128,
+            |rng| {
+                let n = 1 + rng.index(40);
+                let arrivals: Vec<f64> = {
+                    let mut t = 0.0;
+                    (0..n)
+                        .map(|_| {
+                            t += rng.exp(20.0);
+                            t
+                        })
+                        .collect()
+                };
+                (arrivals, 1 + rng.index(8), rng.range(5.0, 200.0))
+            },
+            |(arrivals, max_batch, max_wait)| {
+                let mut b = DynamicBatcher::new(*max_batch, *max_wait);
+                let mut out = Vec::new();
+                for (i, &t) in arrivals.iter().enumerate() {
+                    b.push(i as u64, t);
+                    while let Some(batch) = b.poll(t) {
+                        assert!(batch.ids.len() <= *max_batch);
+                        out.extend(batch.ids);
+                    }
+                }
+                let end = arrivals.last().unwrap() + max_wait + 1.0;
+                while let Some(batch) = b.poll(end) {
+                    out.extend(batch.ids);
+                }
+                let mut sorted = out.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                out.len() == arrivals.len() && sorted.len() == out.len()
+            },
+        )
+        .assert_ok();
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(8, 50.0);
+        assert_eq!(b.next_deadline(), None);
+        b.push(1, 10.0);
+        b.push(2, 20.0);
+        assert_eq!(b.next_deadline(), Some(60.0));
+    }
+}

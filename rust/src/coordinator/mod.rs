@@ -1,0 +1,25 @@
+//! The composable-resource coordinator — the system-software layer the
+//! paper's §5.1/§6.2 "unified management frameworks" discussion calls for.
+//!
+//! * [`orchestrator`] — composable allocation: match workload requirements
+//!   to accelerator + memory-tray inventory, recompose dynamically,
+//!   hot-plug under pressure.
+//! * [`router`] — serving request router across accelerator clusters.
+//! * [`batcher`] — dynamic batching (size + deadline).
+//! * [`scheduler`] — prefill/decode-disaggregated admission with KV budget.
+//! * [`placement`] — temperature-based tier placement and migration.
+//! * [`telemetry`] — counters/gauges for the monitoring frameworks of §5.1.
+
+pub mod batcher;
+pub mod orchestrator;
+pub mod placement;
+pub mod router;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use orchestrator::{Composition, Orchestrator, Requirements};
+pub use placement::PlacementPolicy;
+pub use router::{Router, RoutingStrategy};
+pub use scheduler::{PdScheduler, Request, RequestPhase};
+pub use telemetry::Telemetry;

@@ -1,0 +1,256 @@
+//! Composable resource orchestrator (§4.3, §5.1): match workload
+//! requirements to the tray inventory, compose accelerator + memory
+//! bundles, recompose dynamically, hot-plug memory under pressure.
+
+use crate::fabric::cxl::CxlVersion;
+use crate::mem::media::MediaSpec;
+use crate::mem::pool::{MemoryDevice, MemoryPool, PoolError, PoolHandle};
+use crate::GIB;
+use std::collections::HashMap;
+
+/// What a workload asks the orchestrator for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Requirements {
+    pub accelerators: usize,
+    /// Pooled memory beyond accelerator HBM (bytes).
+    pub pool_bytes: u64,
+    /// Must the pooled memory be shared coherently across hosts?
+    pub shared: bool,
+}
+
+/// A granted composition.
+#[derive(Debug)]
+pub struct Composition {
+    pub id: u64,
+    pub accelerators: Vec<usize>,
+    pub pool_handle: Option<PoolHandle>,
+}
+
+/// Orchestrator errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum OrchestratorError {
+    #[error("not enough accelerators: want {want}, free {free}")]
+    NoAccelerators { want: usize, free: usize },
+    #[error("pool allocation failed: {0}")]
+    Pool(#[from] PoolError),
+    #[error("unknown composition")]
+    UnknownComposition,
+}
+
+/// The composable-data-center control plane.
+#[derive(Debug)]
+pub struct Orchestrator {
+    /// Accelerator inventory: index -> in-use flag.
+    accels: Vec<bool>,
+    pool: MemoryPool,
+    live: HashMap<u64, (Vec<usize>, Option<PoolHandle>)>,
+    next_id: u64,
+    /// Spare memory trays available for hot-plug (devices each).
+    spare_trays: Vec<Vec<MemoryDevice>>,
+    pub hot_plugs: u64,
+    pub compositions: u64,
+}
+
+impl Orchestrator {
+    /// Inventory of `accelerators` accelerators and a CXL pool with
+    /// `mem_trays` × 8 × 512 GiB DDR5 devices, plus `spare_trays` on the
+    /// shelf for hot-plugging.
+    pub fn new(accelerators: usize, mem_trays: usize, spare_trays: usize) -> Self {
+        let mut pool = MemoryPool::new(CxlVersion::V3_0);
+        for t in 0..mem_trays {
+            for d in 0..8 {
+                pool.attach(MemoryDevice::new(format!("t{t}d{d}"), MediaSpec::ddr5(), 512 * GIB)).unwrap();
+            }
+        }
+        let spares = (0..spare_trays)
+            .map(|t| {
+                (0..8)
+                    .map(|d| MemoryDevice::new(format!("spare{t}d{d}"), MediaSpec::ddr5(), 512 * GIB))
+                    .collect()
+            })
+            .collect();
+        Orchestrator {
+            accels: vec![false; accelerators],
+            pool,
+            live: HashMap::new(),
+            next_id: 0,
+            spare_trays: spares,
+            hot_plugs: 0,
+            compositions: 0,
+        }
+    }
+
+    /// Free accelerators.
+    pub fn free_accelerators(&self) -> usize {
+        self.accels.iter().filter(|u| !**u).count()
+    }
+
+    /// Pool capacity (bytes).
+    pub fn pool_capacity(&self) -> u64 {
+        self.pool.capacity()
+    }
+
+    /// Pool utilization in [0,1].
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Compose resources for a workload. Hot-plugs spare memory trays when
+    /// the request does not fit the current pool (§4.3's dynamic
+    /// provisioning story).
+    pub fn compose(&mut self, req: Requirements) -> Result<Composition, OrchestratorError> {
+        let free: Vec<usize> =
+            self.accels.iter().enumerate().filter(|(_, u)| !**u).map(|(i, _)| i).take(req.accelerators).collect();
+        if free.len() < req.accelerators {
+            return Err(OrchestratorError::NoAccelerators { want: req.accelerators, free: self.free_accelerators() });
+        }
+        let pool_handle = if req.pool_bytes > 0 {
+            let hosts: Vec<usize> = if req.shared { free.clone() } else { vec![free[0]] };
+            Some(self.alloc_with_hotplug(req.pool_bytes, &hosts)?)
+        } else {
+            None
+        };
+        for &a in &free {
+            self.accels[a] = true;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.compositions += 1;
+        self.live.insert(id, (free.clone(), pool_handle));
+        Ok(Composition { id, accelerators: free, pool_handle })
+    }
+
+    /// Release a composition, returning its resources.
+    pub fn release(&mut self, id: u64) -> Result<(), OrchestratorError> {
+        let (accels, handle) = self.live.remove(&id).ok_or(OrchestratorError::UnknownComposition)?;
+        for a in accels {
+            self.accels[a] = false;
+        }
+        if let Some(h) = handle {
+            self.pool.free(h)?;
+        }
+        Ok(())
+    }
+
+    /// Grow an existing composition's pooled memory (dynamic recomposition:
+    /// a new allocation is added; the workload sees one logical region).
+    pub fn grow(&mut self, id: u64, extra: u64) -> Result<PoolHandle, OrchestratorError> {
+        let (accels, _) = self.live.get(&id).ok_or(OrchestratorError::UnknownComposition)?;
+        let host = accels[0];
+        self.alloc_with_hotplug(extra, &[host])
+    }
+
+    /// Allocate, hot-plugging spare trays on OOM until one fits or spares
+    /// run dry (§4.3 dynamic provisioning).
+    fn alloc_with_hotplug(&mut self, bytes: u64, hosts: &[usize]) -> Result<PoolHandle, OrchestratorError> {
+        loop {
+            match self.pool.alloc_shared(bytes, hosts) {
+                Ok(h) => return Ok(h),
+                Err(PoolError::OutOfMemory { .. }) => {
+                    let Some(tray) = self.spare_trays.pop() else {
+                        return Err(self.pool.alloc_shared(bytes, hosts).unwrap_err().into());
+                    };
+                    for dev in tray {
+                        self.pool.hot_plug(dev)?;
+                    }
+                    self.hot_plugs += 1;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compose_and_release_roundtrip() {
+        let mut o = Orchestrator::new(8, 2, 0);
+        let c = o.compose(Requirements { accelerators: 4, pool_bytes: GIB, shared: true }).unwrap();
+        assert_eq!(c.accelerators.len(), 4);
+        assert_eq!(o.free_accelerators(), 4);
+        o.release(c.id).unwrap();
+        assert_eq!(o.free_accelerators(), 8);
+        assert_eq!(o.pool_utilization(), 0.0);
+    }
+
+    #[test]
+    fn insufficient_accelerators_rejected() {
+        let mut o = Orchestrator::new(2, 1, 0);
+        let e = o.compose(Requirements { accelerators: 4, pool_bytes: 0, shared: false }).unwrap_err();
+        assert_eq!(e, OrchestratorError::NoAccelerators { want: 4, free: 2 });
+    }
+
+    #[test]
+    fn hot_plugs_spare_trays_under_pressure() {
+        // pool starts with 1 tray (4 TiB = 8 × 512 GiB devices); fill it,
+        // then the next composition must trigger a hot-plug of a spare tray.
+        let mut o = Orchestrator::new(16, 1, 2);
+        let mut ids = Vec::new();
+        for _ in 0..8 {
+            ids.push(o.compose(Requirements { accelerators: 1, pool_bytes: 512 * GIB, shared: false }).unwrap().id);
+        }
+        assert_eq!(o.hot_plugs, 0);
+        let before = o.pool_capacity();
+        let c = o.compose(Requirements { accelerators: 1, pool_bytes: 512 * GIB, shared: false }).unwrap();
+        assert_eq!(o.hot_plugs, 1, "spare tray hot-plugged under pressure");
+        assert!(o.pool_capacity() > before);
+        o.release(c.id).unwrap();
+        for id in ids {
+            o.release(id).unwrap();
+        }
+    }
+
+    #[test]
+    fn independent_scaling_memory_vs_accelerators() {
+        // the §4.3 composability claim: grow memory without touching accels
+        let mut o = Orchestrator::new(4, 1, 4);
+        let c = o.compose(Requirements { accelerators: 2, pool_bytes: 256 * GIB, shared: true }).unwrap();
+        let free_before = o.free_accelerators();
+        let cap_before = o.pool_capacity();
+        // exhaust current pool so grow() must hot-plug
+        let mut grown = Vec::new();
+        for _ in 0..20 {
+            match o.grow(c.id, 400 * GIB) {
+                Ok(h) => grown.push(h),
+                Err(_) => break,
+            }
+        }
+        assert!(o.pool_capacity() > cap_before, "hot-plug grew the pool");
+        assert_eq!(o.free_accelerators(), free_before, "accelerators untouched");
+        assert!(o.hot_plugs > 0);
+    }
+
+    #[test]
+    fn property_no_double_allocation_of_accelerators() {
+        crate::testkit::check(
+            48,
+            |rng| (0..30).map(|_| (1 + rng.index(4), rng.chance(0.4))).collect::<Vec<_>>(),
+            |script| {
+                let mut o = Orchestrator::new(8, 2, 1);
+                let mut live: std::collections::HashMap<u64, Vec<usize>> = Default::default();
+                for &(n, release_one) in script {
+                    if release_one {
+                        if let Some(&id) = live.keys().next() {
+                            live.remove(&id);
+                            o.release(id).unwrap();
+                        }
+                    }
+                    if let Ok(c) = o.compose(Requirements { accelerators: n, pool_bytes: 0, shared: false }) {
+                        // invariant: no accelerator appears in two live compositions
+                        for owned in live.values() {
+                            if c.accelerators.iter().any(|a| owned.contains(a)) {
+                                return false;
+                            }
+                        }
+                        live.insert(c.id, c.accelerators);
+                    }
+                }
+                true
+            },
+        )
+        .assert_ok();
+    }
+}

@@ -1,0 +1,224 @@
+//! Temperature-based data placement across memory tiers (§6.3's
+//! hierarchical data-placement strategies).
+//!
+//! Tracks per-region access temperature (exponential moving average of
+//! access rate) and recommends tier placement: hot → tier-1 accelerator-
+//! local, warm → tier-2 pool, cold → storage. Migration recommendations are
+//! hysteresis-damped so data does not ping-pong between tiers (the §6.3
+//! warning about excessively frequent inter-tier migration).
+
+use crate::mem::tier::Tier;
+use std::collections::HashMap;
+
+/// Per-region tracking state.
+#[derive(Clone, Copy, Debug)]
+struct RegionState {
+    temperature: f64,
+    tier: Tier,
+    bytes: u64,
+}
+
+/// Placement policy with temperature tracking and hysteresis.
+#[derive(Debug)]
+pub struct PlacementPolicy {
+    regions: HashMap<u64, RegionState>,
+    /// EMA decay per observation window, in (0,1).
+    decay: f64,
+    /// Temperature above which a region belongs in tier-1.
+    hot_threshold: f64,
+    /// Temperature below which a region belongs in storage.
+    cold_threshold: f64,
+    /// Hysteresis margin around thresholds.
+    hysteresis: f64,
+    /// Tier-1 capacity budget (bytes).
+    local_budget: u64,
+    local_used: u64,
+    pub migrations: u64,
+}
+
+impl PlacementPolicy {
+    /// Policy with a tier-1 budget.
+    pub fn new(local_budget: u64) -> Self {
+        PlacementPolicy {
+            regions: HashMap::new(),
+            decay: 0.5,
+            hot_threshold: 4.0,
+            cold_threshold: 0.25,
+            hysteresis: 0.1,
+            local_budget,
+            local_used: 0,
+            migrations: 0,
+        }
+    }
+
+    /// Register a region (initially in the pool tier).
+    pub fn register(&mut self, region: u64, bytes: u64) {
+        self.regions.insert(region, RegionState { temperature: 1.0, tier: Tier::Pool, bytes });
+    }
+
+    /// Record `hits` accesses to a region in the current window.
+    pub fn touch(&mut self, region: u64, hits: u64) {
+        if let Some(r) = self.regions.get_mut(&region) {
+            r.temperature += hits as f64;
+        }
+    }
+
+    /// Close an observation window: decay temperatures and compute the
+    /// migration plan, applying it. Returns (region, from, to) moves.
+    pub fn rebalance(&mut self) -> Vec<(u64, Tier, Tier)> {
+        // decay
+        for r in self.regions.values_mut() {
+            r.temperature *= self.decay;
+        }
+        // order regions hottest-first for tier-1 packing
+        let mut ids: Vec<u64> = self.regions.keys().copied().collect();
+        ids.sort_by(|a, b| {
+            let ta = self.regions[a].temperature;
+            let tb = self.regions[b].temperature;
+            tb.partial_cmp(&ta).unwrap().then(a.cmp(b))
+        });
+        let mut moves = Vec::new();
+        let mut local_used = 0u64;
+        for id in ids {
+            let st = self.regions[&id];
+            let want = if st.temperature >= self.effective_hot(st.tier) && local_used + st.bytes <= self.local_budget {
+                Tier::Local
+            } else if st.temperature <= self.effective_cold(st.tier) {
+                Tier::Storage
+            } else {
+                Tier::Pool
+            };
+            if want == Tier::Local {
+                local_used += st.bytes;
+            }
+            if want != st.tier {
+                moves.push((id, st.tier, want));
+                self.migrations += 1;
+                self.regions.get_mut(&id).unwrap().tier = want;
+            }
+        }
+        self.local_used = local_used;
+        moves
+    }
+
+    /// Current tier of a region.
+    pub fn tier_of(&self, region: u64) -> Option<Tier> {
+        self.regions.get(&region).map(|r| r.tier)
+    }
+
+    /// Tier-1 bytes in use after the last rebalance.
+    pub fn local_used(&self) -> u64 {
+        self.local_used
+    }
+
+    fn effective_hot(&self, current: Tier) -> f64 {
+        // already-local regions get a lower bar to *stay* (hysteresis)
+        if current == Tier::Local {
+            self.hot_threshold - self.hysteresis
+        } else {
+            self.hot_threshold + self.hysteresis
+        }
+    }
+
+    fn effective_cold(&self, current: Tier) -> f64 {
+        if current == Tier::Storage {
+            self.cold_threshold + self.hysteresis
+        } else {
+            self.cold_threshold - self.hysteresis
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_region_promotes_to_local() {
+        let mut p = PlacementPolicy::new(1 << 30);
+        p.register(1, 1 << 20);
+        for _ in 0..4 {
+            p.touch(1, 20);
+            p.rebalance();
+        }
+        assert_eq!(p.tier_of(1), Some(Tier::Local));
+    }
+
+    #[test]
+    fn cold_region_demotes_to_storage() {
+        let mut p = PlacementPolicy::new(1 << 30);
+        p.register(1, 1 << 20);
+        for _ in 0..8 {
+            p.rebalance(); // never touched: temperature decays to ~0
+        }
+        assert_eq!(p.tier_of(1), Some(Tier::Storage));
+    }
+
+    #[test]
+    fn local_budget_caps_promotions() {
+        let mut p = PlacementPolicy::new(3 << 20); // room for 3 regions
+        for id in 0..10 {
+            p.register(id, 1 << 20);
+        }
+        for _ in 0..4 {
+            for id in 0..10 {
+                p.touch(id, 50);
+            }
+            p.rebalance();
+        }
+        let locals = (0..10).filter(|id| p.tier_of(*id) == Some(Tier::Local)).count();
+        assert_eq!(locals, 3, "only budget-many regions promoted");
+        assert!(p.local_used() <= 3 << 20);
+    }
+
+    #[test]
+    fn hysteresis_prevents_ping_pong() {
+        let mut p = PlacementPolicy::new(1 << 30);
+        p.register(1, 1 << 20);
+        // drive temperature right around the hot threshold
+        let mut flips = 0;
+        let mut last = p.tier_of(1).unwrap();
+        for i in 0..32 {
+            p.touch(1, if i % 2 == 0 { 9 } else { 7 });
+            p.rebalance();
+            let now = p.tier_of(1).unwrap();
+            if now != last {
+                flips += 1;
+                last = now;
+            }
+        }
+        assert!(flips <= 2, "tier flipped {flips} times — hysteresis failed");
+    }
+
+    #[test]
+    fn property_local_budget_never_exceeded() {
+        crate::testkit::check(
+            48,
+            |rng| {
+                let n = 1 + rng.index(20);
+                let sizes: Vec<u64> = (0..n).map(|_| 1 + rng.below(1 << 22)).collect();
+                let touches: Vec<Vec<u64>> =
+                    (0..6).map(|_| (0..n).map(|_| rng.below(40)).collect()).collect();
+                (sizes, touches)
+            },
+            |(sizes, touches)| {
+                let budget = 1 << 22;
+                let mut p = PlacementPolicy::new(budget);
+                for (i, &s) in sizes.iter().enumerate() {
+                    p.register(i as u64, s);
+                }
+                for window in touches {
+                    for (i, &h) in window.iter().enumerate() {
+                        p.touch(i as u64, h);
+                    }
+                    p.rebalance();
+                    if p.local_used() > budget {
+                        return false;
+                    }
+                }
+                true
+            },
+        )
+        .assert_ok();
+    }
+}

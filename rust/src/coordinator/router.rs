@@ -1,0 +1,173 @@
+//! Serving request router across accelerator clusters (§6.2's orchestration
+//! software, vLLM-router-style).
+
+use std::collections::HashMap;
+
+/// Cluster selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingStrategy {
+    /// Rotate over clusters.
+    RoundRobin,
+    /// Pick the cluster with fewest in-flight requests.
+    LeastLoaded,
+    /// Stick sessions to the cluster holding their KV cache; fall back to
+    /// least-loaded for new sessions (the paper's data-locality argument).
+    KvAffinity,
+}
+
+/// Router state.
+#[derive(Debug)]
+pub struct Router {
+    strategy: RoutingStrategy,
+    clusters: usize,
+    in_flight: Vec<usize>,
+    rr_next: usize,
+    /// session -> cluster affinity map.
+    affinity: HashMap<u64, usize>,
+    pub routed: u64,
+    pub affinity_hits: u64,
+}
+
+impl Router {
+    /// Router over `clusters` clusters.
+    pub fn new(clusters: usize, strategy: RoutingStrategy) -> Self {
+        assert!(clusters > 0);
+        Router {
+            strategy,
+            clusters,
+            in_flight: vec![0; clusters],
+            rr_next: 0,
+            affinity: HashMap::new(),
+            routed: 0,
+            affinity_hits: 0,
+        }
+    }
+
+    /// Route a request belonging to `session`; returns the cluster index.
+    pub fn route(&mut self, session: u64) -> usize {
+        let c = match self.strategy {
+            RoutingStrategy::RoundRobin => {
+                let c = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.clusters;
+                c
+            }
+            RoutingStrategy::LeastLoaded => self.least_loaded(),
+            RoutingStrategy::KvAffinity => {
+                if let Some(&c) = self.affinity.get(&session) {
+                    self.affinity_hits += 1;
+                    c
+                } else {
+                    let c = self.least_loaded();
+                    self.affinity.insert(session, c);
+                    c
+                }
+            }
+        };
+        self.in_flight[c] += 1;
+        self.routed += 1;
+        c
+    }
+
+    /// Mark a request on `cluster` complete.
+    pub fn complete(&mut self, cluster: usize) {
+        debug_assert!(self.in_flight[cluster] > 0, "complete() without route()");
+        self.in_flight[cluster] = self.in_flight[cluster].saturating_sub(1);
+    }
+
+    /// Session ended; drop its affinity.
+    pub fn end_session(&mut self, session: u64) {
+        self.affinity.remove(&session);
+    }
+
+    /// Current in-flight count per cluster.
+    pub fn load(&self) -> &[usize] {
+        &self.in_flight
+    }
+
+    /// Max/min in-flight imbalance.
+    pub fn imbalance(&self) -> usize {
+        let max = self.in_flight.iter().copied().max().unwrap_or(0);
+        let min = self.in_flight.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.in_flight
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutingStrategy::RoundRobin);
+        let picks: Vec<_> = (0..6).map(|s| r.route(s)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(4, RoutingStrategy::LeastLoaded);
+        for s in 0..64 {
+            r.route(s);
+        }
+        assert!(r.imbalance() <= 1, "imbalance={}", r.imbalance());
+    }
+
+    #[test]
+    fn affinity_sticks_sessions() {
+        let mut r = Router::new(4, RoutingStrategy::KvAffinity);
+        let first = r.route(42);
+        for _ in 0..10 {
+            assert_eq!(r.route(42), first, "session must stay on its KV cluster");
+        }
+        assert_eq!(r.affinity_hits, 10);
+        r.end_session(42);
+        // after session end, affinity is forgotten (may or may not change)
+        let _ = r.route(42);
+        assert_eq!(r.affinity_hits, 10);
+    }
+
+    #[test]
+    fn complete_reduces_load() {
+        let mut r = Router::new(2, RoutingStrategy::LeastLoaded);
+        let c = r.route(1);
+        assert_eq!(r.load()[c], 1);
+        r.complete(c);
+        assert_eq!(r.load()[c], 0);
+    }
+
+    #[test]
+    fn property_least_loaded_stays_balanced_under_churn() {
+        crate::testkit::check(
+            64,
+            |rng| {
+                let ops: Vec<bool> = (0..200).map(|_| rng.chance(0.6)).collect();
+                (ops, 1 + rng.index(7))
+            },
+            |(ops, clusters)| {
+                let mut r = Router::new(*clusters, RoutingStrategy::LeastLoaded);
+                let mut active: Vec<usize> = Vec::new();
+                for (i, &is_route) in ops.iter().enumerate() {
+                    if is_route {
+                        active.push(r.route(i as u64));
+                    } else if let Some(c) = active.pop() {
+                        r.complete(c);
+                    }
+                    if r.imbalance() > 2 {
+                        return false;
+                    }
+                }
+                true
+            },
+        )
+        .assert_ok();
+    }
+}

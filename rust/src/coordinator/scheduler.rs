@@ -1,0 +1,243 @@
+//! Prefill/decode-disaggregated scheduler with KV-budget admission
+//! (§4.1/§4.3: prefill is throughput-bound, decode is latency-bound, and
+//! composable systems provision them differently).
+
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// Lifecycle phase of a serving request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestPhase {
+    /// Waiting for admission.
+    Queued,
+    /// Prompt is being prefilled.
+    Prefill,
+    /// Auto-regressive decoding.
+    Decode,
+    /// Finished.
+    Done,
+}
+
+/// A serving request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    pub arrived: SimTime,
+    pub phase: RequestPhase,
+    /// Tokens decoded so far.
+    pub decoded: u64,
+}
+
+impl Request {
+    /// New queued request.
+    pub fn new(id: u64, prompt_tokens: u64, gen_tokens: u64, arrived: SimTime) -> Self {
+        Request { id, prompt_tokens, gen_tokens, arrived, phase: RequestPhase::Queued, decoded: 0 }
+    }
+
+    /// KV bytes this request will pin at peak.
+    pub fn peak_kv_bytes(&self, bytes_per_token: u64) -> u64 {
+        (self.prompt_tokens + self.gen_tokens) * bytes_per_token
+    }
+}
+
+/// Continuous-batching scheduler with disaggregated prefill/decode pools.
+#[derive(Debug)]
+pub struct PdScheduler {
+    queue: VecDeque<Request>,
+    prefill: Vec<Request>,
+    decode: Vec<Request>,
+    /// KV budget (bytes) across admitted requests.
+    kv_budget: u64,
+    kv_used: u64,
+    kv_bytes_per_token: u64,
+    /// Max concurrent prefills (prefill pool size).
+    max_prefill: usize,
+    /// Max concurrent decodes (decode pool size).
+    max_decode: usize,
+    pub admitted: u64,
+    pub completed: u64,
+    pub rejected_oom: u64,
+}
+
+impl PdScheduler {
+    /// Scheduler with a KV budget and pool sizes.
+    pub fn new(kv_budget: u64, kv_bytes_per_token: u64, max_prefill: usize, max_decode: usize) -> Self {
+        PdScheduler {
+            queue: VecDeque::new(),
+            prefill: Vec::new(),
+            decode: Vec::new(),
+            kv_budget,
+            kv_used: 0,
+            kv_bytes_per_token,
+            max_prefill,
+            max_decode,
+            admitted: 0,
+            completed: 0,
+            rejected_oom: 0,
+        }
+    }
+
+    /// Submit a request.
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    /// Admission: move queued requests into the prefill pool while the KV
+    /// budget and pool have room. Returns ids admitted this call.
+    pub fn admit(&mut self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while self.prefill.len() < self.max_prefill {
+            let Some(front) = self.queue.front() else { break };
+            let need = front.peak_kv_bytes(self.kv_bytes_per_token);
+            if self.kv_used + need > self.kv_budget {
+                // head-of-line blocking on memory — the §4.1 capacity story
+                self.rejected_oom += 1;
+                break;
+            }
+            let mut req = self.queue.pop_front().unwrap();
+            req.phase = RequestPhase::Prefill;
+            self.kv_used += need;
+            self.admitted += 1;
+            ids.push(req.id);
+            self.prefill.push(req);
+        }
+        ids
+    }
+
+    /// A prefill finished: promote to the decode pool (or requeue if the
+    /// decode pool is full — pathological config).
+    pub fn prefill_done(&mut self, id: u64) -> bool {
+        let Some(pos) = self.prefill.iter().position(|r| r.id == id) else {
+            return false;
+        };
+        if self.decode.len() >= self.max_decode {
+            return false;
+        }
+        let mut req = self.prefill.remove(pos);
+        req.phase = RequestPhase::Decode;
+        self.decode.push(req);
+        true
+    }
+
+    /// One decode iteration across the decode pool; returns ids that
+    /// completed (hit their generation length).
+    pub fn decode_step(&mut self) -> Vec<u64> {
+        let mut done = Vec::new();
+        for r in &mut self.decode {
+            r.decoded += 1;
+            if r.decoded >= r.gen_tokens {
+                r.phase = RequestPhase::Done;
+                done.push(r.id);
+            }
+        }
+        for id in &done {
+            let pos = self.decode.iter().position(|r| r.id == *id).unwrap();
+            let req = self.decode.remove(pos);
+            self.kv_used -= req.peak_kv_bytes(self.kv_bytes_per_token);
+            self.completed += 1;
+        }
+        done
+    }
+
+    /// Current decode batch size (continuous batching width).
+    pub fn decode_batch(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// Requests in each state: (queued, prefill, decode).
+    pub fn occupancy(&self) -> (usize, usize, usize) {
+        (self.queue.len(), self.prefill.len(), self.decode.len())
+    }
+
+    /// KV budget utilization in [0,1].
+    pub fn kv_utilization(&self) -> f64 {
+        if self.kv_budget == 0 {
+            return 1.0;
+        }
+        self.kv_used as f64 / self.kv_budget as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(budget_tokens: u64) -> PdScheduler {
+        PdScheduler::new(budget_tokens * 100, 100, 4, 16)
+    }
+
+    #[test]
+    fn admits_within_kv_budget() {
+        let mut s = sched(1000);
+        s.submit(Request::new(1, 400, 100, 0.0)); // 500 tokens peak
+        s.submit(Request::new(2, 400, 100, 0.0));
+        s.submit(Request::new(3, 400, 100, 0.0)); // would exceed 1000
+        let admitted = s.admit();
+        assert_eq!(admitted, vec![1, 2]);
+        assert_eq!(s.occupancy(), (1, 2, 0));
+        assert!(s.kv_utilization() > 0.99);
+    }
+
+    #[test]
+    fn full_lifecycle() {
+        let mut s = sched(10_000);
+        s.submit(Request::new(1, 10, 3, 0.0));
+        s.admit();
+        assert!(s.prefill_done(1));
+        assert_eq!(s.decode_batch(), 1);
+        assert!(s.decode_step().is_empty());
+        assert!(s.decode_step().is_empty());
+        let done = s.decode_step();
+        assert_eq!(done, vec![1]);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.kv_utilization(), 0.0, "KV released on completion");
+    }
+
+    #[test]
+    fn completion_frees_budget_for_queue() {
+        let mut s = sched(500);
+        s.submit(Request::new(1, 400, 100, 0.0));
+        s.submit(Request::new(2, 400, 100, 0.0));
+        assert_eq!(s.admit(), vec![1]);
+        s.prefill_done(1);
+        for _ in 0..100 {
+            s.decode_step();
+        }
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.admit(), vec![2], "freed KV admits the next request");
+    }
+
+    #[test]
+    fn property_kv_accounting_never_negative_or_over() {
+        crate::testkit::check(
+            64,
+            |rng| (0..60).map(|_| (1 + rng.below(300), 1 + rng.below(50))).collect::<Vec<_>>(),
+            |reqs| {
+                let mut s = PdScheduler::new(20_000, 10, 4, 8);
+                for (i, &(p, g)) in reqs.iter().enumerate() {
+                    s.submit(Request::new(i as u64, p, g, 0.0));
+                    for id in s.admit() {
+                        s.prefill_done(id);
+                    }
+                    s.decode_step();
+                    if s.kv_utilization() > 1.0 {
+                        return false;
+                    }
+                }
+                // drain
+                for _ in 0..10_000 {
+                    for id in s.admit() {
+                        s.prefill_done(id);
+                    }
+                    if s.decode_step().is_empty() && s.decode_batch() == 0 && s.occupancy().0 == 0 {
+                        break;
+                    }
+                }
+                s.kv_utilization() >= 0.0 && s.kv_utilization() <= 1.0
+            },
+        )
+        .assert_ok();
+    }
+}

@@ -1,0 +1,80 @@
+//! Telemetry registry (§5.1's centralized monitoring requirement).
+
+use std::collections::BTreeMap;
+
+/// Counters and gauges, keyed by name. BTreeMap keeps report output stable.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Telemetry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Read a counter (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Read a gauge (None when absent).
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Render a stable text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} = {v:.3}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut t = Telemetry::new();
+        t.incr("req", 1);
+        t.incr("req", 2);
+        assert_eq!(t.counter("req"), 3);
+        assert_eq!(t.counter("absent"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut t = Telemetry::new();
+        t.gauge("util", 0.5);
+        t.gauge("util", 0.7);
+        assert_eq!(t.gauge_value("util"), Some(0.7));
+    }
+
+    #[test]
+    fn report_is_stable() {
+        let mut t = Telemetry::new();
+        t.incr("b", 1);
+        t.incr("a", 1);
+        let r = t.report();
+        assert!(r.find("a = ").unwrap() < r.find("b = ").unwrap());
+    }
+}

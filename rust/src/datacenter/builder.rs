@@ -1,0 +1,141 @@
+//! Config-driven data-center construction: JSON spec → racks / rows /
+//! superclusters (the launcher path of the CLI and examples).
+//!
+//! ```json
+//! {
+//!   "kind": "supercluster",
+//!   "fabric": "multi-clos",
+//!   "mem_trays": 4,
+//!   "clusters": [
+//!     {"xlink": "nvlink", "accelerators": 72},
+//!     {"xlink": "ualink", "accelerators": 64}
+//!   ]
+//! }
+//! ```
+
+use super::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
+use super::rack::{Rack, RackKind};
+use crate::config::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Parsed data-center spec.
+#[derive(Clone, Debug)]
+pub enum DatacenterSpec {
+    /// One rack.
+    Rack { kind: RackKind, accelerators: usize, mem_tib: u64, cpus: usize },
+    /// A CXL-over-XLink supercluster.
+    Supercluster { clusters: Vec<XLinkCluster>, fabric: SuperclusterTopology, mem_trays: usize },
+}
+
+impl DatacenterSpec {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let kind = v.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("spec missing 'kind'"))?;
+        match kind {
+            "nvl72" => Ok(DatacenterSpec::Rack { kind: RackKind::Nvl72, accelerators: 72, mem_tib: 0, cpus: 36 }),
+            "composable" => {
+                let accelerators = v.get("accelerators").and_then(Json::as_u64).unwrap_or(64) as usize;
+                let mem_tib = v.get("mem_tib").and_then(Json::as_u64).unwrap_or(16);
+                let cpus = v.get("cpus").and_then(Json::as_u64).unwrap_or(8) as usize;
+                Ok(DatacenterSpec::Rack { kind: RackKind::ComposableCxl, accelerators, mem_tib, cpus })
+            }
+            "supercluster" => {
+                let fabric = match v.get("fabric").and_then(Json::as_str).unwrap_or("multi-clos") {
+                    "multi-clos" | "clos" => SuperclusterTopology::MultiClos,
+                    "torus" | "3d-torus" => SuperclusterTopology::Torus3D,
+                    "dragonfly" => SuperclusterTopology::DragonFly,
+                    other => bail!("unknown fabric '{other}'"),
+                };
+                let mem_trays = v.get("mem_trays").and_then(Json::as_u64).unwrap_or(2) as usize;
+                let arr = v
+                    .get("clusters")
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| anyhow!("supercluster spec missing 'clusters'"))?;
+                let mut clusters = Vec::new();
+                for c in arr {
+                    let n = c.get("accelerators").and_then(Json::as_u64).unwrap_or(72) as usize;
+                    match c.get("xlink").and_then(Json::as_str).unwrap_or("nvlink") {
+                        "nvlink" => clusters.push(XLinkCluster { accelerators: n, ..XLinkCluster::nvl72() }),
+                        "ualink" => clusters.push(XLinkCluster::ualink(n)),
+                        other => bail!("unknown xlink '{other}'"),
+                    }
+                }
+                if clusters.is_empty() {
+                    bail!("supercluster needs at least one cluster");
+                }
+                Ok(DatacenterSpec::Supercluster { clusters, fabric, mem_trays })
+            }
+            other => bail!("unknown datacenter kind '{other}' (nvl72|composable|supercluster)"),
+        }
+    }
+
+    /// Build a rack (Rack specs only).
+    pub fn build_rack(&self) -> Result<Rack> {
+        match self {
+            DatacenterSpec::Rack { kind: RackKind::Nvl72, .. } => Ok(Rack::nvl72()),
+            DatacenterSpec::Rack { kind: RackKind::ComposableCxl, accelerators, mem_tib, cpus } => {
+                Ok(Rack::composable(*accelerators, *mem_tib, *cpus))
+            }
+            _ => bail!("spec is not a rack"),
+        }
+    }
+
+    /// Build a supercluster (Supercluster specs only).
+    pub fn build_supercluster(&self) -> Result<Supercluster> {
+        match self {
+            DatacenterSpec::Supercluster { clusters, fabric, mem_trays } => {
+                Ok(Supercluster::build(clusters, *fabric, *mem_trays))
+            }
+            _ => bail!("spec is not a supercluster"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_nvl72_from_spec() {
+        let spec = DatacenterSpec::parse(r#"{"kind": "nvl72"}"#).unwrap();
+        let rack = spec.build_rack().unwrap();
+        assert_eq!(rack.accelerator_count(), 72);
+    }
+
+    #[test]
+    fn builds_composable_with_overrides() {
+        let spec = DatacenterSpec::parse(r#"{"kind": "composable", "accelerators": 32, "mem_tib": 8, "cpus": 4}"#)
+            .unwrap();
+        let rack = spec.build_rack().unwrap();
+        assert_eq!(rack.accelerator_count(), 32);
+        assert!(rack.pooled_memory_capacity() >= 8 * 1024 * crate::GIB);
+    }
+
+    #[test]
+    fn builds_supercluster_from_spec() {
+        let spec = DatacenterSpec::parse(
+            r#"{"kind": "supercluster", "fabric": "dragonfly", "mem_trays": 3,
+                "clusters": [{"xlink": "nvlink", "accelerators": 72},
+                              {"xlink": "ualink", "accelerators": 64}]}"#,
+        )
+        .unwrap();
+        let mut sc = spec.build_supercluster().unwrap();
+        assert_eq!(sc.cluster_count(), 2);
+        assert_eq!(sc.mem_trays.len(), 3);
+        assert!(sc.transfer_accel((0, 0), (1, 0), 1024, 0.0).is_some());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(DatacenterSpec::parse(r#"{"kind": "warehouse"}"#).is_err());
+        assert!(DatacenterSpec::parse(r#"{"kind": "supercluster"}"#).is_err());
+        assert!(DatacenterSpec::parse(
+            r#"{"kind": "supercluster", "clusters": [{"xlink": "avocado"}]}"#
+        )
+        .is_err());
+        let sc = DatacenterSpec::parse(r#"{"kind": "nvl72"}"#).unwrap();
+        assert!(sc.build_supercluster().is_err());
+    }
+}

@@ -1,0 +1,353 @@
+//! XLink clusters and the CXL-over-XLink supercluster (§6.2, Fig 40/41).
+//!
+//! A **cluster** is a rack-scale, single-hop-Clos XLink domain (NVLink72 or
+//! UALink up to 1024 accelerators). A **supercluster** joins clusters with a
+//! CXL fabric: each cluster exposes a *bridge* (the §6.2 SoC bridging
+//! interface, optionally HBM-cached) that attaches to the inter-cluster CXL
+//! switch fabric, which may itself be shaped as multi-level Clos, 3D-Torus,
+//! or DragonFly (Fig 41). Memory trays attach directly to the CXL fabric as
+//! tier-2 pools.
+
+use crate::fabric::link::LinkSpec;
+use crate::fabric::routing::RoutingPolicy;
+use crate::fabric::topology::{NodeId, NodeKind, Topology, TopologyKind};
+use crate::fabric::{EdgeId, Fabric};
+use crate::sim::SimTime;
+
+/// XLink flavor of a cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterKind {
+    /// NVIDIA NVLink + NVSwitch (max 72 accelerators per paper's practical
+    /// rack scale).
+    NvLink,
+    /// UALink 1.0 (theoretical max 1024; practical rack ≈ 72 for GPU-sized
+    /// accelerators, larger for small NPUs — §6.2).
+    UaLink,
+}
+
+impl ClusterKind {
+    /// Intra-cluster link spec.
+    pub fn link(self) -> LinkSpec {
+        match self {
+            ClusterKind::NvLink => LinkSpec::nvlink5_bundle(),
+            ClusterKind::UaLink => LinkSpec::ualink1_x4(),
+        }
+    }
+
+    /// Max accelerators per cluster.
+    pub fn max_accelerators(self) -> usize {
+        match self {
+            ClusterKind::NvLink => 576, // NVL576 with long-reach elements
+            ClusterKind::UaLink => 1024,
+        }
+    }
+
+    /// Practical single-rack accelerator count.
+    pub fn rack_scale(self) -> usize {
+        72
+    }
+}
+
+/// Shape of the inter-cluster CXL fabric (Fig 41).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuperclusterTopology {
+    /// Multi-level Clos of CXL switches.
+    MultiClos,
+    /// 3D-Torus of cluster bridges.
+    Torus3D,
+    /// DragonFly groups of clusters.
+    DragonFly,
+}
+
+/// One XLink accelerator cluster spec.
+#[derive(Clone, Debug)]
+pub struct XLinkCluster {
+    pub kind: ClusterKind,
+    pub accelerators: usize,
+    /// Switch planes in the single-hop Clos.
+    pub planes: usize,
+}
+
+impl XLinkCluster {
+    /// NVL72-style cluster.
+    pub fn nvl72() -> XLinkCluster {
+        XLinkCluster { kind: ClusterKind::NvLink, accelerators: 72, planes: 9 }
+    }
+
+    /// UALink cluster of `n` accelerators.
+    pub fn ualink(n: usize) -> XLinkCluster {
+        assert!(n <= ClusterKind::UaLink.max_accelerators());
+        XLinkCluster { kind: ClusterKind::UaLink, accelerators: n, planes: (n / 16).max(1) }
+    }
+}
+
+/// Built supercluster: one heterogeneous fabric with directories into it.
+#[derive(Debug)]
+pub struct Supercluster {
+    fabric: Fabric,
+    /// Accelerator endpoints per cluster: `accels[c][i]`.
+    pub accels: Vec<Vec<NodeId>>,
+    /// Bridge switch node per cluster.
+    pub bridges: Vec<NodeId>,
+    /// Tier-2 memory-tray endpoints on the CXL fabric.
+    pub mem_trays: Vec<NodeId>,
+    /// Extra one-way latency of the XLink<->CXL protocol conversion at a
+    /// bridge (ns); reduced when the bridge carries an HBM cache (§6.2).
+    pub bridge_conversion_ns: f64,
+    /// Hit ratio of the bridge HBM conversion cache in [0,1).
+    pub bridge_cache_hit: f64,
+}
+
+impl Supercluster {
+    /// Assemble a supercluster of `clusters` with an inter-cluster CXL
+    /// fabric of the given shape and `mem_trays` tier-2 memory endpoints.
+    pub fn build(clusters: &[XLinkCluster], shape: SuperclusterTopology, mem_trays: usize) -> Supercluster {
+        let mut topo = Topology::empty(TopologyKind::Custom);
+        let mut cxl_edges: Vec<EdgeId> = Vec::new();
+        let mut xlink_edges: Vec<(EdgeId, ClusterKind)> = Vec::new();
+
+        // 1) intra-cluster single-hop Clos per cluster + a bridge switch
+        let mut accels = Vec::new();
+        let mut bridges = Vec::new();
+        for cl in clusters {
+            let planes: Vec<_> = (0..cl.planes).map(|_| topo.add_node(NodeKind::Switch)).collect();
+            let mut eps = Vec::new();
+            for _ in 0..cl.accelerators {
+                let e = topo.add_node(NodeKind::Endpoint);
+                for &p in &planes {
+                    let (f, r) = topo.add_link(e, p);
+                    xlink_edges.push((f, cl.kind));
+                    xlink_edges.push((r, cl.kind));
+                }
+                eps.push(e);
+            }
+            // bridge hangs off every plane so any accel reaches it in 2 hops
+            let bridge = topo.add_node(NodeKind::Switch);
+            for &p in &planes {
+                let (f, r) = topo.add_link(p, bridge);
+                xlink_edges.push((f, cl.kind));
+                xlink_edges.push((r, cl.kind));
+            }
+            accels.push(eps);
+            bridges.push(bridge);
+        }
+
+        // 2) inter-cluster CXL fabric over the bridges
+        let add_cxl = |topo: &mut Topology, a: NodeId, b: NodeId, edges: &mut Vec<EdgeId>| {
+            let (f, r) = topo.add_link(a, b);
+            edges.push(f);
+            edges.push(r);
+        };
+        let mut fabric_switches: Vec<NodeId> = Vec::new();
+        match shape {
+            SuperclusterTopology::MultiClos => {
+                let spines: Vec<_> = (0..2).map(|_| topo.add_node(NodeKind::Switch)).collect();
+                fabric_switches.extend(&spines);
+                for &b in &bridges {
+                    for &s in &spines {
+                        add_cxl(&mut topo, b, s, &mut cxl_edges);
+                    }
+                }
+            }
+            SuperclusterTopology::Torus3D => {
+                // ring when few clusters; 2D/3D grid as count grows
+                let n = bridges.len();
+                for i in 0..n {
+                    add_cxl(&mut topo, bridges[i], bridges[(i + 1) % n], &mut cxl_edges);
+                }
+                // add a second dimension for n >= 6
+                if n >= 6 {
+                    let stride = (n as f64).sqrt().round() as usize;
+                    if stride >= 2 {
+                        for i in 0..n {
+                            add_cxl(&mut topo, bridges[i], bridges[(i + stride) % n], &mut cxl_edges);
+                        }
+                    }
+                }
+            }
+            SuperclusterTopology::DragonFly => {
+                // all-to-all between bridges (each cluster = one group)
+                for i in 0..bridges.len() {
+                    for j in (i + 1)..bridges.len() {
+                        add_cxl(&mut topo, bridges[i], bridges[j], &mut cxl_edges);
+                    }
+                }
+            }
+        }
+
+        // 3) tier-2 memory trays on the CXL fabric (attach to spines when
+        // present, else round-robin over bridges)
+        let mut trays = Vec::new();
+        for i in 0..mem_trays {
+            let m = topo.add_node(NodeKind::Endpoint);
+            let attach = if !fabric_switches.is_empty() {
+                fabric_switches[i % fabric_switches.len()]
+            } else {
+                bridges[i % bridges.len()]
+            };
+            add_cxl(&mut topo, m, attach, &mut cxl_edges);
+            trays.push(m);
+        }
+
+        // 4) assign link specs per edge
+        let cxl = LinkSpec::cxl3_x16();
+        let mut edge_spec: Vec<Option<LinkSpec>> = vec![None; topo.edge_count()];
+        for &(e, kind) in &xlink_edges {
+            edge_spec[e] = Some(kind.link());
+        }
+        for &e in &cxl_edges {
+            edge_spec[e] = Some(cxl.clone());
+        }
+        let fabric = Fabric::new_with(topo, RoutingPolicy::Pbr, |e, _| {
+            edge_spec[e].clone().unwrap_or_else(LinkSpec::cxl3_x16)
+        });
+
+        Supercluster { fabric, accels, bridges, mem_trays: trays, bridge_conversion_ns: 120.0, bridge_cache_hit: 0.0 }
+    }
+
+    /// Enable the §6.2 HBM-cached bridging interface: `hit` fraction of
+    /// conversions are served from pre-converted state.
+    pub fn with_bridge_cache(mut self, hit: f64) -> Self {
+        self.bridge_cache_hit = hit.clamp(0.0, 1.0);
+        self
+    }
+
+    /// The combined fabric.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    /// Mutable fabric access (workload drivers).
+    pub fn fabric_mut(&mut self) -> &mut Fabric {
+        &mut self.fabric
+    }
+
+    /// Number of clusters.
+    pub fn cluster_count(&self) -> usize {
+        self.accels.len()
+    }
+
+    /// Total accelerators.
+    pub fn accelerator_count(&self) -> usize {
+        self.accels.iter().map(|a| a.len()).sum()
+    }
+
+    /// Does a path between these accelerators cross a cluster boundary?
+    pub fn crosses_clusters(&self, a: (usize, usize), b: (usize, usize)) -> bool {
+        a.0 != b.0
+    }
+
+    /// Transfer between accelerators (cluster, index) → (cluster, index),
+    /// adding bridge protocol-conversion cost when crossing clusters.
+    pub fn transfer_accel(
+        &mut self,
+        src: (usize, usize),
+        dst: (usize, usize),
+        bytes: u64,
+        now: SimTime,
+    ) -> Option<crate::fabric::TransferResult> {
+        let s = self.accels[src.0][src.1];
+        let d = self.accels[dst.0][dst.1];
+        let mut res = self.fabric.transfer(s, d, bytes, now)?;
+        if src.0 != dst.0 {
+            let conv = 2.0 * self.bridge_conversion_ns * (1.0 - self.bridge_cache_hit);
+            res.arrival += conv;
+            res.latency += conv;
+        }
+        Some(res)
+    }
+
+    /// Transfer from an accelerator to a tier-2 memory tray.
+    pub fn transfer_to_tray(
+        &mut self,
+        src: (usize, usize),
+        tray: usize,
+        bytes: u64,
+        now: SimTime,
+    ) -> Option<crate::fabric::TransferResult> {
+        let s = self.accels[src.0][src.1];
+        let m = self.mem_trays[tray];
+        let mut res = self.fabric.transfer(s, m, bytes, now)?;
+        let conv = self.bridge_conversion_ns * (1.0 - self.bridge_cache_hit);
+        res.arrival += conv;
+        res.latency += conv;
+        Some(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cluster_sc(shape: SuperclusterTopology) -> Supercluster {
+        Supercluster::build(&[XLinkCluster::nvl72(), XLinkCluster::ualink(64)], shape, 4)
+    }
+
+    #[test]
+    fn builds_heterogeneous_clusters() {
+        let sc = two_cluster_sc(SuperclusterTopology::MultiClos);
+        assert_eq!(sc.cluster_count(), 2);
+        assert_eq!(sc.accelerator_count(), 72 + 64);
+        assert_eq!(sc.mem_trays.len(), 4);
+    }
+
+    #[test]
+    fn intra_cluster_two_hops() {
+        let mut sc = two_cluster_sc(SuperclusterTopology::MultiClos);
+        let r = sc.transfer_accel((0, 0), (0, 71), 4096, 0.0).unwrap();
+        assert_eq!(r.hops, 2);
+    }
+
+    #[test]
+    fn inter_cluster_crosses_bridges_and_pays_conversion() {
+        let mut sc = two_cluster_sc(SuperclusterTopology::MultiClos);
+        let intra = sc.transfer_accel((0, 0), (0, 1), 4096, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let inter = sc.transfer_accel((0, 0), (1, 0), 4096, 0.0).unwrap();
+        assert!(inter.hops > intra.hops);
+        assert!(inter.latency > intra.latency);
+    }
+
+    #[test]
+    fn bridge_cache_cuts_conversion_cost() {
+        let mut plain = two_cluster_sc(SuperclusterTopology::MultiClos);
+        let mut cached = two_cluster_sc(SuperclusterTopology::MultiClos).with_bridge_cache(0.9);
+        let a = plain.transfer_accel((0, 0), (1, 0), 64, 0.0).unwrap();
+        let b = cached.transfer_accel((0, 0), (1, 0), 64, 0.0).unwrap();
+        assert!(b.latency < a.latency);
+    }
+
+    #[test]
+    fn all_fig41_shapes_connect() {
+        for shape in [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly] {
+            let mut sc = Supercluster::build(
+                &[XLinkCluster::nvl72(), XLinkCluster::nvl72(), XLinkCluster::ualink(32), XLinkCluster::ualink(32)],
+                shape,
+                2,
+            );
+            assert!(sc.transfer_accel((0, 0), (3, 0), 1024, 0.0).is_some(), "{shape:?} disconnected");
+            assert!(sc.transfer_to_tray((1, 3), 0, 1024, 0.0).is_some());
+        }
+    }
+
+    #[test]
+    fn tray_reachable_from_all_clusters() {
+        let mut sc = two_cluster_sc(SuperclusterTopology::MultiClos);
+        for c in 0..sc.cluster_count() {
+            let r = sc.transfer_to_tray((c, 0), 0, 4096, 0.0).unwrap();
+            assert!(r.latency < 2000.0, "tray access from cluster {c}: {}", r.latency);
+        }
+    }
+
+    #[test]
+    fn ualink_cluster_cap_enforced() {
+        let c = XLinkCluster::ualink(1024);
+        assert_eq!(c.accelerators, 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ualink_over_cap_panics() {
+        let _ = XLinkCluster::ualink(1025);
+    }
+}

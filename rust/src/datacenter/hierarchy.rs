@@ -1,0 +1,288 @@
+//! Row / floor / building hierarchy (§3.3, Fig 19/20) and the communication
+//! paths between hierarchy levels for conventional vs composable designs.
+//!
+//! The key §4.3 claim: a conventional data center's scale-up domain ends at
+//! the rack (NVLink inside, ToR + Ethernet/InfiniBand beyond), while the
+//! composable design extends the scale-up domain to the whole **row** by
+//! replacing ToR switches with cascaded MoR CXL switch trays; Ethernet/IB
+//! only carries inter-row traffic.
+
+use super::rack::{Rack, RackKind};
+use crate::fabric::link::LinkSpec;
+use crate::fabric::netstack::SoftwareStack;
+
+/// Where two communicating endpoints sit relative to each other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HierarchyLevel {
+    /// Same node (C2C / in-package).
+    Node,
+    /// Same rack.
+    Rack,
+    /// Same row, different racks.
+    Row,
+    /// Same floor, different rows.
+    Floor,
+    /// Same building, different floors.
+    Building,
+}
+
+impl HierarchyLevel {
+    /// All levels inner-to-outer.
+    pub fn all() -> [HierarchyLevel; 5] {
+        [Self::Node, Self::Rack, Self::Row, Self::Floor, Self::Building]
+    }
+}
+
+/// A communication path: ordered link hops + software stack wrapper.
+#[derive(Clone, Debug)]
+pub struct CommPath {
+    pub links: Vec<LinkSpec>,
+    pub stack: SoftwareStack,
+}
+
+impl CommPath {
+    /// End-to-end time to move `bytes` (ns): software + per-hop latencies +
+    /// bottleneck wire time.
+    pub fn time(&self, bytes: u64) -> f64 {
+        let hop: f64 = self.links.iter().map(|l| l.hop_latency()).sum();
+        let wire = self.links.iter().map(|l| l.wire_time(bytes)).fold(0.0, f64::max);
+        self.stack.cost(bytes) + hop + wire
+    }
+
+    /// Zero-byte round-trip-ish latency (ns).
+    pub fn base_latency(&self) -> f64 {
+        self.stack.fixed_cost() + self.links.iter().map(|l| l.hop_latency()).sum::<f64>()
+    }
+}
+
+/// Path between two accelerators at `level` in a **conventional** (GPU-
+/// integrated, §3.3/§3.4) data center.
+pub fn conventional_path(level: HierarchyLevel) -> CommPath {
+    match level {
+        HierarchyLevel::Node => CommPath { links: vec![LinkSpec::nvlink_c2c()], stack: SoftwareStack::hw_mediated() },
+        HierarchyLevel::Rack => CommPath {
+            links: vec![LinkSpec::nvlink5_bundle(), LinkSpec::nvlink5_bundle()],
+            stack: SoftwareStack::hw_mediated(),
+        },
+        // leave the rack: NIC -> ToR -> row aggregation -> ToR -> NIC, RDMA
+        HierarchyLevel::Row => CommPath {
+            links: vec![
+                LinkSpec::pcie5_x16(), // GPU->NIC
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::pcie5_x16(),
+            ],
+            stack: SoftwareStack::rdma_gpu_staged(),
+        },
+        HierarchyLevel::Floor => CommPath {
+            links: vec![
+                LinkSpec::pcie5_x16(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::pcie5_x16(),
+            ],
+            stack: SoftwareStack::rdma_gpu_staged(),
+        },
+        HierarchyLevel::Building => CommPath {
+            links: vec![
+                LinkSpec::pcie5_x16(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::pcie5_x16(),
+            ],
+            stack: SoftwareStack::rdma_gpu_staged(),
+        },
+    }
+}
+
+/// Path between two accelerators at `level` in the **composable CXL**
+/// design: the scale-up domain covers the whole row (MoR CXL cascades);
+/// Ethernet/IB only appears at floor/building scope.
+pub fn composable_path(level: HierarchyLevel) -> CommPath {
+    match level {
+        HierarchyLevel::Node => CommPath { links: vec![LinkSpec::nvlink_c2c()], stack: SoftwareStack::hw_mediated() },
+        HierarchyLevel::Rack => CommPath {
+            links: vec![LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16()],
+            stack: SoftwareStack::hw_mediated(),
+        },
+        // cross-rack within the row: two more CXL cascade hops, still HW path
+        HierarchyLevel::Row => CommPath {
+            links: vec![LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16()],
+            stack: SoftwareStack::hw_mediated(),
+        },
+        HierarchyLevel::Floor => CommPath {
+            links: vec![
+                LinkSpec::cxl3_x16(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::cxl3_x16(),
+            ],
+            stack: SoftwareStack::rdma_verbs(),
+        },
+        HierarchyLevel::Building => CommPath {
+            links: vec![
+                LinkSpec::cxl3_x16(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::ethernet_800g(),
+                LinkSpec::cxl3_x16(),
+            ],
+            stack: SoftwareStack::rdma_verbs(),
+        },
+    }
+}
+
+/// A row: compute racks + a network rack (Fig 19a).
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub racks: Vec<Rack>,
+    /// Network racks dedicated to aggregation switching.
+    pub network_racks: usize,
+}
+
+impl Row {
+    /// Conventional row of `n` NVL72 racks.
+    pub fn conventional(n: usize) -> Row {
+        Row { racks: (0..n).map(|_| Rack::nvl72()).collect(), network_racks: 1 }
+    }
+
+    /// Composable row: alternating accelerator-heavy and memory-heavy racks.
+    pub fn composable(n: usize) -> Row {
+        let racks = (0..n)
+            .map(|i| if i % 4 == 3 { Rack::composable(0, 128, 16) } else { Rack::composable(64, 16, 8) })
+            .collect();
+        Row { racks, network_racks: 1 }
+    }
+
+    /// Accelerators in the row.
+    pub fn accelerator_count(&self) -> usize {
+        self.racks.iter().map(|r| r.accelerator_count()).sum()
+    }
+
+    /// Total memory (bytes).
+    pub fn memory_capacity(&self) -> u64 {
+        self.racks.iter().map(|r| r.memory_capacity()).sum()
+    }
+}
+
+/// A floor: rows in a grid (Fig 19b: ~20–30 racks per row, several rows).
+#[derive(Clone, Debug)]
+pub struct Floor {
+    pub rows: Vec<Row>,
+}
+
+impl Floor {
+    /// `rows` rows of `racks_per_row` racks each.
+    pub fn new(rows: usize, racks_per_row: usize, kind: RackKind) -> Floor {
+        let mk = |_: usize| match kind {
+            RackKind::Nvl72 => Row::conventional(racks_per_row),
+            RackKind::ComposableCxl => Row::composable(racks_per_row),
+        };
+        Floor { rows: (0..rows).map(mk).collect() }
+    }
+
+    /// Accelerators on the floor.
+    pub fn accelerator_count(&self) -> usize {
+        self.rows.iter().map(|r| r.accelerator_count()).sum()
+    }
+
+    /// Racks on the floor.
+    pub fn rack_count(&self) -> usize {
+        self.rows.iter().map(|r| r.racks.len() + r.network_racks).sum()
+    }
+}
+
+/// A building: floors joined by multi-tier spine-leaf (Fig 20).
+#[derive(Clone, Debug)]
+pub struct Building {
+    pub floors: Vec<Floor>,
+}
+
+impl Building {
+    /// `floors` floors of `rows`×`racks_per_row`.
+    pub fn new(floors: usize, rows: usize, racks_per_row: usize, kind: RackKind) -> Building {
+        Building { floors: (0..floors).map(|_| Floor::new(rows, racks_per_row, kind)).collect() }
+    }
+
+    /// Total accelerators — "thousands to tens of thousands of GPUs" (§3.3).
+    pub fn accelerator_count(&self) -> usize {
+        self.floors.iter().map(|f| f.accelerator_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::US;
+
+    #[test]
+    fn conventional_latency_cliff_at_rack_boundary() {
+        // §3.3/§4.1: leaving the rack switches from hardware scale-up to
+        // software scale-out — an order-of-magnitude latency cliff.
+        let rack = conventional_path(HierarchyLevel::Rack).base_latency();
+        let row = conventional_path(HierarchyLevel::Row).base_latency();
+        assert!(row > 10.0 * rack, "rack={rack} row={row}");
+        assert!(row > 1.0 * US, "row must exceed 1 us (Table 2), got {row}");
+    }
+
+    #[test]
+    fn composable_extends_scale_up_to_row() {
+        // §4.3: the composable design keeps row-scope traffic hardware-
+        // mediated — no cliff until the floor boundary.
+        let rack = composable_path(HierarchyLevel::Rack).base_latency();
+        let row = composable_path(HierarchyLevel::Row).base_latency();
+        assert!(row < 4.0 * rack, "rack={rack} row={row}");
+        assert!(row < 1.0 * US, "row stays sub-us, got {row}");
+    }
+
+    #[test]
+    fn composable_beats_conventional_at_row_scope() {
+        let conv = conventional_path(HierarchyLevel::Row).time(4096);
+        let comp = composable_path(HierarchyLevel::Row).time(4096);
+        assert!(conv / comp > 10.0, "conv={conv} comp={comp}");
+    }
+
+    #[test]
+    fn same_node_paths_identical() {
+        let a = conventional_path(HierarchyLevel::Node).time(1 << 20);
+        let b = composable_path(HierarchyLevel::Node).time(1 << 20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn latency_monotone_outward() {
+        for path_fn in [conventional_path as fn(HierarchyLevel) -> CommPath, composable_path] {
+            let mut prev = 0.0;
+            for l in HierarchyLevel::all() {
+                let t = path_fn(l).base_latency();
+                assert!(t >= prev, "{l:?}: {t} < {prev}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn building_scale_tens_of_thousands() {
+        let b = Building::new(4, 8, 25, RackKind::Nvl72);
+        let n = b.accelerator_count();
+        assert!(n > 10_000, "n={n}");
+    }
+
+    #[test]
+    fn floor_counts_network_racks() {
+        let f = Floor::new(2, 10, RackKind::Nvl72);
+        assert_eq!(f.rack_count(), 2 * 11);
+    }
+}

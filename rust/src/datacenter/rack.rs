@@ -1,0 +1,264 @@
+//! Rack-level architectures (§3.3 Fig 18, §4.3 Fig 26/27).
+//!
+//! Two rack designs face off throughout the paper:
+//!
+//! * **NVL72** — 18 compute nodes (72 GPUs) on 9 NVSwitch planes: a
+//!   single-hop Clos scale-up domain, plus a ToR switch for everything that
+//!   leaves the rack (scale-out).
+//! * **Composable CXL rack** — accelerator, compute and memory trays around
+//!   middle-of-rack (MoR) CXL switch trays: a multi-level CXL scale-up
+//!   domain in which *memory devices are first-class fabric endpoints*.
+
+use super::node::{AcceleratorSpec, CpuSpec};
+use super::tray::{MemoryTrayKind, Tray, TrayKind};
+use crate::fabric::cxl::CxlStack;
+use crate::fabric::link::LinkSpec;
+use crate::fabric::routing::RoutingPolicy;
+use crate::fabric::switch::SwitchSpec;
+use crate::fabric::topology::{NodeId, NodeKind, Topology, TopologyKind};
+use crate::fabric::Fabric;
+use crate::mem::media::MediaSpec;
+use crate::GIB;
+
+/// Rack flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RackKind {
+    /// Conventional NVL72-class GPU rack.
+    Nvl72,
+    /// Composable CXL tray rack (the paper's proposal).
+    ComposableCxl,
+}
+
+/// Fabric of one rack plus endpoint directories.
+#[derive(Debug)]
+pub struct RackFabric {
+    pub fabric: Fabric,
+    /// Accelerator endpoints.
+    pub accels: Vec<NodeId>,
+    /// Memory-device endpoints (empty for NVL72 — memory is not a fabric
+    /// endpoint in conventional racks).
+    pub mem_devices: Vec<NodeId>,
+    /// CPU endpoints.
+    pub cpus: Vec<NodeId>,
+}
+
+/// One rack.
+#[derive(Clone, Debug)]
+pub struct Rack {
+    pub kind: RackKind,
+    pub trays: Vec<Tray>,
+}
+
+impl Rack {
+    /// Standard NVL72: 18 nodes × 4 GPUs + 2 CPUs, 9 NVSwitch trays, ToR.
+    pub fn nvl72() -> Rack {
+        let mut trays = Vec::new();
+        for i in 0..18 {
+            trays.push(Tray::accelerators(format!("node{i}-gpus"), AcceleratorSpec::b200(), 4));
+            trays.push(Tray::compute(format!("node{i}-cpus"), CpuSpec::grace(), 2));
+        }
+        for i in 0..9 {
+            trays.push(Tray {
+                name: format!("nvswitch{i}"),
+                kind: TrayKind::CxlSwitch { switches: vec![SwitchSpec::nvswitch()] },
+                rack_units: 1,
+            });
+        }
+        trays.push(Tray {
+            name: "tor".into(),
+            kind: TrayKind::Network { switches: vec![SwitchSpec::ethernet_tor()] },
+            rack_units: 1,
+        });
+        Rack { kind: RackKind::Nvl72, trays }
+    }
+
+    /// Composable CXL rack: `accel` B200-class accelerators on accelerator
+    /// trays (8 per tray), `mem_tib` TiB of DDR5 across memory-box trays,
+    /// CPU compute trays, and MoR CXL switch trays.
+    pub fn composable(accel: usize, mem_tib: u64, cpus: usize) -> Rack {
+        let mut trays = Vec::new();
+        for (i, n) in split_into(accel, 8).into_iter().enumerate() {
+            trays.push(Tray::accelerators(format!("accel{i}"), AcceleratorSpec::b200(), n));
+        }
+        // memory trays: 8 devices × 512 GiB = 4 TiB per tray
+        let tray_cap_tib = 4;
+        let n_mem_trays = (mem_tib as usize).div_ceil(tray_cap_tib);
+        for i in 0..n_mem_trays {
+            trays.push(Tray::memory(
+                format!("mem{i}"),
+                MemoryTrayKind::MemoryBox,
+                MediaSpec::ddr5(),
+                8,
+                512 * GIB,
+                CxlStack::capacity_oriented(),
+            ));
+        }
+        for (i, n) in split_into(cpus, 4).into_iter().enumerate() {
+            trays.push(Tray::compute(format!("cpu{i}"), CpuSpec::grace(), n));
+        }
+        // MoR switch trays: enough CXL3 switches for all endpoints
+        let endpoints = accel + n_mem_trays * 8 + cpus;
+        let n_switches = endpoints.div_ceil(48).max(2); // leave uplink ports
+        trays.push(Tray::cxl_switch("mor", SwitchSpec::cxl3_switch(), n_switches));
+        Rack { kind: RackKind::ComposableCxl, trays }
+    }
+
+    /// Accelerators in the rack.
+    pub fn accelerator_count(&self) -> usize {
+        self.trays.iter().map(|t| t.accelerator_count()).sum()
+    }
+
+    /// Total memory capacity (bytes) across all trays.
+    pub fn memory_capacity(&self) -> u64 {
+        self.trays.iter().map(|t| t.memory_capacity()).sum()
+    }
+
+    /// Pool-eligible (memory-tray) capacity only.
+    pub fn pooled_memory_capacity(&self) -> u64 {
+        self.trays
+            .iter()
+            .filter(|t| matches!(t.kind, TrayKind::Memory { .. }))
+            .map(|t| t.memory_capacity())
+            .sum()
+    }
+
+    /// Relative cost of the rack.
+    pub fn cost_units(&self) -> f64 {
+        self.trays.iter().map(|t| t.cost_units()).sum()
+    }
+
+    /// Build the rack's scale-up fabric.
+    pub fn scale_up_fabric(&self) -> RackFabric {
+        match self.kind {
+            RackKind::Nvl72 => self.nvl72_fabric(),
+            RackKind::ComposableCxl => self.composable_fabric(),
+        }
+    }
+
+    fn nvl72_fabric(&self) -> RackFabric {
+        // 72 GPUs each wired to 9 NVSwitch planes (2 links per plane).
+        let n_gpu = self.accelerator_count();
+        let topo = Topology::single_clos(n_gpu, 9);
+        let accels = topo.endpoints().to_vec();
+        let fabric = Fabric::new(topo, LinkSpec::nvlink5_bundle(), RoutingPolicy::Hbr);
+        RackFabric { fabric, accels, mem_devices: Vec::new(), cpus: Vec::new() }
+    }
+
+    fn composable_fabric(&self) -> RackFabric {
+        // Multi-level CXL: endpoints (accels, mem devices, cpus) on MoR
+        // switches; leaf switches cascade through a spine pair (PBR).
+        let mut topo = Topology::empty(TopologyKind::MultiClos);
+        let spine_a = topo.add_node(NodeKind::Switch);
+        let spine_b = topo.add_node(NodeKind::Switch);
+        let mut accels = Vec::new();
+        let mut mem_devices = Vec::new();
+        let mut cpus = Vec::new();
+        let mut leaf = topo.add_node(NodeKind::Switch);
+        topo.add_link(leaf, spine_a);
+        topo.add_link(leaf, spine_b);
+        let mut leaf_load = 0usize;
+        let place = |topo: &mut Topology, leaf: &mut NodeId, leaf_load: &mut usize| {
+            if *leaf_load >= 48 {
+                let nl = topo.add_node(NodeKind::Switch);
+                topo.add_link(nl, spine_a);
+                topo.add_link(nl, spine_b);
+                *leaf = nl;
+                *leaf_load = 0;
+            }
+            let e = topo.add_node(NodeKind::Endpoint);
+            topo.add_link(e, *leaf);
+            *leaf_load += 1;
+            e
+        };
+        for t in &self.trays {
+            match &t.kind {
+                TrayKind::Accelerator { accels: a } => {
+                    for _ in a {
+                        accels.push(place(&mut topo, &mut leaf, &mut leaf_load));
+                    }
+                }
+                TrayKind::Memory { devices, .. } => {
+                    for _ in devices {
+                        mem_devices.push(place(&mut topo, &mut leaf, &mut leaf_load));
+                    }
+                }
+                TrayKind::Compute { cpus: c } => {
+                    for _ in c {
+                        cpus.push(place(&mut topo, &mut leaf, &mut leaf_load));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let fabric = Fabric::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+        RackFabric { fabric, accels, mem_devices, cpus }
+    }
+}
+
+fn split_into(total: usize, chunk: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = total;
+    while left > 0 {
+        let n = left.min(chunk);
+        out.push(n);
+        left -= n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvl72_counts() {
+        let r = Rack::nvl72();
+        assert_eq!(r.accelerator_count(), 72);
+        let f = r.scale_up_fabric();
+        assert_eq!(f.accels.len(), 72);
+        assert!(f.mem_devices.is_empty(), "conventional rack: memory is not a fabric endpoint");
+    }
+
+    #[test]
+    fn nvl72_two_hop_scale_up() {
+        let r = Rack::nvl72();
+        let f = r.scale_up_fabric();
+        assert_eq!(f.fabric.hops(f.accels[0], f.accels[71]).unwrap(), 2);
+    }
+
+    #[test]
+    fn composable_has_memory_endpoints() {
+        let r = Rack::composable(32, 16, 8);
+        let f = r.scale_up_fabric();
+        assert_eq!(f.accels.len(), 32);
+        assert_eq!(f.mem_devices.len(), 4 * 8); // 16 TiB / 4 TiB-per-tray * 8 devices
+        assert_eq!(f.cpus.len(), 8);
+    }
+
+    #[test]
+    fn composable_accel_reaches_memory_in_fabric() {
+        let r = Rack::composable(16, 8, 4);
+        let mut f = r.scale_up_fabric();
+        let a = f.accels[0];
+        let m = f.mem_devices[0];
+        let res = f.fabric.transfer(a, m, 4096, 0.0).unwrap();
+        assert!(res.hops >= 2 && res.hops <= 4, "hops={}", res.hops);
+        // Must be within the CXL latency class (§: 100-250ns + wire)
+        assert!(res.latency < 1000.0, "lat={}", res.latency);
+    }
+
+    #[test]
+    fn composable_memory_scales_independently() {
+        let small = Rack::composable(32, 8, 8);
+        let big = Rack::composable(32, 64, 8);
+        assert_eq!(small.accelerator_count(), big.accelerator_count());
+        assert!(big.pooled_memory_capacity() >= 8 * small.pooled_memory_capacity() - 1);
+    }
+
+    #[test]
+    fn memory_capacity_tens_of_tb() {
+        // Table 2: "> tens of TBs per node" for composable racks.
+        let r = Rack::composable(32, 64, 8);
+        assert!(r.pooled_memory_capacity() >= 64 * 1024 * crate::GIB);
+    }
+}

@@ -1,0 +1,171 @@
+//! Composable tray taxonomy (§4.3, §5.1, Fig 26/28).
+//!
+//! Each tray is a standardized hardware unit dedicated to one resource type.
+//! Memory trays come in two builds (Fig 28): **JBOM** (arrays of EDSFF
+//! expander modules — standardized but CXL+memory controllers are replaced
+//! together with the media, raising TCO) and **memory-box SoC** (decoupled
+//! controllers on a SoC driving raw DIMMs — cheaper media swaps and legacy
+//! DIMM reuse, at higher design complexity).
+
+use super::node::{AcceleratorSpec, CpuSpec};
+use crate::fabric::cxl::CxlStack;
+use crate::fabric::switch::SwitchSpec;
+use crate::mem::media::MediaSpec;
+use crate::mem::pool::MemoryDevice;
+
+/// Memory tray construction style (Fig 28a/b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryTrayKind {
+    /// Just-a-Bunch-Of-Memory: EDSFF expander array; controller and media
+    /// are fused per module.
+    Jbom,
+    /// Dedicated memory box: SoC with decoupled CXL + DRAM controllers
+    /// driving raw/legacy DIMMs.
+    MemoryBox,
+    /// Hybrid tray: HBM buffer in front of bulk media (Fig 28d).
+    HybridHbmBuffered,
+}
+
+impl MemoryTrayKind {
+    /// Relative cost multiplier on the media price (TCO discussion, §5.1):
+    /// JBOM pays fused controllers per module; memory boxes amortize the
+    /// SoC and reuse legacy DIMMs; hybrids add HBM buffer cost.
+    pub fn cost_multiplier(self) -> f64 {
+        match self {
+            MemoryTrayKind::Jbom => 1.35,
+            MemoryTrayKind::MemoryBox => 1.10,
+            MemoryTrayKind::HybridHbmBuffered => 1.25,
+        }
+    }
+
+    /// Does the tray hide media latency behind an HBM buffer?
+    pub fn buffered(self) -> bool {
+        matches!(self, MemoryTrayKind::HybridHbmBuffered)
+    }
+}
+
+/// What a tray holds.
+#[derive(Clone, Debug)]
+pub enum TrayKind {
+    /// Memory tray: devices + build style + protocol stack on its port.
+    Memory { kind: MemoryTrayKind, devices: Vec<MemoryDevice>, stack: CxlStack },
+    /// Accelerator tray (Fig 26b).
+    Accelerator { accels: Vec<AcceleratorSpec> },
+    /// Compute (CPU-only) tray — deliberately memory-less (§4.3).
+    Compute { cpus: Vec<CpuSpec> },
+    /// Dedicated CXL switch tray (MoR module, §4.3).
+    CxlSwitch { switches: Vec<SwitchSpec> },
+    /// Scale-out network tray (Ethernet / InfiniBand).
+    Network { switches: Vec<SwitchSpec> },
+    /// Storage tray.
+    Storage { devices: Vec<MemoryDevice> },
+}
+
+/// A tray in a rack slot.
+#[derive(Clone, Debug)]
+pub struct Tray {
+    pub name: String,
+    pub kind: TrayKind,
+    /// Rack units occupied.
+    pub rack_units: u32,
+}
+
+impl Tray {
+    /// Memory tray of `n` devices of `cap` bytes each.
+    pub fn memory(name: impl Into<String>, kind: MemoryTrayKind, media: MediaSpec, n: usize, cap: u64, stack: CxlStack) -> Tray {
+        let devices = (0..n).map(|i| MemoryDevice::new(format!("dev{i}"), media, cap)).collect();
+        Tray { name: name.into(), kind: TrayKind::Memory { kind, devices, stack }, rack_units: 2 }
+    }
+
+    /// Accelerator tray of `n` accelerators.
+    pub fn accelerators(name: impl Into<String>, spec: AcceleratorSpec, n: usize) -> Tray {
+        Tray { name: name.into(), kind: TrayKind::Accelerator { accels: vec![spec; n] }, rack_units: 4 }
+    }
+
+    /// Compute tray of `n` CPUs (no local memory by design).
+    pub fn compute(name: impl Into<String>, spec: CpuSpec, n: usize) -> Tray {
+        Tray { name: name.into(), kind: TrayKind::Compute { cpus: vec![spec; n] }, rack_units: 1 }
+    }
+
+    /// CXL switch tray (MoR).
+    pub fn cxl_switch(name: impl Into<String>, spec: SwitchSpec, n: usize) -> Tray {
+        Tray { name: name.into(), kind: TrayKind::CxlSwitch { switches: vec![spec; n] }, rack_units: 1 }
+    }
+
+    /// Memory capacity contributed by the tray (bytes).
+    pub fn memory_capacity(&self) -> u64 {
+        match &self.kind {
+            TrayKind::Memory { devices, .. } | TrayKind::Storage { devices } => devices.iter().map(|d| d.capacity).sum(),
+            TrayKind::Accelerator { accels } => accels.iter().map(|a| a.mem_capacity).sum(),
+            TrayKind::Compute { cpus } => cpus.iter().map(|c| c.mem_capacity).sum(),
+            _ => 0,
+        }
+    }
+
+    /// Accelerator count.
+    pub fn accelerator_count(&self) -> usize {
+        match &self.kind {
+            TrayKind::Accelerator { accels } => accels.len(),
+            _ => 0,
+        }
+    }
+
+    /// Relative cost of the tray (media + build multiplier + silicon).
+    pub fn cost_units(&self) -> f64 {
+        match &self.kind {
+            TrayKind::Memory { kind, devices, .. } => {
+                let media: f64 = devices.iter().map(|d| d.media.cost_per_gb * (d.capacity as f64 / 1e9)).sum();
+                media * kind.cost_multiplier()
+            }
+            TrayKind::Accelerator { accels } => accels.len() as f64 * 250.0,
+            TrayKind::Compute { cpus } => cpus.len() as f64 * 40.0,
+            TrayKind::CxlSwitch { switches } | TrayKind::Network { switches } => {
+                switches.iter().map(|s| s.cost_units * 30.0).sum()
+            }
+            TrayKind::Storage { devices } => {
+                devices.iter().map(|d| d.media.cost_per_gb * (d.capacity as f64 / 1e9)).sum()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::cxl::CxlStack;
+    use crate::GIB;
+
+    #[test]
+    fn memory_box_cheaper_than_jbom() {
+        let mk = |k| Tray::memory("m", k, MediaSpec::ddr5(), 8, 512 * GIB, CxlStack::capacity_oriented());
+        assert!(mk(MemoryTrayKind::MemoryBox).cost_units() < mk(MemoryTrayKind::Jbom).cost_units());
+    }
+
+    #[test]
+    fn tray_capacity_sums_devices() {
+        let t = Tray::memory("m", MemoryTrayKind::MemoryBox, MediaSpec::ddr5(), 8, 512 * GIB, CxlStack::full());
+        assert_eq!(t.memory_capacity(), 8 * 512 * GIB);
+    }
+
+    #[test]
+    fn compute_tray_has_cpu_memory_only() {
+        let t = Tray::compute("c", CpuSpec::grace(), 4);
+        assert_eq!(t.memory_capacity(), 4 * 480 * crate::GB);
+        assert_eq!(t.accelerator_count(), 0);
+    }
+
+    #[test]
+    fn accelerator_tray_counts() {
+        let t = Tray::accelerators("a", AcceleratorSpec::b200(), 8);
+        assert_eq!(t.accelerator_count(), 8);
+        assert_eq!(t.memory_capacity(), 8 * 192 * GIB);
+    }
+
+    #[test]
+    fn legacy_dimm_reuse_lowers_cost() {
+        // §5.1: memory boxes can mount DDR3/DDR4 legacy DIMMs for cost.
+        let ddr5 = Tray::memory("m5", MemoryTrayKind::MemoryBox, MediaSpec::ddr5(), 8, 512 * GIB, CxlStack::full());
+        let ddr3 = Tray::memory("m3", MemoryTrayKind::MemoryBox, MediaSpec::ddr3(), 8, 512 * GIB, CxlStack::full());
+        assert!(ddr3.cost_units() < ddr5.cost_units() / 2.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! CXL specification capability matrix (Table 1, §4.2).
+//!
+//! Encodes what each CXL generation can do — the feature deltas that drive
+//! the composability story: controller decoupling (1.0), single-level
+//! switching + pooling + hot-plug (2.0), multi-level cascades + PBR +
+//! genuine multi-host sharing + back-invalidation + P2P (3.0).
+
+use super::flit::FlitFormat;
+
+/// CXL specification generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CxlVersion {
+    /// CXL 1.0/1.1 — direct endpoint attach only.
+    V1_0,
+    /// CXL 2.0 — single-level switching, pooling, hot-plug, HBR.
+    V2_0,
+    /// CXL 3.x — multi-level cascades, PBR, sharing, back-invalidation, P2P.
+    V3_0,
+}
+
+impl CxlVersion {
+    /// Max link rate in GT/s (Table 1).
+    pub fn max_link_rate_gts(self) -> u32 {
+        match self {
+            CxlVersion::V1_0 | CxlVersion::V2_0 => 32,
+            CxlVersion::V3_0 => 64,
+        }
+    }
+
+    /// Flit formats supported.
+    pub fn flit_formats(self) -> &'static [FlitFormat] {
+        match self {
+            CxlVersion::V1_0 | CxlVersion::V2_0 => &[FlitFormat::CXL_68B],
+            CxlVersion::V3_0 => &[FlitFormat::CXL_68B, FlitFormat::CXL_256B],
+        }
+    }
+
+    /// Memory-controller decoupling (all versions — the founding feature).
+    pub fn controller_decoupling(self) -> bool {
+        true
+    }
+
+    /// Memory expansion beyond the CPU package.
+    pub fn memory_expansion(self) -> bool {
+        true
+    }
+
+    /// Memory pooling across hosts (2.0+, static partitioning).
+    pub fn memory_pooling(self) -> bool {
+        self >= CxlVersion::V2_0
+    }
+
+    /// Genuine multi-host coherent memory *sharing* (3.0).
+    pub fn memory_sharing(self) -> bool {
+        self >= CxlVersion::V3_0
+    }
+
+    /// Any switching at all (2.0+).
+    pub fn switching(self) -> bool {
+        self >= CxlVersion::V2_0
+    }
+
+    /// Multi-level switch cascading (3.0).
+    pub fn multi_level_switching(self) -> bool {
+        self >= CxlVersion::V3_0
+    }
+
+    /// Hierarchical-based routing (2.0+).
+    pub fn hbr(self) -> bool {
+        self >= CxlVersion::V2_0
+    }
+
+    /// Port-based routing (3.0).
+    pub fn pbr(self) -> bool {
+        self >= CxlVersion::V3_0
+    }
+
+    /// Hot-plug of endpoints (2.0+).
+    pub fn hot_plug(self) -> bool {
+        self >= CxlVersion::V2_0
+    }
+
+    /// Back-invalidation coherence (3.0).
+    pub fn back_invalidation(self) -> bool {
+        self >= CxlVersion::V3_0
+    }
+
+    /// Direct peer-to-peer device communication (3.0).
+    pub fn peer_to_peer(self) -> bool {
+        self >= CxlVersion::V3_0
+    }
+
+    /// Max accelerators (Type 1/2 devices) per root port (Table 1).
+    pub fn max_accelerators_per_port(self) -> usize {
+        match self {
+            CxlVersion::V1_0 | CxlVersion::V2_0 => 1,
+            CxlVersion::V3_0 => 256,
+        }
+    }
+
+    /// Max memory (Type 3) devices per root port (Table 1).
+    pub fn max_memory_devices_per_port(self) -> usize {
+        match self {
+            CxlVersion::V1_0 => 1,
+            CxlVersion::V2_0 => 256,
+            CxlVersion::V3_0 => 4096,
+        }
+    }
+
+    /// Practical memory-expander count per port for 2.0 deployments (§4.2:
+    /// "4 to 16 in practice, well below the theoretical 256").
+    pub fn practical_memory_devices_per_port(self) -> usize {
+        match self {
+            CxlVersion::V1_0 => 1,
+            CxlVersion::V2_0 => 16,
+            CxlVersion::V3_0 => 4096,
+        }
+    }
+
+    /// Release year (Table 1).
+    pub fn release_year(self) -> u32 {
+        match self {
+            CxlVersion::V1_0 => 2019,
+            CxlVersion::V2_0 => 2020,
+            CxlVersion::V3_0 => 2022,
+        }
+    }
+
+    /// All versions, oldest first.
+    pub fn all() -> [CxlVersion; 3] {
+        [CxlVersion::V1_0, CxlVersion::V2_0, CxlVersion::V3_0]
+    }
+}
+
+/// CXL sub-protocols (§6.2/§6.3 lightweight-implementation options).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CxlProtocol {
+    /// Cache-coherence traffic (CXL.cache).
+    Cache,
+    /// Load/store memory access (CXL.mem).
+    Mem,
+    /// Bulk I/O semantics (CXL.io).
+    Io,
+}
+
+/// A (possibly trimmed) protocol stack on a CXL device or switch — §6.3's
+/// lightweight implementations disable sub-protocols to cut cost/latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CxlStack {
+    pub cache: bool,
+    pub mem: bool,
+    pub io: bool,
+}
+
+impl CxlStack {
+    /// Full CXL stack.
+    pub fn full() -> Self {
+        CxlStack { cache: true, mem: true, io: true }
+    }
+
+    /// Coherence-centric lightweight stack (tier-1, §6.3).
+    pub fn coherence_centric() -> Self {
+        CxlStack { cache: true, mem: false, io: false }
+    }
+
+    /// Capacity-oriented stack (tier-2 pools, §6.3): CXL.mem only.
+    pub fn capacity_oriented() -> Self {
+        CxlStack { cache: false, mem: true, io: false }
+    }
+
+    /// Bulk-staging stack (tier-2 as storage-like, §6.3): CXL.io only.
+    pub fn io_only() -> Self {
+        CxlStack { cache: false, mem: false, io: true }
+    }
+
+    /// Supports coherent load/store sharing?
+    pub fn coherent_sharing(&self) -> bool {
+        self.cache
+    }
+
+    /// Supports direct load/store at all?
+    pub fn load_store(&self) -> bool {
+        self.mem || self.cache
+    }
+
+    /// Relative controller complexity (1.0 = full stack); trimmed stacks are
+    /// cheaper — the §6.3 cost argument.
+    pub fn complexity(&self) -> f64 {
+        let mut c = 0.2; // PHY + link baseline
+        if self.cache {
+            c += 0.4;
+        }
+        if self.mem {
+            c += 0.25;
+        }
+        if self.io {
+            c += 0.15;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_feature_matrix() {
+        use CxlVersion::*;
+        assert!(!V1_0.memory_pooling() && V2_0.memory_pooling() && V3_0.memory_pooling());
+        assert!(!V1_0.memory_sharing() && !V2_0.memory_sharing() && V3_0.memory_sharing());
+        assert!(!V1_0.switching() && V2_0.switching());
+        assert!(!V2_0.multi_level_switching() && V3_0.multi_level_switching());
+        assert!(!V2_0.pbr() && V3_0.pbr());
+        assert!(!V1_0.hot_plug() && V2_0.hot_plug());
+        assert!(!V2_0.back_invalidation() && V3_0.back_invalidation());
+        assert!(!V2_0.peer_to_peer() && V3_0.peer_to_peer());
+    }
+
+    #[test]
+    fn table1_device_counts() {
+        use CxlVersion::*;
+        assert_eq!(V1_0.max_memory_devices_per_port(), 1);
+        assert_eq!(V2_0.max_memory_devices_per_port(), 256);
+        assert_eq!(V3_0.max_memory_devices_per_port(), 4096);
+        assert_eq!(V2_0.max_accelerators_per_port(), 1);
+        assert_eq!(V3_0.max_accelerators_per_port(), 256);
+    }
+
+    #[test]
+    fn table1_link_rates() {
+        assert_eq!(CxlVersion::V2_0.max_link_rate_gts(), 32);
+        assert_eq!(CxlVersion::V3_0.max_link_rate_gts(), 64);
+        assert_eq!(CxlVersion::V3_0.flit_formats().len(), 2);
+    }
+
+    #[test]
+    fn lightweight_stacks_cheaper() {
+        let full = CxlStack::full().complexity();
+        assert!(CxlStack::coherence_centric().complexity() < full);
+        assert!(CxlStack::capacity_oriented().complexity() < full);
+        assert!(CxlStack::io_only().complexity() < CxlStack::capacity_oriented().complexity());
+    }
+
+    #[test]
+    fn trimmed_stack_semantics() {
+        assert!(CxlStack::coherence_centric().coherent_sharing());
+        assert!(!CxlStack::capacity_oriented().coherent_sharing());
+        assert!(CxlStack::capacity_oriented().load_store());
+        assert!(!CxlStack::io_only().load_store());
+    }
+}

@@ -1,0 +1,229 @@
+//! Link technology models (Table 3, §6.1).
+//!
+//! A [`LinkSpec`] captures one directed physical link: class, per-direction
+//! bandwidth, fixed per-hop latency (propagation + port logic), and the flit
+//! framing that expands payload into wire bytes. The constants are the
+//! paper's published figures:
+//!
+//! | Link | Unidirectional BW | Latency | Flit |
+//! |---|---|---|---|
+//! | CXL 3.0 x16 (PCIe 6.0) | 128 GB/s | 100–250 ns typical | 256 B PBR / 68 B HBR |
+//! | CXL 2.0 x16 (PCIe 5.0) | 64 GB/s | 100–250 ns | 68 B |
+//! | UALink 1.0 x4 | 100 GB/s | < 1 µs in-rack | 640 B |
+//! | NVLink 5.0 x2 | 50 GB/s | < 500 ns in-rack | 48–272 B packets |
+//! | NVLink C2C | 450 GB/s/dir (900 GB/s bidir) | ~90 ns | 272 B |
+//! | PCIe Gen5 x16 | 64 GB/s | ~300 ns | 256 B TLP |
+//! | Ethernet 800G | 100 GB/s | ~600 ns port-to-port | 9 KB jumbo |
+//! | InfiniBand NDR x4 | 50 GB/s | ~130 ns switch, µs-scale e2e | 4 KB MTU |
+
+use super::flit::FlitFormat;
+
+/// Broad class of a link (drives coherence capability and reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// CXL 1.0/1.1 point-to-point (no switching).
+    Cxl1,
+    /// CXL 2.0 (single-level switching, HBR).
+    Cxl2,
+    /// CXL 3.0+ (multi-level switching, PBR, back-invalidation).
+    Cxl3,
+    /// NVIDIA NVLink (5.0 unless stated).
+    NvLink,
+    /// NVLink chip-to-chip (Grace–Blackwell coherent link).
+    NvLinkC2C,
+    /// Ultra Accelerator Link 1.0.
+    UaLink,
+    /// Plain PCIe.
+    Pcie,
+    /// Ethernet scale-out fabric (RoCE capable).
+    Ethernet,
+    /// InfiniBand scale-out fabric.
+    InfiniBand,
+}
+
+impl LinkClass {
+    /// Does this link provide protocol-level (hardware) cache coherence?
+    /// Table 3: CXL yes; UALink no; NVLink only via C2C.
+    pub fn cache_coherent(self) -> bool {
+        matches!(self, LinkClass::Cxl1 | LinkClass::Cxl2 | LinkClass::Cxl3 | LinkClass::NvLinkC2C)
+    }
+
+    /// Does the link support memory pooling beyond its own cluster?
+    pub fn memory_pooling(self) -> bool {
+        matches!(self, LinkClass::Cxl2 | LinkClass::Cxl3)
+    }
+
+    /// Is this a scale-out (long-distance, software-stack) fabric?
+    pub fn scale_out(self) -> bool {
+        matches!(self, LinkClass::Ethernet | LinkClass::InfiniBand)
+    }
+}
+
+/// One directed link.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Human-readable name for reports.
+    pub name: &'static str,
+    pub class: LinkClass,
+    /// Bandwidth in bytes/ns (== GB/s), per direction.
+    pub bw: f64,
+    /// Fixed per-hop latency in ns (propagation + SerDes + port logic).
+    pub latency: f64,
+    /// Framing format.
+    pub flit: FlitFormat,
+}
+
+impl LinkSpec {
+    /// Time for the message body to stream over this link (ns).
+    pub fn wire_time(&self, payload_bytes: u64) -> f64 {
+        self.wire_bytes(payload_bytes) as f64 / self.bw
+    }
+
+    /// Wire bytes for a payload on this link.
+    pub fn wire_bytes(&self, payload_bytes: u64) -> u64 {
+        self.flit.wire_bytes(payload_bytes)
+    }
+
+    /// Per-hop fixed latency (ns).
+    pub fn hop_latency(&self) -> f64 {
+        self.latency
+    }
+
+    // ----- catalogue (Table 3 constants) ---------------------------------
+
+    /// CXL 3.0 x16 over PCIe 6.0: 128 GB/s, PBR 256 B flits, ~120 ns port hop
+    /// (paper: 100–250 ns typical end-to-end through one switch).
+    pub fn cxl3_x16() -> LinkSpec {
+        LinkSpec { name: "CXL3.0-x16", class: LinkClass::Cxl3, bw: 128.0, latency: 60.0, flit: FlitFormat::CXL_256B }
+    }
+
+    /// CXL 3.0 running in HBR mode (68 B flits, 32 GT/s → 64 GB/s).
+    pub fn cxl3_hbr_x16() -> LinkSpec {
+        LinkSpec { name: "CXL3.0-HBR-x16", class: LinkClass::Cxl3, bw: 64.0, latency: 60.0, flit: FlitFormat::CXL_68B }
+    }
+
+    /// CXL 2.0 x16 over PCIe 5.0: 64 GB/s, 68 B flits.
+    pub fn cxl2_x16() -> LinkSpec {
+        LinkSpec { name: "CXL2.0-x16", class: LinkClass::Cxl2, bw: 64.0, latency: 70.0, flit: FlitFormat::CXL_68B }
+    }
+
+    /// CXL 1.0/1.1 x16 direct endpoint attach.
+    pub fn cxl1_x16() -> LinkSpec {
+        LinkSpec { name: "CXL1.1-x16", class: LinkClass::Cxl1, bw: 64.0, latency: 80.0, flit: FlitFormat::CXL_68B }
+    }
+
+    /// Lightweight coherence-centric CXL (§6.3): protocol trimmed to
+    /// CXL.cache only — shorter pipeline, lower hop latency.
+    pub fn cxl_lightweight_coherence() -> LinkSpec {
+        LinkSpec { name: "CXL-lite-coh", class: LinkClass::Cxl3, bw: 128.0, latency: 40.0, flit: FlitFormat::CXL_256B }
+    }
+
+    /// Capacity-oriented lightweight CXL (§6.3): CXL.mem-only tier-2 pool
+    /// link; slightly higher latency budget, full bandwidth.
+    pub fn cxl_lightweight_mem() -> LinkSpec {
+        LinkSpec { name: "CXL-lite-mem", class: LinkClass::Cxl3, bw: 128.0, latency: 80.0, flit: FlitFormat::CXL_256B }
+    }
+
+    /// NVLink 5.0, one link (x2 lanes): 50 GB/s/dir.
+    pub fn nvlink5() -> LinkSpec {
+        LinkSpec { name: "NVLink5", class: LinkClass::NvLink, bw: 50.0, latency: 110.0, flit: FlitFormat::NVLINK_PACKET }
+    }
+
+    /// NVLink 5.0 full GPU port bundle (18 links = 900 GB/s/dir on Blackwell).
+    pub fn nvlink5_bundle() -> LinkSpec {
+        LinkSpec { name: "NVLink5-x18", class: LinkClass::NvLink, bw: 900.0, latency: 110.0, flit: FlitFormat::NVLINK_PACKET }
+    }
+
+    /// NVLink chip-to-chip (Grace<->Blackwell): 900 GB/s bidir = 450 GB/s/dir.
+    pub fn nvlink_c2c() -> LinkSpec {
+        LinkSpec { name: "NVLink-C2C", class: LinkClass::NvLinkC2C, bw: 450.0, latency: 90.0, flit: FlitFormat::NVLINK_PACKET }
+    }
+
+    /// UALink 1.0 x4 port: 100 GB/s/dir, 640 B flits.
+    pub fn ualink1_x4() -> LinkSpec {
+        LinkSpec { name: "UALink1-x4", class: LinkClass::UaLink, bw: 100.0, latency: 150.0, flit: FlitFormat::UALINK_640B }
+    }
+
+    /// PCIe Gen5 x16: 64 GB/s/dir.
+    pub fn pcie5_x16() -> LinkSpec {
+        LinkSpec { name: "PCIe5-x16", class: LinkClass::Pcie, bw: 64.0, latency: 150.0, flit: FlitFormat::PCIE_TLP }
+    }
+
+    /// PCIe Gen6 x16: 128 GB/s/dir.
+    pub fn pcie6_x16() -> LinkSpec {
+        LinkSpec { name: "PCIe6-x16", class: LinkClass::Pcie, bw: 128.0, latency: 140.0, flit: FlitFormat::PCIE_TLP }
+    }
+
+    /// 800G Ethernet port: 100 GB/s, jumbo frames. Port-to-port latency only;
+    /// the software stack cost lives in [`super::netstack`].
+    pub fn ethernet_800g() -> LinkSpec {
+        LinkSpec { name: "Eth-800G", class: LinkClass::Ethernet, bw: 100.0, latency: 600.0, flit: FlitFormat::ETHERNET_JUMBO }
+    }
+
+    /// 400G Ethernet port: 50 GB/s.
+    pub fn ethernet_400g() -> LinkSpec {
+        LinkSpec { name: "Eth-400G", class: LinkClass::Ethernet, bw: 50.0, latency: 600.0, flit: FlitFormat::ETHERNET_JUMBO }
+    }
+
+    /// InfiniBand NDR x4: 400 Gb/s = 50 GB/s, cut-through switches (~130 ns
+    /// per hop); end-to-end RDMA verbs cost modelled in `netstack`.
+    pub fn infiniband_ndr() -> LinkSpec {
+        LinkSpec { name: "IB-NDR", class: LinkClass::InfiniBand, bw: 50.0, latency: 130.0, flit: FlitFormat::INFINIBAND_4K }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_bandwidth_ordering() {
+        // Table 3: CXL3 128 > UALink 100 > NVLink/link 50 GB/s.
+        assert!(LinkSpec::cxl3_x16().bw > LinkSpec::ualink1_x4().bw);
+        assert!(LinkSpec::ualink1_x4().bw > LinkSpec::nvlink5().bw);
+    }
+
+    #[test]
+    fn table3_latency_ordering() {
+        // CXL (100-250ns) < NVLink (<500ns) < UALink (<1us) < Ethernet.
+        let cxl = LinkSpec::cxl3_x16().hop_latency();
+        let nv = LinkSpec::nvlink5().hop_latency();
+        let ua = LinkSpec::ualink1_x4().hop_latency();
+        let eth = LinkSpec::ethernet_800g().hop_latency();
+        assert!(cxl < nv && nv < ua && ua < eth);
+    }
+
+    #[test]
+    fn coherence_matrix_matches_table3() {
+        assert!(LinkClass::Cxl3.cache_coherent());
+        assert!(LinkClass::Cxl1.cache_coherent());
+        assert!(!LinkClass::UaLink.cache_coherent());
+        assert!(!LinkClass::NvLink.cache_coherent());
+        assert!(LinkClass::NvLinkC2C.cache_coherent());
+        assert!(!LinkClass::Ethernet.cache_coherent());
+    }
+
+    #[test]
+    fn pooling_only_on_switched_cxl() {
+        assert!(!LinkClass::Cxl1.memory_pooling());
+        assert!(LinkClass::Cxl2.memory_pooling());
+        assert!(LinkClass::Cxl3.memory_pooling());
+        assert!(!LinkClass::NvLink.memory_pooling());
+    }
+
+    #[test]
+    fn wire_time_scales_with_bytes() {
+        let l = LinkSpec::cxl3_x16();
+        let t1 = l.wire_time(1 << 20);
+        let t2 = l.wire_time(2 << 20);
+        assert!((t2 / t1 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn gb_transfer_time_sane() {
+        // 1 GB over 128 GB/s ~ 7.8-8.5 ms (framing adds ~6.7%).
+        let l = LinkSpec::cxl3_x16();
+        let t = l.wire_time(1_000_000_000);
+        assert!(t > 7.5e6 && t < 9.0e6, "t={t}");
+    }
+}

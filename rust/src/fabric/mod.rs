@@ -1,0 +1,341 @@
+//! Interconnect fabric models.
+//!
+//! This module implements every interconnect technology the paper discusses
+//! (Table 3): CXL 1.0/2.0/3.0 with HBR/PBR flits and routing, NVLink 5.0 and
+//! NVLink-C2C, UALink 1.0, PCIe Gen5/6, and the long-distance scale-out
+//! fabrics (Ethernet, InfiniBand) including the *software* overhead of
+//! RDMA/TCP stacks that §4.1 identifies as the root of the communication
+//! tax. On top of the link models sit switch models, topology builders
+//! (single-/multi-level Clos, 3D-Torus, DragonFly, fully-connected,
+//! spine-leaf — Fig 29/41), and routing policies (HBR vs PBR — Table 1).
+//!
+//! The [`Fabric`] type combines a topology with link/switch parameters and a
+//! per-edge contention model, exposing `transfer()` for the workload layer.
+
+pub mod cxl;
+pub mod flit;
+pub mod link;
+pub mod netstack;
+pub mod routing;
+pub mod switch;
+pub mod topology;
+
+pub use cxl::{CxlProtocol, CxlStack, CxlVersion};
+pub use flit::FlitFormat;
+pub use link::{LinkClass, LinkSpec};
+pub use netstack::SoftwareStack;
+pub use routing::RoutingPolicy;
+pub use switch::SwitchSpec;
+pub use topology::{NodeId, NodeKind, Topology, TopologyKind};
+
+use crate::sim::SimTime;
+
+/// Identifier of a directed edge within a [`Fabric`].
+pub type EdgeId = usize;
+
+/// A fabric: topology + per-edge link specs + contention state.
+///
+/// The transfer model is cut-through per hop: a message pays the
+/// propagation/processing latency of every hop once, plus wire
+/// (serialization) time on its *bottleneck* edge, plus queueing delay on any
+/// edge that is still busy with earlier traffic. Protocol framing expands
+/// payload bytes into wire bytes per the edge's flit format.
+#[derive(Debug)]
+pub struct Fabric {
+    topo: Topology,
+    /// Link spec per directed edge (parallel to `topo.edges`).
+    links: Vec<LinkSpec>,
+    /// Earliest time each directed edge is free.
+    busy_until: Vec<SimTime>,
+    /// Total payload bytes carried per edge (for utilization accounting).
+    carried: Vec<u64>,
+    policy: RoutingPolicy,
+    /// Total payload bytes transferred through the fabric.
+    total_payload: u64,
+    /// Total wire bytes (payload × framing expansion) transferred.
+    total_wire: u64,
+    transfers: u64,
+}
+
+/// Outcome of a single fabric transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferResult {
+    /// Time the last byte arrives at the destination.
+    pub arrival: SimTime,
+    /// End-to-end latency (arrival - depart).
+    pub latency: f64,
+    /// Number of hops traversed.
+    pub hops: usize,
+    /// Wire bytes put on the bottleneck edge.
+    pub wire_bytes: u64,
+    /// Queueing delay component (contention).
+    pub queueing: f64,
+}
+
+impl Fabric {
+    /// Build a fabric where every edge of `topo` uses the link spec chosen by
+    /// `link_for` (edge index, endpoint kinds) — heterogeneous fabrics like
+    /// CXL-over-XLink pick per-edge technologies here.
+    pub fn new_with(topo: Topology, policy: RoutingPolicy, link_for: impl Fn(EdgeId, &Topology) -> LinkSpec) -> Self {
+        let n = topo.edge_count();
+        let links: Vec<LinkSpec> = (0..n).map(|e| link_for(e, &topo)).collect();
+        Fabric {
+            busy_until: vec![0.0; n],
+            carried: vec![0; n],
+            links,
+            topo,
+            policy,
+            total_payload: 0,
+            total_wire: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Build a homogeneous fabric: every edge uses `link`.
+    pub fn new(topo: Topology, link: LinkSpec, policy: RoutingPolicy) -> Self {
+        Self::new_with(topo, policy, |_, _| link.clone())
+    }
+
+    /// The underlying topology.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Link spec of a directed edge.
+    pub fn link(&self, e: EdgeId) -> &LinkSpec {
+        &self.links[e]
+    }
+
+    /// Replace the link spec on one edge (heterogeneous fabric assembly).
+    pub fn set_link(&mut self, e: EdgeId, spec: LinkSpec) {
+        self.links[e] = spec;
+    }
+
+    /// Routing policy in force.
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Total payload bytes moved since construction.
+    pub fn total_payload(&self) -> u64 {
+        self.total_payload
+    }
+
+    /// Total wire bytes moved (payload × protocol framing expansion).
+    pub fn total_wire(&self) -> u64 {
+        self.total_wire
+    }
+
+    /// Number of transfers executed.
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Payload bytes carried per edge.
+    pub fn edge_carried(&self, e: EdgeId) -> u64 {
+        self.carried[e]
+    }
+
+    /// Fail a directed edge (failure injection). Failed edges advertise
+    /// infinite occupancy: PBR's congestion-aware choice routes around
+    /// them, while HBR's fixed hierarchical path cannot (Table 1's
+    /// resilience argument for port-based routing).
+    pub fn fail_edge(&mut self, e: EdgeId) {
+        self.busy_until[e] = f64::INFINITY;
+    }
+
+    /// Fail both directions of the link between two adjacent nodes.
+    pub fn fail_link(&mut self, a: NodeId, b: NodeId) {
+        for e in 0..self.topo.edge_count() {
+            let (s, d) = self.topo.edge(e);
+            if (s == a && d == b) || (s == b && d == a) {
+                self.busy_until[e] = f64::INFINITY;
+            }
+        }
+    }
+
+    /// Repair a failed edge.
+    pub fn repair_edge(&mut self, e: EdgeId) {
+        if self.busy_until[e].is_infinite() {
+            self.busy_until[e] = 0.0;
+        }
+    }
+
+    /// Reset contention and accounting state (fresh experiment run).
+    pub fn reset(&mut self) {
+        for b in &mut self.busy_until {
+            *b = 0.0;
+        }
+        for c in &mut self.carried {
+            *c = 0;
+        }
+        self.total_payload = 0;
+        self.total_wire = 0;
+        self.transfers = 0;
+    }
+
+    /// Pure latency estimate for `bytes` from `src` to `dst` ignoring
+    /// contention (used by placement heuristics and analytic models).
+    pub fn latency_estimate(&self, src: NodeId, dst: NodeId, bytes: u64) -> Option<f64> {
+        if src == dst {
+            return Some(0.0);
+        }
+        let route = self.policy.route(&self.topo, src, dst, &self.busy_until)?;
+        let mut lat = 0.0;
+        let mut bottleneck: f64 = 0.0;
+        for &e in route.edges() {
+            let l = &self.links[e];
+            lat += l.hop_latency();
+            bottleneck = bottleneck.max(l.wire_time(bytes));
+        }
+        Some(lat + bottleneck)
+    }
+
+    /// Execute a transfer departing at `now`. Returns `None` when no route
+    /// exists (disconnected topologies are an error the caller handles).
+    pub fn transfer(&mut self, src: NodeId, dst: NodeId, bytes: u64, now: SimTime) -> Option<TransferResult> {
+        if src == dst {
+            return Some(TransferResult { arrival: now, latency: 0.0, hops: 0, wire_bytes: 0, queueing: 0.0 });
+        }
+        let route = self.policy.route(&self.topo, src, dst, &self.busy_until)?;
+        let path = route.edges();
+        // a route through a failed (infinite-occupancy) edge never delivers
+        if path.iter().any(|&e| self.busy_until[e].is_infinite()) {
+            return None;
+        }
+        let mut t = now;
+        let mut queueing = 0.0;
+        let mut bottleneck_wire_time: f64 = 0.0;
+        let mut wire_bytes = 0u64;
+        // Cut-through: the head of the message pays hop latency per hop and
+        // waits for each edge to free; the body streams behind at the
+        // bottleneck edge's rate.
+        for &e in path {
+            let l = &self.links[e];
+            let free = self.busy_until[e];
+            if free > t {
+                queueing += free - t;
+                t = free;
+            }
+            t += l.hop_latency();
+            let wt = l.wire_time(bytes);
+            // Edge is occupied while the body streams through it.
+            self.busy_until[e] = t + wt;
+            self.carried[e] += bytes;
+            if wt > bottleneck_wire_time {
+                bottleneck_wire_time = wt;
+                wire_bytes = l.wire_bytes(bytes);
+            }
+        }
+        let arrival = t + bottleneck_wire_time;
+        self.total_payload += bytes;
+        self.total_wire += wire_bytes;
+        self.transfers += 1;
+        Some(TransferResult { arrival, latency: arrival - now, hops: path.len(), wire_bytes, queueing })
+    }
+
+    /// Hop count between two nodes under the current policy (None if
+    /// unreachable).
+    pub fn hops(&self, src: NodeId, dst: NodeId) -> Option<usize> {
+        if src == dst {
+            return Some(0);
+        }
+        self.policy.route(&self.topo, src, dst, &self.busy_until).map(|p| p.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::Topology;
+
+    fn line_fabric(n: usize, link: LinkSpec) -> Fabric {
+        let topo = Topology::line(n);
+        Fabric::new(topo, link, RoutingPolicy::Hbr)
+    }
+
+    #[test]
+    fn zero_byte_same_node() {
+        let mut f = line_fabric(3, LinkSpec::cxl3_x16());
+        let r = f.transfer(0, 0, 1024, 5.0).unwrap();
+        assert_eq!(r.arrival, 5.0);
+        assert_eq!(r.hops, 0);
+    }
+
+    #[test]
+    fn latency_grows_with_hops() {
+        let f1 = Fabric::new(Topology::switch_chain(1), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let f3 = Fabric::new(Topology::switch_chain(5), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let a = f1.latency_estimate(0, 1, 64).unwrap();
+        let b = f3.latency_estimate(0, 1, 64).unwrap();
+        assert!(b > a * 2.0, "a={a} b={b}");
+    }
+
+    #[test]
+    fn big_messages_pay_wire_time() {
+        let f = line_fabric(2, LinkSpec::cxl3_x16());
+        let small = f.latency_estimate(0, 1, 64).unwrap();
+        let big = f.latency_estimate(0, 1, 64 * 1024 * 1024).unwrap();
+        // 64 MiB at 128 GB/s ~ 0.5 ms >> port latency
+        assert!(big > small * 100.0);
+    }
+
+    #[test]
+    fn contention_queues_second_transfer() {
+        let mut f = line_fabric(2, LinkSpec::cxl3_x16());
+        let r1 = f.transfer(0, 1, 10_000_000, 0.0).unwrap();
+        let r2 = f.transfer(0, 1, 10_000_000, 0.0).unwrap();
+        assert!(r2.queueing > 0.0);
+        assert!(r2.arrival > r1.arrival);
+    }
+
+    #[test]
+    fn accounting_tracks_payload_and_wire() {
+        let mut f = line_fabric(2, LinkSpec::ualink1_x4());
+        f.transfer(0, 1, 1000, 0.0).unwrap();
+        assert_eq!(f.total_payload(), 1000);
+        assert!(f.total_wire() >= 1000, "framing should not shrink bytes");
+        assert_eq!(f.transfers(), 1);
+    }
+
+    #[test]
+    fn pbr_routes_around_failed_plane_hbr_cannot() {
+        // Table 1 resilience: PBR reroutes, HBR's fixed path dies.
+        let mk = |policy| Fabric::new(Topology::single_clos(4, 2), LinkSpec::cxl3_x16(), policy);
+        let mut hbr = mk(RoutingPolicy::Hbr);
+        let mut pbr = mk(RoutingPolicy::Pbr);
+        let eps = hbr.topology().endpoints().to_vec();
+        // find HBR's plane and fail it on both fabrics
+        let busy = vec![0.0; hbr.topology().edge_count()];
+        let hbr_path = RoutingPolicy::Hbr.route(hbr.topology(), eps[0], eps[1], &busy).unwrap().to_vec();
+        for &e in &hbr_path {
+            hbr.fail_edge(e);
+            pbr.fail_edge(e);
+        }
+        assert!(hbr.transfer(eps[0], eps[1], 64, 0.0).is_none(), "HBR must lose the path");
+        let r = pbr.transfer(eps[0], eps[1], 64, 0.0);
+        assert!(r.is_some(), "PBR must reroute via the surviving plane");
+    }
+
+    #[test]
+    fn repair_restores_hbr_path() {
+        let mut f = Fabric::new(Topology::star(4), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let eps = f.topology().endpoints().to_vec();
+        let busy = vec![0.0; f.topology().edge_count()];
+        let path = RoutingPolicy::Hbr.route(f.topology(), eps[0], eps[1], &busy).unwrap().to_vec();
+        f.fail_edge(path[0]);
+        assert!(f.transfer(eps[0], eps[1], 64, 0.0).is_none());
+        f.repair_edge(path[0]);
+        assert!(f.transfer(eps[0], eps[1], 64, 0.0).is_some());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut f = line_fabric(2, LinkSpec::cxl3_x16());
+        f.transfer(0, 1, 1 << 20, 0.0).unwrap();
+        f.reset();
+        assert_eq!(f.total_payload(), 0);
+        let r = f.transfer(0, 1, 64, 0.0).unwrap();
+        assert_eq!(r.queueing, 0.0);
+    }
+}

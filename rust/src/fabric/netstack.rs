@@ -1,0 +1,208 @@
+//! Software network-stack overhead models (§4.1).
+//!
+//! The paper's central quantitative claim about the baseline is that
+//! network-based connection technologies (Ethernet/InfiniBand with RDMA or
+//! TCP) carry *software-induced* overhead — privilege-mode transitions,
+//! redundant memory copies, interrupt handling, (de)serialization, and
+//! protocol processing — that raises effective latency by "tens to hundreds
+//! of times" over hardware-mediated interconnects like CXL (100–250 ns).
+//!
+//! [`SoftwareStack`] prices those terms explicitly so the baseline's cost is
+//! built from named components rather than a fudge factor, and so ablations
+//! can switch individual terms off.
+
+/// Cost model for the software path wrapped around a network transfer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SoftwareStack {
+    /// Reporting name.
+    pub name: &'static str,
+    /// Kernel/user privilege transitions per operation.
+    pub mode_switches: u32,
+    /// Cost of one privilege transition (ns).
+    pub mode_switch_ns: f64,
+    /// Redundant memory copies on the data path (bounce buffers, staging).
+    pub copies: u32,
+    /// Effective copy bandwidth (bytes/ns == GB/s).
+    pub copy_bw: f64,
+    /// Per-byte serialization/deserialization cost (ns/byte); zero for
+    /// zero-copy verbs.
+    pub serialize_ns_per_byte: f64,
+    /// Fixed protocol-processing + NIC doorbell + completion cost per
+    /// operation (ns).
+    pub per_op_ns: f64,
+    /// Interrupt / completion-handling cost per operation (ns); zero when
+    /// polling.
+    pub interrupt_ns: f64,
+}
+
+impl SoftwareStack {
+    /// Total software-side cost added to one transfer of `bytes` (ns).
+    pub fn cost(&self, bytes: u64) -> f64 {
+        let fixed = self.mode_switches as f64 * self.mode_switch_ns + self.per_op_ns + self.interrupt_ns;
+        let copy = if self.copies > 0 { self.copies as f64 * bytes as f64 / self.copy_bw } else { 0.0 };
+        let serde = self.serialize_ns_per_byte * bytes as f64;
+        fixed + copy + serde
+    }
+
+    /// Fixed (byte-independent) cost per operation (ns).
+    pub fn fixed_cost(&self) -> f64 {
+        self.mode_switches as f64 * self.mode_switch_ns + self.per_op_ns + self.interrupt_ns
+    }
+
+    /// Hardware-mediated path (CXL / NVLink load-store): no software on the
+    /// data path at all.
+    pub fn hw_mediated() -> SoftwareStack {
+        SoftwareStack {
+            name: "hw-mediated",
+            mode_switches: 0,
+            mode_switch_ns: 0.0,
+            copies: 0,
+            copy_bw: 1.0,
+            serialize_ns_per_byte: 0.0,
+            per_op_ns: 0.0,
+            interrupt_ns: 0.0,
+        }
+    }
+
+    /// Kernel-bypass RDMA verbs (one-sided read/write): no mode switches on
+    /// the data path, but WQE post + NIC processing + CQ poll, and one
+    /// staging copy on the conventional (non-GPUDirect) path.
+    pub fn rdma_verbs() -> SoftwareStack {
+        SoftwareStack {
+            name: "rdma-verbs",
+            mode_switches: 0,
+            mode_switch_ns: 0.0,
+            copies: 1,
+            copy_bw: 40.0,
+            serialize_ns_per_byte: 0.0,
+            per_op_ns: 1_400.0,
+            interrupt_ns: 0.0,
+        }
+    }
+
+    /// RDMA with GPU staging (no GPUDirect): device→host and host→device
+    /// bounce copies plus library mediation — the paper's "conventional
+    /// RDMA-based" accelerator path.
+    pub fn rdma_gpu_staged() -> SoftwareStack {
+        SoftwareStack {
+            name: "rdma-gpu-staged",
+            mode_switches: 2,
+            mode_switch_ns: 900.0,
+            copies: 2,
+            copy_bw: 25.0,
+            serialize_ns_per_byte: 0.0,
+            per_op_ns: 1_600.0,
+            interrupt_ns: 1_200.0,
+        }
+    }
+
+    /// TCP/IP over Ethernet: syscalls both sides, kernel copies,
+    /// interrupt-driven completion, protocol processing.
+    pub fn tcp() -> SoftwareStack {
+        SoftwareStack {
+            name: "tcp",
+            mode_switches: 4,
+            mode_switch_ns: 1_200.0,
+            copies: 2,
+            copy_bw: 12.0,
+            serialize_ns_per_byte: 0.02,
+            per_op_ns: 4_000.0,
+            interrupt_ns: 3_000.0,
+        }
+    }
+
+    /// GPUDirect RDMA (NCCL-style training collectives): kernel bypass and
+    /// zero staging copies; only WQE post + NIC processing remain.
+    pub fn rdma_gpudirect() -> SoftwareStack {
+        SoftwareStack {
+            name: "rdma-gpudirect",
+            mode_switches: 0,
+            mode_switch_ns: 0.0,
+            copies: 0,
+            copy_bw: 40.0,
+            serialize_ns_per_byte: 0.0,
+            per_op_ns: 1_400.0,
+            interrupt_ns: 0.0,
+        }
+    }
+
+    /// MPI over RDMA with persistent registered buffers (large-message HPC
+    /// path): zero staging copies, but datatype packing/serialization and
+    /// per-message library + verbs cost remain.
+    pub fn mpi_persistent() -> SoftwareStack {
+        SoftwareStack {
+            name: "mpi-persistent",
+            mode_switches: 0,
+            mode_switch_ns: 0.0,
+            copies: 0,
+            copy_bw: 40.0,
+            serialize_ns_per_byte: 0.005,
+            per_op_ns: 1_400.0,
+            interrupt_ns: 0.0,
+        }
+    }
+
+    /// Distributed storage / vector-database RPC path (the paper's RAG
+    /// baseline fetches from an SSD-backed retrieval system): RPC framing,
+    /// request scheduling, storage software stack. Media latency itself is
+    /// modelled by the memory/storage device, not here.
+    pub fn storage_rpc() -> SoftwareStack {
+        SoftwareStack {
+            name: "storage-rpc",
+            mode_switches: 6,
+            mode_switch_ns: 1_200.0,
+            copies: 3,
+            copy_bw: 10.0,
+            serialize_ns_per_byte: 0.05,
+            per_op_ns: 12_000.0,
+            interrupt_ns: 3_000.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_mediated_is_free() {
+        let s = SoftwareStack::hw_mediated();
+        assert_eq!(s.cost(0), 0.0);
+        assert_eq!(s.cost(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn paper_claim_tens_to_hundreds_x() {
+        // §4.1: software overheads raise latency by tens–hundreds× over the
+        // 100–250 ns hardware-mediated path, for small transfers.
+        let cxl_ns = 200.0;
+        for s in [SoftwareStack::rdma_verbs(), SoftwareStack::rdma_gpu_staged(), SoftwareStack::tcp()] {
+            let ratio = (s.cost(64) + cxl_ns) / cxl_ns;
+            assert!(ratio > 7.0, "{} ratio={ratio}", s.name);
+            assert!(ratio < 500.0, "{} ratio={ratio}", s.name);
+        }
+    }
+
+    #[test]
+    fn rdma_cheaper_than_tcp() {
+        let r = SoftwareStack::rdma_verbs();
+        let t = SoftwareStack::tcp();
+        assert!(r.cost(4096) < t.cost(4096));
+        assert!(r.cost(1 << 20) < t.cost(1 << 20));
+    }
+
+    #[test]
+    fn copies_dominate_bulk() {
+        let s = SoftwareStack::rdma_gpu_staged();
+        let small = s.cost(64);
+        let big = s.cost(1 << 30);
+        // 1 GiB with 2 copies at 25 GB/s ~ 85 ms >> fixed terms
+        assert!(big > small * 1000.0);
+    }
+
+    #[test]
+    fn fixed_cost_independent_of_bytes() {
+        let s = SoftwareStack::tcp();
+        assert_eq!(s.fixed_cost(), s.cost(0));
+    }
+}

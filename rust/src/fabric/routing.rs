@@ -1,0 +1,138 @@
+//! Routing policies: HBR vs PBR (Table 1, §4.2).
+//!
+//! * **HBR (hierarchical-based routing)** — CXL 2.0 semantics: one fixed
+//!   deterministic shortest path per (src, dst) pair; no load awareness.
+//! * **PBR (port-based routing)** — CXL 3.0 semantics: pick among
+//!   equal-cost shortest paths based on real-time port congestion, enabling
+//!   traffic spreading and genuine multi-path fabrics.
+
+use super::topology::{NodeId, Topology};
+use crate::sim::SimTime;
+use std::rc::Rc;
+
+/// A selected route: shared ownership of cached path storage — zero path
+/// copies on the hot transfer path (§Perf).
+#[derive(Clone, Debug)]
+pub enum Route {
+    /// The single cached shortest path (HBR).
+    Single(Rc<Vec<usize>>),
+    /// Index into a cached equal-cost candidate set (PBR).
+    OneOf(Rc<Vec<Vec<usize>>>, usize),
+}
+
+impl Route {
+    /// Edge ids along the path.
+    pub fn edges(&self) -> &[usize] {
+        match self {
+            Route::Single(p) => p,
+            Route::OneOf(set, i) => &set[*i],
+        }
+    }
+
+    /// Hop count.
+    pub fn len(&self) -> usize {
+        self.edges().len()
+    }
+
+    /// Zero-hop route?
+    pub fn is_empty(&self) -> bool {
+        self.edges().is_empty()
+    }
+
+    /// Materialize the edge list (tests / diagnostics).
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.edges().to_vec()
+    }
+}
+
+/// Path-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Fixed hierarchical path (CXL 2.0 / conventional up-down routing).
+    Hbr,
+    /// Congestion-aware equal-cost multipath (CXL 3.0).
+    Pbr,
+}
+
+impl RoutingPolicy {
+    /// Maximum equal-cost alternatives PBR considers.
+    const PBR_FANOUT: usize = 8;
+
+    /// Choose a path from `src` to `dst`. `busy_until` holds per-edge
+    /// occupancy (indexed by edge id) that PBR uses for load-aware choice.
+    pub fn route(&self, topo: &Topology, src: NodeId, dst: NodeId, busy_until: &[SimTime]) -> Option<Route> {
+        match self {
+            RoutingPolicy::Hbr => topo.shortest_path(src, dst).map(Route::Single),
+            RoutingPolicy::Pbr => {
+                let candidates = topo.equal_cost_paths_cached(src, dst, Self::PBR_FANOUT);
+                if candidates.is_empty() {
+                    return None;
+                }
+                // least-congested: minimize the max busy_until along the path
+                let mut best = 0usize;
+                let mut best_load = f64::INFINITY;
+                for (i, path) in candidates.iter().enumerate() {
+                    let load = path.iter().map(|&e| busy_until[e]).fold(0.0f64, f64::max);
+                    if load < best_load {
+                        best_load = load;
+                        best = i;
+                    }
+                }
+                Some(Route::OneOf(candidates, best))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::Topology;
+
+    #[test]
+    fn hbr_is_deterministic() {
+        let t = Topology::single_clos(8, 4);
+        let eps = t.endpoints().to_vec();
+        let busy = vec![0.0; t.edge_count()];
+        let a = RoutingPolicy::Hbr.route(&t, eps[0], eps[3], &busy).unwrap();
+        let b = RoutingPolicy::Hbr.route(&t, eps[0], eps[3], &busy).unwrap();
+        assert_eq!(a.to_vec(), b.to_vec());
+    }
+
+    #[test]
+    fn pbr_avoids_congested_plane() {
+        let t = Topology::single_clos(4, 2);
+        let eps = t.endpoints().to_vec();
+        let mut busy = vec![0.0; t.edge_count()];
+        // Find HBR's preferred path and congest it heavily.
+        let hbr_path = RoutingPolicy::Hbr.route(&t, eps[0], eps[1], &busy).unwrap().to_vec();
+        for &e in &hbr_path {
+            busy[e] = 1e9;
+        }
+        let pbr_path = RoutingPolicy::Pbr.route(&t, eps[0], eps[1], &busy).unwrap();
+        assert_ne!(pbr_path.to_vec(), hbr_path, "PBR should divert to the idle plane");
+        let load = pbr_path.edges().iter().map(|&e| busy[e]).fold(0.0f64, f64::max);
+        assert_eq!(load, 0.0);
+    }
+
+    #[test]
+    fn pbr_equals_hbr_length() {
+        // PBR only picks among *equal-cost* paths — no path inflation.
+        let t = Topology::multi_clos(32, 8, 4);
+        let eps = t.endpoints().to_vec();
+        let busy = vec![0.0; t.edge_count()];
+        let h = RoutingPolicy::Hbr.route(&t, eps[0], eps[31], &busy).unwrap();
+        let p = RoutingPolicy::Pbr.route(&t, eps[0], eps[31], &busy).unwrap();
+        assert_eq!(h.len(), p.len());
+    }
+
+    #[test]
+    fn unreachable_is_none() {
+        let mut t = Topology::empty(crate::fabric::topology::TopologyKind::Custom);
+        let a = t.add_node(crate::fabric::topology::NodeKind::Endpoint);
+        let b = t.add_node(crate::fabric::topology::NodeKind::Endpoint);
+        let busy: Vec<f64> = Vec::new();
+        assert!(RoutingPolicy::Hbr.route(&t, a, b, &busy).is_none());
+        assert!(RoutingPolicy::Pbr.route(&t, a, b, &busy).is_none());
+    }
+}

@@ -1,0 +1,135 @@
+//! Switch models: radix, latency, cost (Fig 29 trade-offs, §4.3 MoR/ToR).
+
+use super::link::LinkClass;
+
+/// One switch ASIC / tray model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwitchSpec {
+    pub name: &'static str,
+    /// Link technology on its ports.
+    pub class: LinkClass,
+    /// Number of ports.
+    pub radix: usize,
+    /// Per-port unidirectional bandwidth (bytes/ns == GB/s).
+    pub port_bw: f64,
+    /// Cut-through forwarding latency (ns).
+    pub latency: f64,
+    /// Relative cost unit (for Fig 29's cost axis; 1.0 = one CXL switch).
+    pub cost_units: f64,
+    /// Power draw (W), for TCO-style reporting.
+    pub power_w: f64,
+}
+
+impl SwitchSpec {
+    /// CXL 3.x PBR fabric switch (Table 1: multi-level cascade capable).
+    pub fn cxl3_switch() -> SwitchSpec {
+        SwitchSpec { name: "CXL3-switch", class: LinkClass::Cxl3, radix: 64, port_bw: 128.0, latency: 60.0, cost_units: 1.0, power_w: 150.0 }
+    }
+
+    /// CXL 2.0 switch (single-level only).
+    pub fn cxl2_switch() -> SwitchSpec {
+        SwitchSpec { name: "CXL2-switch", class: LinkClass::Cxl2, radix: 32, port_bw: 64.0, latency: 70.0, cost_units: 0.8, power_w: 120.0 }
+    }
+
+    /// NVSwitch generation 4 (NVL72 class).
+    pub fn nvswitch() -> SwitchSpec {
+        SwitchSpec { name: "NVSwitch4", class: LinkClass::NvLink, radix: 72, port_bw: 100.0, latency: 100.0, cost_units: 2.5, power_w: 300.0 }
+    }
+
+    /// UALink 1.0 switch.
+    pub fn ualink_switch() -> SwitchSpec {
+        SwitchSpec { name: "UALink-switch", class: LinkClass::UaLink, radix: 128, port_bw: 100.0, latency: 150.0, cost_units: 1.5, power_w: 200.0 }
+    }
+
+    /// Ethernet ToR/aggregation switch (Spectrum-X class).
+    pub fn ethernet_tor() -> SwitchSpec {
+        SwitchSpec { name: "Eth-ToR-800G", class: LinkClass::Ethernet, radix: 64, port_bw: 100.0, latency: 600.0, cost_units: 1.2, power_w: 350.0 }
+    }
+
+    /// InfiniBand Quantum-2 class switch.
+    pub fn infiniband_switch() -> SwitchSpec {
+        SwitchSpec { name: "IB-Quantum2", class: LinkClass::InfiniBand, radix: 64, port_bw: 50.0, latency: 130.0, cost_units: 1.8, power_w: 320.0 }
+    }
+
+    /// Aggregate switching bandwidth (bytes/ns).
+    pub fn aggregate_bw(&self) -> f64 {
+        self.radix as f64 * self.port_bw
+    }
+}
+
+/// Number of switches a topology shape needs for `n` endpoints (Fig 29's
+/// cost-growth comparison). Analytic counts, matching the builders in
+/// [`super::topology`].
+pub fn switches_required(kind: crate::fabric::topology::TopologyKind, n: usize, radix: usize) -> usize {
+    use crate::fabric::topology::TopologyKind::*;
+    match kind {
+        FullyConnected => 0,
+        Line | Custom => 0,
+        Star => 1,
+        SingleClos => {
+            // planes needed so that aggregate plane ports >= n endpoints,
+            // NVSwitch style: each endpoint takes one port on every plane, so
+            // a single-hop Clos works only while n <= radix; beyond that it
+            // cannot scale (the paper's rack-level scale-up ceiling).
+            if n <= radix {
+                1
+            } else {
+                usize::MAX // not constructible: scale-up ceiling
+            }
+        }
+        MultiClos => {
+            // leaves with radix/2 down-ports + radix/2 up-ports, plus spines.
+            let down = (radix / 2).max(1);
+            let leaves = n.div_ceil(down);
+            let spines = leaves.div_ceil(2).max(1);
+            leaves + spines
+        }
+        Torus3D => n,     // router integrated per node
+        DragonFly => n,   // router per node (one endpoint per router here)
+        SpineLeaf => {
+            let down = (radix / 2).max(1);
+            let tors = n.div_ceil(down);
+            let spines = tors.div_ceil(4).max(1);
+            tors + spines
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::TopologyKind;
+
+    #[test]
+    fn aggregate_bandwidth() {
+        let s = SwitchSpec::cxl3_switch();
+        assert_eq!(s.aggregate_bw(), 64.0 * 128.0);
+    }
+
+    #[test]
+    fn single_clos_scale_ceiling() {
+        // The paper: NVLink/UALink single-hop Clos is confined to rack scale.
+        assert_eq!(switches_required(TopologyKind::SingleClos, 64, 72), 1);
+        assert_eq!(switches_required(TopologyKind::SingleClos, 1024, 72), usize::MAX);
+    }
+
+    #[test]
+    fn multi_clos_grows_sublinearly() {
+        let a = switches_required(TopologyKind::MultiClos, 256, 64);
+        let b = switches_required(TopologyKind::MultiClos, 1024, 64);
+        assert!(b < a * 8, "a={a} b={b}");
+        assert!(b > a);
+    }
+
+    #[test]
+    fn direct_networks_embed_routers() {
+        assert_eq!(switches_required(TopologyKind::Torus3D, 512, 64), 512);
+        assert_eq!(switches_required(TopologyKind::DragonFly, 512, 64), 512);
+    }
+
+    #[test]
+    fn cxl_switch_fastest_fabric_switch() {
+        assert!(SwitchSpec::cxl3_switch().latency < SwitchSpec::nvswitch().latency);
+        assert!(SwitchSpec::nvswitch().latency < SwitchSpec::ethernet_tor().latency);
+    }
+}

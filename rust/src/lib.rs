@@ -1,0 +1,58 @@
+//! # commtax — Composable CXL / CXL-over-XLink AI-infrastructure simulator
+//!
+//! Reproduction of *"Compute Can't Handle the Truth: Why Communication Tax
+//! Prioritizes Memory and Interconnects in Modern AI Infrastructure"*
+//! (Myoungsoo Jung, Panmnesia, 2025).
+//!
+//! The library is organised in three layers:
+//!
+//! * **Substrates** — a discrete-event simulation core ([`sim`]), interconnect
+//!   fabric models ([`fabric`]: CXL 1.0/2.0/3.0, NVLink 5.0, NVLink-C2C,
+//!   UALink 1.0, PCIe, Ethernet/InfiniBand + the RDMA software stack), and a
+//!   memory subsystem ([`mem`]: media, composable pools, tiers, coherence,
+//!   KV-cache).
+//! * **Infrastructure** — hierarchical data-center composition
+//!   ([`datacenter`]: GB200 nodes, trays, NVL72 and composable CXL racks,
+//!   rows/floors/buildings, XLink clusters, CXL-over-XLink superclusters) and
+//!   the paper's workloads ([`workload`]: LLM training/inference, RAG,
+//!   Graph-RAG, DLRM, MPI PIC/CFD, collective communication).
+//! * **System** — the composable-resource coordinator ([`coordinator`]:
+//!   orchestrator, router, batcher, scheduler, placement, telemetry), the
+//!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]), and the end-to-end serving stack ([`serve`]).
+//!
+//! Units convention across the whole crate: **time in nanoseconds (f64)**,
+//! **sizes in bytes (u64)**, **bandwidth in bytes/ns (== GB/s)**.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datacenter;
+pub mod experiments;
+pub mod fabric;
+pub mod mem;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod testkit;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// One gibibyte in bytes.
+pub const GIB: u64 = 1 << 30;
+/// One gigabyte (decimal) in bytes.
+pub const GB: u64 = 1_000_000_000;
+/// One megabyte (decimal) in bytes.
+pub const MB: u64 = 1_000_000;
+/// One kilobyte (decimal) in bytes.
+pub const KB: u64 = 1_000;
+
+/// Nanoseconds per microsecond.
+pub const US: f64 = 1_000.0;
+/// Nanoseconds per millisecond.
+pub const MS: f64 = 1_000_000.0;
+/// Nanoseconds per second.
+pub const SEC: f64 = 1_000_000_000.0;

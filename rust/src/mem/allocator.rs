@@ -1,0 +1,191 @@
+//! First-fit range allocator with fragmentation accounting.
+//!
+//! Used by [`super::pool::MemoryPool`] for composable allocation and by the
+//! KV-cache manager for page accounting. Deliberately simple and auditable:
+//! a sorted free-list of `[start, end)` ranges.
+
+/// Allocation handle: offset + length within the managed range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Alloc {
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// First-fit free-list allocator over `[0, capacity)`.
+#[derive(Clone, Debug)]
+pub struct RangeAllocator {
+    capacity: u64,
+    /// Sorted, coalesced free ranges (start, len).
+    free: Vec<(u64, u64)>,
+    allocated: u64,
+}
+
+impl RangeAllocator {
+    /// Allocator over `capacity` bytes.
+    pub fn new(capacity: u64) -> Self {
+        RangeAllocator { capacity, free: if capacity > 0 { vec![(0, capacity)] } else { vec![] }, allocated: 0 }
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// Bytes free.
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.allocated
+    }
+
+    /// Largest single free range (0 if full).
+    pub fn largest_free(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    /// External fragmentation in [0,1]: 1 - largest_free/free_bytes.
+    pub fn fragmentation(&self) -> f64 {
+        let f = self.free_bytes();
+        if f == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free() as f64 / f as f64
+    }
+
+    /// Allocate `len` bytes first-fit. None if no single range fits.
+    pub fn alloc(&mut self, len: u64) -> Option<Alloc> {
+        if len == 0 {
+            return Some(Alloc { offset: 0, len: 0 });
+        }
+        let idx = self.free.iter().position(|&(_, l)| l >= len)?;
+        let (start, flen) = self.free[idx];
+        if flen == len {
+            self.free.remove(idx);
+        } else {
+            self.free[idx] = (start + len, flen - len);
+        }
+        self.allocated += len;
+        Some(Alloc { offset: start, len })
+    }
+
+    /// Free a previous allocation; coalesces neighbors.
+    pub fn free(&mut self, a: Alloc) {
+        if a.len == 0 {
+            return;
+        }
+        debug_assert!(a.offset + a.len <= self.capacity);
+        self.allocated = self.allocated.saturating_sub(a.len);
+        let pos = self.free.partition_point(|&(s, _)| s < a.offset);
+        self.free.insert(pos, (a.offset, a.len));
+        // coalesce with next
+        if pos + 1 < self.free.len() {
+            let (s, l) = self.free[pos];
+            let (ns, nl) = self.free[pos + 1];
+            debug_assert!(s + l <= ns, "double free / overlap at {s}+{l} vs {ns}");
+            if s + l == ns {
+                self.free[pos] = (s, l + nl);
+                self.free.remove(pos + 1);
+            }
+        }
+        // coalesce with prev
+        if pos > 0 {
+            let (ps, pl) = self.free[pos - 1];
+            let (s, l) = self.free[pos];
+            debug_assert!(ps + pl <= s, "double free / overlap");
+            if ps + pl == s {
+                self.free[pos - 1] = (ps, pl + l);
+                self.free.remove(pos);
+            }
+        }
+    }
+
+    /// Grow capacity by `extra` bytes (hot-plug of a device).
+    pub fn grow(&mut self, extra: u64) {
+        if extra == 0 {
+            return;
+        }
+        let old = self.capacity;
+        self.capacity += extra;
+        self.free.push((old, extra));
+        // coalesce if the tail was free
+        if self.free.len() >= 2 {
+            let n = self.free.len();
+            let (ps, pl) = self.free[n - 2];
+            if ps + pl == old {
+                self.free[n - 2] = (ps, pl + extra);
+                self.free.pop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = RangeAllocator::new(1000);
+        let x = a.alloc(100).unwrap();
+        let y = a.alloc(200).unwrap();
+        assert_eq!(a.allocated(), 300);
+        a.free(x);
+        a.free(y);
+        assert_eq!(a.allocated(), 0);
+        assert_eq!(a.largest_free(), 1000, "must coalesce back to one range");
+    }
+
+    #[test]
+    fn first_fit_reuses_hole() {
+        let mut a = RangeAllocator::new(1000);
+        let x = a.alloc(100).unwrap();
+        let _y = a.alloc(100).unwrap();
+        a.free(x);
+        let z = a.alloc(50).unwrap();
+        assert_eq!(z.offset, 0, "first-fit should reuse the freed hole");
+    }
+
+    #[test]
+    fn refuses_oversize() {
+        let mut a = RangeAllocator::new(100);
+        assert!(a.alloc(101).is_none());
+        let _ = a.alloc(60).unwrap();
+        assert!(a.alloc(60).is_none());
+    }
+
+    #[test]
+    fn fragmentation_metric() {
+        let mut a = RangeAllocator::new(300);
+        let x = a.alloc(100).unwrap();
+        let _y = a.alloc(100).unwrap();
+        let z = a.alloc(100).unwrap();
+        a.free(x);
+        a.free(z);
+        // two 100-byte holes: largest 100, free 200 -> frag 0.5
+        assert!((a.fragmentation() - 0.5).abs() < 1e-9);
+        assert!(a.alloc(150).is_none(), "no single hole fits 150");
+    }
+
+    #[test]
+    fn grow_extends_tail() {
+        let mut a = RangeAllocator::new(100);
+        let x = a.alloc(100).unwrap();
+        assert!(a.alloc(1).is_none());
+        a.grow(50);
+        assert!(a.alloc(50).is_some());
+        a.free(x);
+        assert_eq!(a.capacity(), 150);
+        assert_eq!(a.free_bytes(), 100);
+    }
+
+    #[test]
+    fn zero_len_alloc_is_noop() {
+        let mut a = RangeAllocator::new(10);
+        let z = a.alloc(0).unwrap();
+        a.free(z);
+        assert_eq!(a.allocated(), 0);
+    }
+}

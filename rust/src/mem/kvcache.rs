@@ -1,0 +1,231 @@
+//! Paged KV-cache manager (§2.3, §3.1).
+//!
+//! The paper: "KV caching can occupy between 30% and 85% of available GPU
+//! memory", and at scale the cache must be partitioned and synchronized
+//! across GPUs or spilled to pooled memory. This manager tracks per-sequence
+//! pages, accounts occupancy against a local (tier-1) budget, and spills
+//! overflow pages to the tier-2 pool, reporting the traffic that spilling
+//! and re-fetching generates.
+
+use super::tier::{Tier, TieredMemory};
+use std::collections::HashMap;
+
+/// Per-token KV bytes for a model: 2 (K,V) × layers × kv_heads × head_dim ×
+/// bytes_per_elem.
+pub fn kv_bytes_per_token(layers: u64, kv_heads: u64, head_dim: u64, dtype_bytes: u64) -> u64 {
+    2 * layers * kv_heads * head_dim * dtype_bytes
+}
+
+/// A sequence's cache footprint.
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    /// Pages resident in tier-1.
+    local_pages: u64,
+    /// Pages spilled to the pool.
+    pool_pages: u64,
+    tokens: u64,
+}
+
+/// Paged KV cache with tier-1 budget and tier-2 spill.
+#[derive(Debug)]
+pub struct KvCache {
+    /// Bytes per page.
+    page_bytes: u64,
+    /// Tokens per page.
+    page_tokens: u64,
+    /// Tier-1 budget in pages.
+    local_budget_pages: u64,
+    local_used_pages: u64,
+    pool_used_pages: u64,
+    seqs: HashMap<u64, SeqEntry>,
+    /// Bytes moved to/from the pool due to spill/fetch.
+    pub spill_bytes: u64,
+    pub fetch_bytes: u64,
+}
+
+impl KvCache {
+    /// Build a cache: `local_budget` bytes of tier-1, pages of `page_tokens`
+    /// tokens at `bytes_per_token`.
+    pub fn new(local_budget: u64, page_tokens: u64, bytes_per_token: u64) -> Self {
+        let page_bytes = page_tokens * bytes_per_token;
+        KvCache {
+            page_bytes,
+            page_tokens,
+            local_budget_pages: if page_bytes == 0 { 0 } else { local_budget / page_bytes },
+            local_used_pages: 0,
+            pool_used_pages: 0,
+            seqs: HashMap::new(),
+            spill_bytes: 0,
+            fetch_bytes: 0,
+        }
+    }
+
+    /// Page size in bytes.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Tier-1 occupancy fraction in [0,1].
+    pub fn local_occupancy(&self) -> f64 {
+        if self.local_budget_pages == 0 {
+            return 1.0;
+        }
+        self.local_used_pages as f64 / self.local_budget_pages as f64
+    }
+
+    /// Pages currently in the pool.
+    pub fn pool_pages(&self) -> u64 {
+        self.pool_used_pages
+    }
+
+    /// Live sequences.
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Append `tokens` to sequence `seq`, allocating pages; overflow pages
+    /// spill the *oldest* resident pages of the same sequence to the pool.
+    /// Returns bytes written to tier-1 and bytes spilled.
+    pub fn append(&mut self, seq: u64, tokens: u64) -> (u64, u64) {
+        let e = self.seqs.entry(seq).or_insert(SeqEntry { local_pages: 0, pool_pages: 0, tokens: 0 });
+        let before_pages = e.tokens.div_ceil(self.page_tokens.max(1));
+        e.tokens += tokens;
+        let after_pages = e.tokens.div_ceil(self.page_tokens.max(1));
+        let new_pages = after_pages - before_pages;
+        let mut spilled = 0u64;
+        for _ in 0..new_pages {
+            if self.local_used_pages < self.local_budget_pages {
+                self.local_used_pages += 1;
+                e.local_pages += 1;
+            } else if e.local_pages > 0 {
+                // spill this sequence's oldest page, reuse the slot
+                e.local_pages -= 1;
+                e.pool_pages += 1;
+                self.pool_used_pages += 1;
+                spilled += self.page_bytes;
+                e.local_pages += 1; // new page takes the freed slot
+            } else {
+                // nothing local to evict: page goes straight to pool
+                e.pool_pages += 1;
+                self.pool_used_pages += 1;
+                spilled += self.page_bytes;
+            }
+        }
+        self.spill_bytes += spilled;
+        (new_pages * self.page_bytes - spilled, spilled)
+    }
+
+    /// A decode step touches the whole cache of `seq`: local pages hit at
+    /// tier-1, pool pages must be fetched. Returns (local_bytes,
+    /// pool_bytes) read.
+    pub fn decode_read(&mut self, seq: u64) -> (u64, u64) {
+        match self.seqs.get(&seq) {
+            Some(e) => {
+                let pool_b = e.pool_pages * self.page_bytes;
+                self.fetch_bytes += pool_b;
+                (e.local_pages * self.page_bytes, pool_b)
+            }
+            None => (0, 0),
+        }
+    }
+
+    /// End-to-end time (ns) for the decode-step cache read under a tier
+    /// hierarchy.
+    pub fn decode_read_time(&mut self, seq: u64, tiers: &TieredMemory) -> f64 {
+        let (lb, pb) = self.decode_read(seq);
+        let mut t = 0.0;
+        if lb > 0 {
+            t += tiers.read(Tier::Local, lb);
+        }
+        if pb > 0 {
+            t += tiers.read(Tier::Pool, pb);
+        }
+        t
+    }
+
+    /// Release a finished sequence, freeing its pages.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(e) = self.seqs.remove(&seq) {
+            self.local_used_pages -= e.local_pages.min(self.local_used_pages);
+            self.pool_used_pages -= e.pool_pages.min(self.pool_used_pages);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::GIB;
+
+    #[test]
+    fn per_token_bytes_llama_70b_class() {
+        // 80 layers, 8 KV heads, 128 head dim, bf16:
+        let b = kv_bytes_per_token(80, 8, 128, 2);
+        assert_eq!(b, 327_680); // ~320 KiB per token
+    }
+
+    #[test]
+    fn append_allocates_pages() {
+        let mut kv = KvCache::new(1024 * 16, 16, 1); // 1 B/token, 16-token pages, 1024 pages
+        let (local, spilled) = kv.append(1, 64);
+        assert_eq!(local, 64);
+        assert_eq!(spilled, 0);
+        assert_eq!(kv.live_seqs(), 1);
+    }
+
+    #[test]
+    fn overflow_spills_to_pool() {
+        let mut kv = KvCache::new(2 * 16, 16, 1); // budget: 2 pages
+        kv.append(1, 16 * 2); // fills tier-1
+        assert_eq!(kv.local_occupancy(), 1.0);
+        let (_, spilled) = kv.append(1, 16);
+        assert_eq!(spilled, 16);
+        assert_eq!(kv.pool_pages(), 1);
+    }
+
+    #[test]
+    fn decode_reads_split_by_tier() {
+        let mut kv = KvCache::new(2 * 16, 16, 1);
+        kv.append(1, 16 * 3); // 2 local + 1 pool
+        let (lb, pb) = kv.decode_read(1);
+        assert_eq!(lb, 32);
+        assert_eq!(pb, 16);
+    }
+
+    #[test]
+    fn release_frees_budget() {
+        let mut kv = KvCache::new(2 * 16, 16, 1);
+        kv.append(1, 32);
+        assert_eq!(kv.local_occupancy(), 1.0);
+        kv.release(1);
+        assert_eq!(kv.local_occupancy(), 0.0);
+        let (_, spilled) = kv.append(2, 32);
+        assert_eq!(spilled, 0);
+    }
+
+    #[test]
+    fn paper_occupancy_band_30_to_85_pct() {
+        // A 192 GB GPU serving 64 seqs × 8k tokens of a 70B-class model:
+        // cache = 64*8192*320KiB ≈ 160 GiB -> ~85% of HBM. 16 seqs ≈ 30%.
+        let per_tok = kv_bytes_per_token(80, 8, 128, 2);
+        let hbm = 192 * GIB;
+        let heavy = 64 * 8192 * per_tok;
+        let light = 24 * 8192 * per_tok;
+        let f_heavy = heavy as f64 / hbm as f64;
+        let f_light = light as f64 / hbm as f64;
+        assert!(f_heavy > 0.80, "f_heavy={f_heavy}");
+        assert!((0.25..0.45).contains(&f_light), "f_light={f_light}");
+    }
+
+    #[test]
+    fn decode_time_pool_pages_cost_more() {
+        let tiers = TieredMemory::proposed(GIB, 100 * GIB);
+        let mut all_local = KvCache::new(1024 * 1024, 16, 64);
+        all_local.append(1, 256);
+        let t_local = all_local.decode_read_time(1, &tiers);
+        let mut spilly = KvCache::new(16 * 64, 16, 64); // 1-page budget
+        spilly.append(1, 256);
+        let t_spill = spilly.decode_read_time(1, &tiers);
+        assert!(t_spill > t_local, "{t_spill} vs {t_local}");
+    }
+}

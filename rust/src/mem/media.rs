@@ -1,0 +1,114 @@
+//! Backend memory media models (§5.1's media-diversification discussion).
+//!
+//! Latency here is the *device* access time; getting to the device (CXL
+//! fabric hops, XLink, PCIe, network) is priced by the fabric layer.
+
+/// One memory/storage technology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MediaSpec {
+    pub name: &'static str,
+    /// Random read latency at the device (ns).
+    pub read_lat: f64,
+    /// Write latency at the device (ns).
+    pub write_lat: f64,
+    /// Sustained bandwidth per device/stack (bytes/ns == GB/s).
+    pub bw: f64,
+    /// Cost (relative $/GB; DDR5 = 1.0).
+    pub cost_per_gb: f64,
+    /// Active power (W per device at full tilt).
+    pub power_w: f64,
+    /// Non-volatile?
+    pub persistent: bool,
+}
+
+impl MediaSpec {
+    /// HBM3e stack (per-GPU aggregate on Blackwell: ~8 TB/s over 192 GB).
+    pub fn hbm3e() -> MediaSpec {
+        MediaSpec { name: "HBM3e", read_lat: 100.0, write_lat: 100.0, bw: 8000.0, cost_per_gb: 6.0, power_w: 30.0, persistent: false }
+    }
+
+    /// Older-generation HBM2 reused as a buffering layer (§5.1).
+    pub fn hbm2_legacy() -> MediaSpec {
+        MediaSpec { name: "HBM2-legacy", read_lat: 120.0, write_lat: 120.0, bw: 1800.0, cost_per_gb: 3.0, power_w: 20.0, persistent: false }
+    }
+
+    /// DDR5 DIMM channel.
+    pub fn ddr5() -> MediaSpec {
+        MediaSpec { name: "DDR5", read_lat: 90.0, write_lat: 90.0, bw: 64.0, cost_per_gb: 1.0, power_w: 8.0, persistent: false }
+    }
+
+    /// DDR4 DIMM channel (legacy reuse in memory boxes, §5.1).
+    pub fn ddr4() -> MediaSpec {
+        MediaSpec { name: "DDR4", read_lat: 95.0, write_lat: 95.0, bw: 25.6, cost_per_gb: 0.55, power_w: 6.0, persistent: false }
+    }
+
+    /// DDR3 (deep-legacy reuse; the cost floor of §5.1's tray options).
+    pub fn ddr3() -> MediaSpec {
+        MediaSpec { name: "DDR3", read_lat: 110.0, write_lat: 110.0, bw: 12.8, cost_per_gb: 0.3, power_w: 5.0, persistent: false }
+    }
+
+    /// LPDDR5X (Grace's 480 GB socket memory; power-efficient tray option).
+    pub fn lpddr5x() -> MediaSpec {
+        MediaSpec { name: "LPDDR5X", read_lat: 110.0, write_lat: 110.0, bw: 68.0, cost_per_gb: 0.9, power_w: 3.5, persistent: false }
+    }
+
+    /// Enterprise NVMe flash (the storage tier RAG baselines retrieve from).
+    pub fn nvme_flash() -> MediaSpec {
+        MediaSpec { name: "NVMe-flash", read_lat: 70_000.0, write_lat: 20_000.0, bw: 7.0, cost_per_gb: 0.08, power_w: 12.0, persistent: true }
+    }
+
+    /// Phase-change memory (persistence option in hybrid trays, §5.1).
+    pub fn pram() -> MediaSpec {
+        MediaSpec { name: "PRAM", read_lat: 300.0, write_lat: 1_000.0, bw: 2.0, cost_per_gb: 0.5, power_w: 6.0, persistent: true }
+    }
+
+    /// Time to read `bytes` from the device itself (ns).
+    pub fn read_time(&self, bytes: u64) -> f64 {
+        self.read_lat + bytes as f64 / self.bw
+    }
+
+    /// Time to write `bytes` at the device (ns).
+    pub fn write_time(&self, bytes: u64) -> f64 {
+        self.write_lat + bytes as f64 / self.bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_hierarchy() {
+        // DRAM-class << PRAM << flash
+        assert!(MediaSpec::ddr5().read_lat < MediaSpec::pram().read_lat);
+        assert!(MediaSpec::pram().read_lat < MediaSpec::nvme_flash().read_lat);
+    }
+
+    #[test]
+    fn cost_hierarchy() {
+        // §5.1: HBM most expensive, DDR3/flash the cost floor.
+        assert!(MediaSpec::hbm3e().cost_per_gb > MediaSpec::ddr5().cost_per_gb);
+        assert!(MediaSpec::ddr5().cost_per_gb > MediaSpec::ddr3().cost_per_gb);
+        assert!(MediaSpec::ddr3().cost_per_gb > MediaSpec::nvme_flash().cost_per_gb);
+    }
+
+    #[test]
+    fn bandwidth_hierarchy() {
+        assert!(MediaSpec::hbm3e().bw > MediaSpec::ddr5().bw);
+        assert!(MediaSpec::ddr5().bw > MediaSpec::nvme_flash().bw);
+    }
+
+    #[test]
+    fn read_time_includes_transfer() {
+        let m = MediaSpec::ddr5();
+        // 64 GB/s => 1 MiB in ~16 us plus 90 ns latency
+        let t = m.read_time(1 << 20);
+        assert!(t > 16_000.0 && t < 17_000.0, "t={t}");
+    }
+
+    #[test]
+    fn flash_random_read_is_tens_of_us() {
+        let t = MediaSpec::nvme_flash().read_time(4096);
+        assert!(t > 70_000.0 && t < 72_000.0, "t={t}");
+    }
+}

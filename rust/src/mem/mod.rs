@@ -1,0 +1,28 @@
+//! Memory subsystem: media, composable pools, tiers, coherence, KV-cache.
+//!
+//! Implements the paper's memory story end-to-end:
+//!
+//! * [`media`] — the backend technologies a tray can mount (§5.1: HBM,
+//!   DDR3/4/5, LPDDR, flash, PRAM) with latency/bandwidth/cost/power.
+//! * [`allocator`] — range allocator with fragmentation accounting.
+//! * [`pool`] — composable memory pools: devices aggregated behind CXL
+//!   controllers/switches, exposed as NUMA domains, hot-pluggable (§4.3).
+//! * [`coherence`] — directory coherence with CXL.cache semantics and
+//!   back-invalidation vs the software-copy (RDMA) alternative (§4.2, §6.2).
+//! * [`tier`] — the §6.3 two-tier hierarchy: accelerator-local tier-1 and
+//!   capacity-oriented tier-2 pools.
+//! * [`kvcache`] — paged KV-cache manager with tier spill (§2.3, §3.1).
+
+pub mod allocator;
+pub mod coherence;
+pub mod kvcache;
+pub mod media;
+pub mod pool;
+pub mod tier;
+
+pub use allocator::RangeAllocator;
+pub use coherence::{AccessMode, CoherenceModel, Directory};
+pub use kvcache::KvCache;
+pub use media::MediaSpec;
+pub use pool::{MemoryDevice, MemoryPool};
+pub use tier::{Tier, TieredMemory};

@@ -1,0 +1,387 @@
+//! Composable memory pools (§4.2–§4.3, §5.1).
+//!
+//! A [`MemoryPool`] aggregates [`MemoryDevice`]s (expanders / memory-box
+//! SoCs) behind CXL controllers or switches and exposes them to hosts as
+//! NUMA domains. The pool honours the capability matrix of its CXL
+//! generation: pooling requires 2.0+, genuine multi-host *sharing* requires
+//! 3.0, hot-plug requires 2.0+, and device counts are capped per Table 1.
+
+use super::allocator::{Alloc, RangeAllocator};
+use super::media::MediaSpec;
+use crate::fabric::cxl::CxlVersion;
+use std::collections::HashMap;
+
+/// One memory endpoint (expander card or dedicated memory-box SoC).
+#[derive(Clone, Debug)]
+pub struct MemoryDevice {
+    pub name: String,
+    pub media: MediaSpec,
+    pub capacity: u64,
+}
+
+impl MemoryDevice {
+    /// Convenience constructor.
+    pub fn new(name: impl Into<String>, media: MediaSpec, capacity: u64) -> Self {
+        MemoryDevice { name: name.into(), media, capacity }
+    }
+}
+
+/// Error type for pool operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PoolError {
+    #[error("CXL {0:?} does not support memory pooling")]
+    PoolingUnsupported(CxlVersion),
+    #[error("CXL {0:?} does not support multi-host sharing")]
+    SharingUnsupported(CxlVersion),
+    #[error("CXL {0:?} does not support hot-plug")]
+    HotPlugUnsupported(CxlVersion),
+    #[error("device limit reached: {0} devices max for this configuration")]
+    DeviceLimit(usize),
+    #[error("out of memory: requested {requested} B, largest contiguous {largest} B")]
+    OutOfMemory { requested: u64, largest: u64 },
+    #[error("unknown allocation")]
+    UnknownAlloc,
+    #[error("device busy: allocations still mapped")]
+    DeviceBusy,
+}
+
+/// Identifier of a host attached to the pool.
+pub type HostId = usize;
+
+/// A registered allocation: one or more extents, possibly striped across
+/// devices (large composable regions span expanders — §4.3).
+#[derive(Clone, Debug)]
+struct PoolAlloc {
+    extents: Vec<(usize, Alloc)>,
+    /// Hosts this allocation is visible to. len > 1 requires sharing (3.0).
+    hosts: Vec<HostId>,
+}
+
+/// Composable memory pool.
+#[derive(Debug)]
+pub struct MemoryPool {
+    version: CxlVersion,
+    devices: Vec<MemoryDevice>,
+    allocators: Vec<RangeAllocator>,
+    allocs: HashMap<u64, PoolAlloc>,
+    next_handle: u64,
+    /// Practical (not theoretical) device cap for this deployment.
+    device_cap: usize,
+}
+
+/// Handle to a pool allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoolHandle(pub u64);
+
+impl MemoryPool {
+    /// New pool at a CXL generation. For 1.0 the pool degenerates to a
+    /// single direct-attached device.
+    pub fn new(version: CxlVersion) -> Self {
+        MemoryPool {
+            version,
+            devices: Vec::new(),
+            allocators: Vec::new(),
+            allocs: HashMap::new(),
+            next_handle: 0,
+            device_cap: version.practical_memory_devices_per_port(),
+        }
+    }
+
+    /// CXL generation.
+    pub fn version(&self) -> CxlVersion {
+        self.version
+    }
+
+    /// Attached devices.
+    pub fn devices(&self) -> &[MemoryDevice] {
+        &self.devices
+    }
+
+    /// Total capacity (bytes).
+    pub fn capacity(&self) -> u64 {
+        self.devices.iter().map(|d| d.capacity).sum()
+    }
+
+    /// Total allocated bytes.
+    pub fn allocated(&self) -> u64 {
+        self.allocators.iter().map(|a| a.allocated()).sum()
+    }
+
+    /// Utilization in [0,1].
+    pub fn utilization(&self) -> f64 {
+        let c = self.capacity();
+        if c == 0 {
+            0.0
+        } else {
+            self.allocated() as f64 / c as f64
+        }
+    }
+
+    /// Attach a device at build time (before operation).
+    pub fn attach(&mut self, dev: MemoryDevice) -> Result<usize, PoolError> {
+        if !self.devices.is_empty() && !self.version.memory_pooling() {
+            return Err(PoolError::PoolingUnsupported(self.version));
+        }
+        if self.devices.len() >= self.device_cap {
+            return Err(PoolError::DeviceLimit(self.device_cap));
+        }
+        let id = self.devices.len();
+        self.allocators.push(RangeAllocator::new(dev.capacity));
+        self.devices.push(dev);
+        Ok(id)
+    }
+
+    /// Hot-plug a device during operation (CXL 2.0+, Table 1).
+    pub fn hot_plug(&mut self, dev: MemoryDevice) -> Result<usize, PoolError> {
+        if !self.version.hot_plug() {
+            return Err(PoolError::HotPlugUnsupported(self.version));
+        }
+        self.attach(dev)
+    }
+
+    /// Hot-remove a device (must have no live allocations).
+    pub fn hot_remove(&mut self, device: usize) -> Result<MemoryDevice, PoolError> {
+        if !self.version.hot_plug() {
+            return Err(PoolError::HotPlugUnsupported(self.version));
+        }
+        if self.allocs.values().any(|a| a.extents.iter().any(|(d, _)| *d == device)) {
+            return Err(PoolError::DeviceBusy);
+        }
+        // Keep indices stable: replace with a zero-capacity tombstone.
+        let tombstone = MemoryDevice::new("removed", self.devices[device].media, 0);
+        let dev = std::mem::replace(&mut self.devices[device], tombstone);
+        self.allocators[device] = RangeAllocator::new(0);
+        Ok(dev)
+    }
+
+    /// Allocate `bytes` for one host (static partitioning — works on 2.0+;
+    /// on 1.0 only if a single device is attached, i.e. direct expansion).
+    pub fn alloc(&mut self, bytes: u64, host: HostId) -> Result<PoolHandle, PoolError> {
+        self.alloc_shared(bytes, &[host])
+    }
+
+    /// Allocate `bytes` visible to several hosts — genuine multi-host
+    /// sharing, which Table 1 gates on CXL 3.0. Allocations larger than any
+    /// single device stripe across devices (an interleaved composable
+    /// region, §4.3); striping beyond one device requires switching (2.0+).
+    pub fn alloc_shared(&mut self, bytes: u64, hosts: &[HostId]) -> Result<PoolHandle, PoolError> {
+        if hosts.len() > 1 && !self.version.memory_sharing() {
+            return Err(PoolError::SharingUnsupported(self.version));
+        }
+        // fast path: single device with a fitting contiguous range
+        let single = self
+            .allocators
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.largest_free() >= bytes)
+            .min_by_key(|(_, a)| a.largest_free());
+        let mut extents: Vec<(usize, Alloc)> = Vec::new();
+        if let Some((dev, _)) = single {
+            extents.push((dev, self.allocators[dev].alloc(bytes).expect("checked fit")));
+        } else {
+            // striped path: greedily consume largest free ranges
+            if self.total_free() < bytes || !self.version.memory_pooling() {
+                return Err(PoolError::OutOfMemory { requested: bytes, largest: self.total_free() });
+            }
+            let mut left = bytes;
+            while left > 0 {
+                let Some((dev, lf)) = self
+                    .allocators
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| (i, a.largest_free()))
+                    .filter(|(_, lf)| *lf > 0)
+                    .max_by_key(|(_, lf)| *lf)
+                else {
+                    // roll back partial extents
+                    for (d, a) in extents {
+                        self.allocators[d].free(a);
+                    }
+                    return Err(PoolError::OutOfMemory { requested: bytes, largest: 0 });
+                };
+                let take = lf.min(left);
+                extents.push((dev, self.allocators[dev].alloc(take).expect("checked fit")));
+                left -= take;
+            }
+        }
+        let h = PoolHandle(self.next_handle);
+        self.next_handle += 1;
+        self.allocs.insert(h.0, PoolAlloc { extents, hosts: hosts.to_vec() });
+        Ok(h)
+    }
+
+    fn total_free(&self) -> u64 {
+        self.allocators.iter().map(|a| a.free_bytes()).sum()
+    }
+
+    /// Free an allocation.
+    pub fn free(&mut self, h: PoolHandle) -> Result<(), PoolError> {
+        let pa = self.allocs.remove(&h.0).ok_or(PoolError::UnknownAlloc)?;
+        for (dev, alloc) in pa.extents {
+            self.allocators[dev].free(alloc);
+        }
+        Ok(())
+    }
+
+    /// Which device an allocation landed on (first extent for striped
+    /// regions).
+    pub fn device_of(&self, h: PoolHandle) -> Option<usize> {
+        self.allocs.get(&h.0).and_then(|a| a.extents.first()).map(|(d, _)| *d)
+    }
+
+    /// Number of devices an allocation stripes across.
+    pub fn stripe_width(&self, h: PoolHandle) -> Option<usize> {
+        self.allocs.get(&h.0).map(|a| {
+            let mut devs: Vec<usize> = a.extents.iter().map(|(d, _)| *d).collect();
+            devs.sort_unstable();
+            devs.dedup();
+            devs.len()
+        })
+    }
+
+    /// Hosts an allocation is visible to.
+    pub fn hosts_of(&self, h: PoolHandle) -> Option<&[HostId]> {
+        self.allocs.get(&h.0).map(|a| a.hosts.as_slice())
+    }
+
+    /// Device access time for `bytes` on the device(s) backing `h` (ns),
+    /// excluding fabric cost. Striped regions read their stripes in
+    /// parallel, so the time is the slowest stripe's share.
+    pub fn device_read_time(&self, h: PoolHandle, bytes: u64) -> Option<f64> {
+        let pa = self.allocs.get(&h.0)?;
+        let width = pa.extents.len().max(1) as u64;
+        let share = bytes.div_ceil(width);
+        pa.extents
+            .iter()
+            .map(|(d, _)| self.devices[*d].media.read_time(share))
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.max(t))))
+    }
+
+    /// Live allocation count.
+    pub fn live_allocs(&self) -> usize {
+        self.allocs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::GIB;
+
+    fn ddr5_dev(cap: u64) -> MemoryDevice {
+        MemoryDevice::new("exp", MediaSpec::ddr5(), cap)
+    }
+
+    #[test]
+    fn cxl1_single_device_expansion_only() {
+        let mut p = MemoryPool::new(CxlVersion::V1_0);
+        p.attach(ddr5_dev(GIB)).unwrap();
+        // second device => pooling => unsupported on 1.0
+        assert_eq!(p.attach(ddr5_dev(GIB)), Err(PoolError::PoolingUnsupported(CxlVersion::V1_0)));
+    }
+
+    #[test]
+    fn cxl2_pools_but_no_sharing() {
+        let mut p = MemoryPool::new(CxlVersion::V2_0);
+        for _ in 0..4 {
+            p.attach(ddr5_dev(GIB)).unwrap();
+        }
+        assert_eq!(p.capacity(), 4 * GIB);
+        let h = p.alloc(GIB / 2, 0).unwrap();
+        assert!(p.device_of(h).is_some());
+        assert_eq!(p.alloc_shared(GIB / 2, &[0, 1]), Err(PoolError::SharingUnsupported(CxlVersion::V2_0)));
+    }
+
+    #[test]
+    fn cxl3_shares_across_hosts() {
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        p.attach(ddr5_dev(GIB)).unwrap();
+        let h = p.alloc_shared(GIB / 4, &[0, 1, 2]).unwrap();
+        assert_eq!(p.hosts_of(h).unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn hot_plug_gated_by_version() {
+        let mut p1 = MemoryPool::new(CxlVersion::V1_0);
+        assert!(matches!(p1.hot_plug(ddr5_dev(GIB)), Err(PoolError::HotPlugUnsupported(_))));
+        let mut p2 = MemoryPool::new(CxlVersion::V2_0);
+        p2.attach(ddr5_dev(GIB)).unwrap();
+        p2.hot_plug(ddr5_dev(GIB)).unwrap();
+        assert_eq!(p2.capacity(), 2 * GIB);
+    }
+
+    #[test]
+    fn hot_remove_requires_empty_device() {
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        p.attach(ddr5_dev(GIB)).unwrap();
+        let h = p.alloc(100, 0).unwrap();
+        assert_eq!(p.hot_remove(0).unwrap_err(), PoolError::DeviceBusy);
+        p.free(h).unwrap();
+        assert!(p.hot_remove(0).is_ok());
+        assert_eq!(p.capacity(), 0);
+    }
+
+    #[test]
+    fn practical_device_cap_cxl2() {
+        // §4.2: CXL 2.0 deployments run 4-16 expanders per root port.
+        let mut p = MemoryPool::new(CxlVersion::V2_0);
+        for _ in 0..16 {
+            p.attach(ddr5_dev(GIB)).unwrap();
+        }
+        assert_eq!(p.attach(ddr5_dev(GIB)), Err(PoolError::DeviceLimit(16)));
+    }
+
+    #[test]
+    fn oom_when_total_free_insufficient() {
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        p.attach(ddr5_dev(100)).unwrap();
+        let e = p.alloc(200, 0).unwrap_err();
+        assert!(matches!(e, PoolError::OutOfMemory { requested: 200, .. }));
+    }
+
+    #[test]
+    fn large_allocations_stripe_across_devices() {
+        // §4.3: composable regions bigger than one expander interleave.
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        for _ in 0..4 {
+            p.attach(ddr5_dev(GIB)).unwrap();
+        }
+        let h = p.alloc(3 * GIB, 0).unwrap();
+        assert_eq!(p.stripe_width(h), Some(3));
+        assert_eq!(p.allocated(), 3 * GIB);
+        p.free(h).unwrap();
+        assert_eq!(p.allocated(), 0);
+    }
+
+    #[test]
+    fn striped_read_parallelism() {
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        for _ in 0..4 {
+            p.attach(ddr5_dev(GIB)).unwrap();
+        }
+        let striped = p.alloc(3 * GIB, 0).unwrap();
+        let single = p.alloc(GIB / 2, 0).unwrap();
+        // reading 3 GiB striped over 3 devices beats one device's serial time
+        let t_striped = p.device_read_time(striped, 3 * GIB).unwrap();
+        let t_serial = p.device_read_time(single, 3 * GIB).unwrap();
+        assert!(t_striped < t_serial / 2.0, "striped={t_striped} serial={t_serial}");
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut p = MemoryPool::new(CxlVersion::V3_0);
+        p.attach(ddr5_dev(1000)).unwrap();
+        let _h = p.alloc(250, 0).unwrap();
+        assert!((p.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tens_of_tb_per_pool() {
+        // §4.2: a CXL 2.0 switch aggregates tens of TB per node.
+        let mut p = MemoryPool::new(CxlVersion::V2_0);
+        for _ in 0..16 {
+            p.attach(ddr5_dev(2 * 1024 * GIB)).unwrap(); // 2 TiB expanders
+        }
+        assert!(p.capacity() >= 32 * 1024 * GIB);
+    }
+}

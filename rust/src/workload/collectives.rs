@@ -1,0 +1,253 @@
+//! Collective communication cost models (§3.1, §6.2).
+//!
+//! Message-passing algorithms (ring All-Reduce, All-Gather, Reduce-Scatter,
+//! All-to-All) priced over a [`CommPath`], plus the §6.2 *coherence-implicit*
+//! variants in which CXL.cache makes the data movement implicit: consumers
+//! simply load the shared region, so the explicit synchronization and
+//! redundant copy rounds disappear.
+
+use super::Platform;
+use crate::datacenter::hierarchy::CommPath;
+
+/// Collective operation kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+}
+
+/// Ring All-Reduce over `n` ranks of a `bytes` buffer: 2(n-1) steps moving
+/// `bytes/n` chunks; each step is one neighbor exchange on `path`.
+pub fn ring_allreduce(n: usize, bytes: u64, path: &CommPath) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    let steps = 2 * (n - 1);
+    steps as f64 * path.time(chunk)
+}
+
+/// Ring All-Gather: (n-1) steps of `bytes/n` chunks.
+pub fn ring_allgather(n: usize, bytes: u64, path: &CommPath) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    (n - 1) as f64 * path.time(chunk)
+}
+
+/// Reduce-Scatter: (n-1) steps of `bytes/n` chunks.
+pub fn ring_reduce_scatter(n: usize, bytes: u64, path: &CommPath) -> f64 {
+    ring_allgather(n, bytes, path)
+}
+
+/// All-to-All (MoE expert dispatch): each rank sends `bytes/n` to every
+/// other rank; with full bisection this pipelines into ~(n-1) chunk sends.
+pub fn all_to_all(n: usize, bytes: u64, path: &CommPath) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    (n - 1) as f64 * path.time(chunk)
+}
+
+/// Tree broadcast: log2(n) rounds of the full buffer.
+pub fn tree_broadcast(n: usize, bytes: u64, path: &CommPath) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n as f64).log2().ceil() * path.time(bytes)
+}
+
+/// Total bytes a rank moves during a ring All-Reduce (for traffic
+/// accounting): 2(n-1)/n × bytes.
+pub fn allreduce_bytes_per_rank(n: usize, bytes: u64) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    2 * (n as u64 - 1) * bytes.div_ceil(n as u64)
+}
+
+/// §6.2 coherence-implicit collective: producers write their shard to the
+/// shared coherent region; consumers load what they need. One write + one
+/// read of the local shard, no explicit rounds, barrier only if the
+/// platform lacks implicit sync.
+pub fn coherent_allreduce(platform: &Platform, n: usize, bytes: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let shard = bytes.div_ceil(n as u64);
+    // producer writes shard to pool; consumer reads the reduced result shard
+    let write = platform.tiers.write(crate::mem::tier::Tier::Pool, shard);
+    let read = platform.tiers.read(crate::mem::tier::Tier::Pool, shard * 2);
+    write + read + platform.barrier(n)
+}
+
+/// Ring All-Reduce executed on a *real fabric graph* with contention: the
+/// 2(n-1) chunk rounds are scheduled as actual transfers between ring
+/// neighbours, so switch-port contention and queueing show up (unlike the
+/// analytic [`ring_allreduce`]). Returns the completion time (ns).
+pub fn ring_allreduce_on_fabric(
+    fabric: &mut crate::fabric::Fabric,
+    ranks: &[crate::fabric::NodeId],
+    bytes: u64,
+    start: f64,
+) -> Option<f64> {
+    let n = ranks.len();
+    if n <= 1 {
+        return Some(start);
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    // per-rank clock: a rank can send its next chunk only after it finished
+    // receiving the previous round's chunk (ring dependency)
+    let mut ready = vec![start; n];
+    for _round in 0..2 * (n - 1) {
+        let mut next_ready = vec![0.0f64; n];
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let r = fabric.transfer(ranks[i], ranks[dst], chunk, ready[i])?;
+            // the receiver's next round starts when the chunk arrives
+            next_ready[dst] = r.arrival;
+        }
+        ready = next_ready;
+    }
+    Some(ready.iter().cloned().fold(0.0, f64::max))
+}
+
+/// Cost of a collective on a message-passing platform.
+pub fn collective_time(op: Collective, n: usize, bytes: u64, path: &CommPath) -> f64 {
+    match op {
+        Collective::AllReduce => ring_allreduce(n, bytes, path),
+        Collective::AllGather => ring_allgather(n, bytes, path),
+        Collective::ReduceScatter => ring_reduce_scatter(n, bytes, path),
+        Collective::AllToAll => all_to_all(n, bytes, path),
+        Collective::Broadcast => tree_broadcast(n, bytes, path),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datacenter::hierarchy::{composable_path, conventional_path, HierarchyLevel};
+
+    fn rack_path() -> CommPath {
+        conventional_path(HierarchyLevel::Rack)
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        for op in [Collective::AllReduce, Collective::AllGather, Collective::AllToAll, Collective::Broadcast] {
+            assert_eq!(collective_time(op, 1, 1 << 30, &rack_path()), 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather() {
+        let p = rack_path();
+        let ar = ring_allreduce(8, 1 << 26, &p);
+        let ag = ring_allgather(8, 1 << 26, &p);
+        assert!((ar / ag - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_flat_in_n() {
+        // classic ring property: 2(n-1)/n·B/bw — grows slowly with n
+        let p = rack_path();
+        let t8 = ring_allreduce(8, 1 << 30, &p);
+        let t64 = ring_allreduce(64, 1 << 30, &p);
+        assert!(t64 < t8 * 2.0, "t8={t8} t64={t64}");
+    }
+
+    #[test]
+    fn latency_term_dominates_small_messages() {
+        let p = conventional_path(HierarchyLevel::Row); // RDMA path
+        let t_small = ring_allreduce(64, 4096, &p);
+        // 126 steps × ~µs-scale fixed cost — pure latency tax
+        assert!(t_small > 100.0 * crate::US, "t={t_small}");
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        assert_eq!(allreduce_bytes_per_rank(4, 1000), 2 * 3 * 250);
+        assert_eq!(allreduce_bytes_per_rank(1, 1000), 0);
+    }
+
+    #[test]
+    fn coherent_allreduce_beats_ring_over_rdma() {
+        // §6.2: coherence-implicit collectives eliminate explicit rounds.
+        let cxl = crate::workload::Platform::composable_cxl();
+        let rdma_path = conventional_path(HierarchyLevel::Row);
+        let n = 32;
+        let bytes = 1 << 26; // 64 MiB gradient shard
+        let coherent = coherent_allreduce(&cxl, n, bytes);
+        let ring = ring_allreduce(n, bytes, &rdma_path);
+        assert!(ring / coherent > 5.0, "ring={ring} coherent={coherent}");
+    }
+
+    #[test]
+    fn fabric_ring_allreduce_matches_analytic_shape() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        use crate::fabric::Fabric;
+        // NVL72-style rack, 8 ranks, 64 MiB buffer
+        let topo = Topology::single_clos(8, 4);
+        let ranks = topo.endpoints().to_vec();
+        let mut fabric = Fabric::new(topo, LinkSpec::nvlink5_bundle(), RoutingPolicy::Pbr);
+        let bytes = 1 << 26;
+        let des = ring_allreduce_on_fabric(&mut fabric, &ranks, bytes, 0.0).unwrap();
+        // analytic over the equivalent 2-hop NVLink path
+        let path = CommPath {
+            links: vec![LinkSpec::nvlink5_bundle(), LinkSpec::nvlink5_bundle()],
+            stack: crate::fabric::netstack::SoftwareStack::hw_mediated(),
+        };
+        let analytic = ring_allreduce(8, bytes, &path);
+        let ratio = des / analytic;
+        // DES includes real port contention; it must be >= the contention-
+        // free analytic time but within the same order of magnitude
+        assert!(ratio >= 0.9, "des={des} analytic={analytic}");
+        assert!(ratio < 5.0, "des={des} analytic={analytic}");
+    }
+
+    #[test]
+    fn fabric_ring_allreduce_scales_with_bytes() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        use crate::fabric::Fabric;
+        let mk = || {
+            let topo = Topology::single_clos(4, 2);
+            let ranks = topo.endpoints().to_vec();
+            (Fabric::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Pbr), ranks)
+        };
+        let (mut f1, r1) = mk();
+        let (mut f2, r2) = mk();
+        let a = ring_allreduce_on_fabric(&mut f1, &r1, 1 << 20, 0.0).unwrap();
+        let b = ring_allreduce_on_fabric(&mut f2, &r2, 1 << 24, 0.0).unwrap();
+        assert!(b > 4.0 * a, "a={a} b={b}");
+    }
+
+    #[test]
+    fn fabric_ring_single_rank_trivial() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        use crate::fabric::Fabric;
+        let topo = Topology::star(2);
+        let ranks = vec![topo.endpoints()[0]];
+        let mut fabric = Fabric::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        assert_eq!(ring_allreduce_on_fabric(&mut fabric, &ranks, 1 << 20, 7.0), Some(7.0));
+    }
+
+    #[test]
+    fn cxl_ring_also_beats_rdma_ring() {
+        let comp = composable_path(HierarchyLevel::Row);
+        let conv = conventional_path(HierarchyLevel::Row);
+        let a = ring_allreduce(16, 1 << 24, &comp);
+        let b = ring_allreduce(16, 1 << 24, &conv);
+        assert!(b > a, "a={a} b={b}");
+    }
+}

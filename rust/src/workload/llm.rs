@@ -1,0 +1,193 @@
+//! Transformer / LLM model calculus (§2, §3.1): parameter counts, FLOPs,
+//! and the memory-footprint arithmetic behind the paper's "Llama 3 405B
+//! needs more than a hundred TB" claim.
+
+
+
+/// A transformer model specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    pub vocab: u64,
+    /// FFN inner dimension.
+    pub ffn: u64,
+    /// MoE experts (1 = dense).
+    pub experts: u64,
+    /// Active experts per token (top-k routing).
+    pub active_experts: u64,
+    /// Bytes per parameter as deployed (2 = bf16).
+    pub dtype_bytes: u64,
+    /// Gated (SwiGLU, 3 matrices) vs classic (2 matrices) FFN.
+    pub gated_ffn: bool,
+}
+
+impl ModelSpec {
+    /// Llama-3-405B class dense model.
+    pub fn llama3_405b() -> ModelSpec {
+        ModelSpec { name: "llama3-405b", layers: 126, hidden: 16_384, heads: 128, kv_heads: 8, vocab: 128_256, ffn: 53_248, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: true }
+    }
+
+    /// 70B-class dense model.
+    pub fn llama_70b() -> ModelSpec {
+        ModelSpec { name: "llama-70b", layers: 80, hidden: 8_192, heads: 64, kv_heads: 8, vocab: 128_256, ffn: 28_672, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: true }
+    }
+
+    /// 7B-class dense model (RAG generator scale).
+    pub fn dense_7b() -> ModelSpec {
+        ModelSpec { name: "dense-7b", layers: 32, hidden: 4_096, heads: 32, kv_heads: 8, vocab: 32_768, ffn: 14_336, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: true }
+    }
+
+    /// GPT-3-175B class dense model (classic 2-matrix FFN).
+    pub fn gpt3_175b() -> ModelSpec {
+        ModelSpec { name: "gpt3-175b", layers: 96, hidden: 12_288, heads: 96, kv_heads: 96, vocab: 50_257, ffn: 49_152, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: false }
+    }
+
+    /// Mixtral-class MoE (8 experts, top-2).
+    pub fn moe_8x22b() -> ModelSpec {
+        ModelSpec { name: "moe-8x22b", layers: 56, hidden: 6_144, heads: 48, kv_heads: 8, vocab: 32_768, ffn: 16_384, experts: 8, active_experts: 2, dtype_bytes: 2, gated_ffn: true }
+    }
+
+    /// ~100M-parameter model (the end-to-end example's serving model, and
+    /// the scale of the python artifacts).
+    pub fn tiny_100m() -> ModelSpec {
+        ModelSpec { name: "tiny-100m", layers: 12, hidden: 768, heads: 12, kv_heads: 12, vocab: 32_768, ffn: 3_072, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: false }
+    }
+
+    /// Head dimension.
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads
+    }
+
+    /// FFN matrices per layer (3 gated, 2 classic).
+    fn ffn_mats(&self) -> u64 {
+        if self.gated_ffn {
+            3
+        } else {
+            2
+        }
+    }
+
+    /// Total parameter count (attention + FFN×experts + embeddings).
+    pub fn params(&self) -> u64 {
+        let d = self.hidden;
+        let kv_dim = self.kv_heads * self.head_dim();
+        // attention: Q (d*d), K,V (d*kv_dim each), O (d*d)
+        let attn = 2 * d * d + 2 * d * kv_dim;
+        let ffn = self.ffn_mats() * d * self.ffn * self.experts;
+        let per_layer = attn + ffn;
+        let embed = self.vocab * d; // tied in/out embedding
+        self.layers * per_layer + embed
+    }
+
+    /// Parameters *active* per token (MoE activates a subset).
+    pub fn active_params(&self) -> u64 {
+        let d = self.hidden;
+        let kv_dim = self.kv_heads * self.head_dim();
+        let attn = 2 * d * d + 2 * d * kv_dim;
+        let ffn = self.ffn_mats() * d * self.ffn * self.active_experts;
+        self.layers * (attn + ffn) + self.vocab * d
+    }
+
+    /// Training FLOPs per token (the standard 6·N approximation over active
+    /// params: fwd 2N + bwd 4N).
+    pub fn train_flops_per_token(&self) -> f64 {
+        6.0 * self.active_params() as f64
+    }
+
+    /// Inference (forward-only) FLOPs per token: 2·N_active.
+    pub fn infer_flops_per_token(&self) -> f64 {
+        2.0 * self.active_params() as f64
+    }
+
+    /// Weight bytes as deployed.
+    pub fn weight_bytes(&self) -> u64 {
+        self.params() * self.dtype_bytes
+    }
+
+    /// Mixed-precision Adam training state per parameter: bf16 weight+grad
+    /// (4) + fp32 master weight, momentum, variance (12) = 16 bytes.
+    pub fn optimizer_state_bytes(&self) -> u64 {
+        self.params() * 16
+    }
+
+    /// Activation bytes per token with selective recomputation (~34·h per
+    /// layer, Megatron-style estimate).
+    pub fn activation_bytes_per_token(&self) -> u64 {
+        34 * self.hidden * self.layers
+    }
+
+    /// KV-cache bytes per token.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        crate::mem::kvcache::kv_bytes_per_token(self.layers, self.kv_heads, self.head_dim(), self.dtype_bytes)
+    }
+
+    /// Total training memory footprint for a batch of `tokens` in flight:
+    /// optimizer state + activations (the paper's "embeddings, activations,
+    /// and optimizer states" total).
+    pub fn training_footprint(&self, tokens: u64) -> u64 {
+        self.optimizer_state_bytes() + self.activation_bytes_per_token() * tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::GIB;
+
+    #[test]
+    fn param_counts_plausible() {
+        let p405 = ModelSpec::llama3_405b().params() as f64 / 1e9;
+        assert!((380.0..440.0).contains(&p405), "405B-class params={p405}B");
+        let p70 = ModelSpec::llama_70b().params() as f64 / 1e9;
+        assert!((62.0..78.0).contains(&p70), "70B-class params={p70}B");
+        let p175 = ModelSpec::gpt3_175b().params() as f64 / 1e9;
+        assert!((160.0..190.0).contains(&p175), "175B-class params={p175}B");
+        let tiny = ModelSpec::tiny_100m().params() as f64 / 1e6;
+        assert!((60.0..150.0).contains(&tiny), "tiny params={tiny}M");
+        let p7 = ModelSpec::dense_7b().params() as f64 / 1e9;
+        assert!((6.0..8.0).contains(&p7), "7B-class params={p7}B");
+    }
+
+    #[test]
+    fn moe_total_exceeds_active() {
+        let m = ModelSpec::moe_8x22b();
+        assert!(m.params() > 3 * m.active_params(), "MoE capacity amplification");
+    }
+
+    #[test]
+    fn paper_claim_405b_needs_over_100tb() {
+        // §1: 405B with a >100k-token context needs >100 TB for embeddings,
+        // activations and optimizer states.
+        let m = ModelSpec::llama3_405b();
+        let footprint = m.training_footprint(128_000 * 16); // 16-way batch of 128k-token sequences
+        assert!(footprint > 100 * 1_000 * GIB, "footprint={} GiB", footprint / GIB);
+    }
+
+    #[test]
+    fn paper_claim_exceeds_single_gpu() {
+        // §3.1: even weights alone exceed a 192 GB GPU for 175B+ models.
+        for m in [ModelSpec::gpt3_175b(), ModelSpec::llama3_405b()] {
+            assert!(m.weight_bytes() > 192 * GIB, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn flops_per_token_scaling() {
+        let m = ModelSpec::llama_70b();
+        let f = m.train_flops_per_token();
+        let expect = 6.0 * m.params() as f64;
+        assert!((f / expect - 1.0).abs() < 0.05);
+        assert!((m.infer_flops_per_token() / f - 1.0 / 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn kv_cache_grows_with_context() {
+        let m = ModelSpec::llama_70b();
+        let per_tok = m.kv_bytes_per_token();
+        assert_eq!(per_tok, 2 * 80 * 8 * 128 * 2);
+    }
+}

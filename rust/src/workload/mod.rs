@@ -1,0 +1,220 @@
+//! Workload models (§3.1, §5.2): LLM training & inference, RAG / Graph-RAG,
+//! DLRM, MPI scientific computing, and collective communication.
+//!
+//! Every workload is evaluated against a [`Platform`]: the bundle of
+//! accelerator silicon, memory-tier paths, remote data-exchange path and
+//! coherence model that distinguishes the **composable CXL** system from
+//! the **conventional RDMA** baseline. Workload phase models only ever ask
+//! the platform "what does this compute/fetch/sync cost?", so the same
+//! workload code produces both sides of every paper figure.
+
+pub mod collectives;
+pub mod dlrm;
+pub mod inference;
+pub mod llm;
+pub mod mpi;
+pub mod rag;
+pub mod training;
+
+pub use llm::ModelSpec;
+
+use crate::datacenter::hierarchy::CommPath;
+use crate::datacenter::node::AcceleratorSpec;
+use crate::fabric::link::LinkSpec;
+use crate::fabric::netstack::SoftwareStack;
+use crate::mem::coherence::CoherenceModel;
+use crate::mem::tier::{Tier, TieredMemory};
+use crate::GIB;
+
+/// A system-under-test: everything a workload phase needs to price itself.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Accelerator silicon executing compute phases.
+    pub accel: AcceleratorSpec,
+    /// Memory hierarchy (local / peer / pool / storage paths).
+    pub tiers: TieredMemory,
+    /// Path used for explicit rank-to-rank data exchange (MPI, collectives).
+    pub exchange: CommPath,
+    /// How shared data stays consistent.
+    pub coherence: CoherenceModel,
+    /// Achievable fraction of peak FLOPs in steady state.
+    pub compute_efficiency: f64,
+    /// When true, synchronization barriers are implicit in the coherence
+    /// protocol (CXL.cache) instead of explicit software barriers (§5.2 MPI
+    /// discussion).
+    pub implicit_sync: bool,
+}
+
+impl Platform {
+    /// The paper's composable CXL system: tier-2 pools over lightweight CXL,
+    /// hardware coherence, exchanges over the CXL scale-up fabric.
+    pub fn composable_cxl() -> Platform {
+        Platform {
+            name: "composable-cxl",
+            accel: AcceleratorSpec::b200(),
+            tiers: TieredMemory::proposed(192 * GIB, 64 * 1024 * GIB),
+            exchange: CommPath {
+                links: vec![LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16()],
+                stack: SoftwareStack::hw_mediated(),
+            },
+            coherence: CoherenceModel::HardwareDirectory,
+            compute_efficiency: 0.55,
+            implicit_sync: true,
+        }
+    }
+
+    /// The conventional baseline: no tier-2 pool (remote data over
+    /// RDMA/InfiniBand with staging copies), software-copy consistency,
+    /// explicit synchronization.
+    pub fn conventional_rdma() -> Platform {
+        Platform {
+            name: "conventional-rdma",
+            accel: AcceleratorSpec::b200(),
+            tiers: TieredMemory::conventional(192 * GIB),
+            exchange: CommPath {
+                links: vec![
+                    LinkSpec::infiniband_ndr(),
+                    LinkSpec::infiniband_ndr(),
+                    LinkSpec::infiniband_ndr(),
+                ],
+                stack: SoftwareStack::rdma_verbs(),
+            },
+            coherence: CoherenceModel::SoftwareCopy,
+            compute_efficiency: 0.55,
+            implicit_sync: false,
+        }
+    }
+
+    /// Variant of the baseline whose big data rests on SSD-backed storage
+    /// (the paper's SSD-and-RDMA RAG/DLRM baselines).
+    pub fn conventional_storage() -> Platform {
+        let mut p = Self::conventional_rdma();
+        p.name = "conventional-storage";
+        p
+    }
+
+    /// Time for `flops` of dense compute (identical across platforms; the
+    /// paper's argument is that compute is *not* the differentiator).
+    pub fn compute(&self, flops: f64) -> f64 {
+        self.accel.compute_time(flops, self.compute_efficiency)
+    }
+
+    /// Latency of one dependent (pointer-chasing) remote read of `bytes`
+    /// from the tier where big shared data lives: pool for CXL, the RDMA
+    /// "pool" path for the baseline.
+    pub fn remote_read(&self, bytes: u64) -> f64 {
+        self.tiers.read(Tier::Pool, bytes)
+    }
+
+    /// Latency of a storage-resident read (both platforms have storage; the
+    /// CXL design *avoids* needing it for hot data).
+    pub fn storage_read(&self, bytes: u64) -> f64 {
+        self.tiers.read(Tier::Storage, bytes)
+    }
+
+    /// One explicit rank-to-rank exchange of `bytes`.
+    pub fn exchange_time(&self, bytes: u64) -> f64 {
+        self.exchange.time(bytes)
+    }
+
+    /// Cost of a synchronization barrier among `ranks` participants:
+    /// explicit software barrier (2 small messages deep = log2 tree) for the
+    /// baseline; free (coherence-implicit) on CXL (§5.2 WarpX analysis).
+    pub fn barrier(&self, ranks: usize) -> f64 {
+        if self.implicit_sync || ranks <= 1 {
+            0.0
+        } else {
+            let rounds = (ranks as f64).log2().ceil();
+            rounds * self.exchange.time(64)
+        }
+    }
+
+    /// Bytes that must actually move to propagate an update of a shared
+    /// region of `bytes` to one consumer (coherence model difference).
+    pub fn shared_update_bytes(&self, bytes: u64) -> u64 {
+        self.coherence.bytes_to_move(bytes, true, true)
+    }
+}
+
+/// One phase measurement (used by every experiment report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTime {
+    /// Compute nanoseconds.
+    pub compute: f64,
+    /// Communication / data-movement nanoseconds.
+    pub comm: f64,
+    /// Synchronization nanoseconds.
+    pub sync: f64,
+    /// Bytes moved.
+    pub bytes: u64,
+}
+
+impl PhaseTime {
+    /// Total wall time of the phase (phases are serial inside a step).
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm + self.sync
+    }
+
+    /// Merge another phase into this one.
+    pub fn add(&mut self, other: PhaseTime) {
+        self.compute += other.compute;
+        self.comm += other.comm;
+        self.sync += other.sync;
+        self.bytes += other.bytes;
+    }
+
+    /// Fraction of time spent in communication + sync.
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.comm + self.sync) / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platforms_share_compute_cost() {
+        let cxl = Platform::composable_cxl();
+        let rdma = Platform::conventional_rdma();
+        assert_eq!(cxl.compute(1e9), rdma.compute(1e9));
+    }
+
+    #[test]
+    fn remote_read_gap_is_order_of_magnitude() {
+        let cxl = Platform::composable_cxl();
+        let rdma = Platform::conventional_rdma();
+        let r = rdma.remote_read(1536) / cxl.remote_read(1536);
+        assert!(r > 8.0 && r < 100.0, "r={r}");
+    }
+
+    #[test]
+    fn barrier_free_on_cxl() {
+        let cxl = Platform::composable_cxl();
+        let rdma = Platform::conventional_rdma();
+        assert_eq!(cxl.barrier(64), 0.0);
+        assert!(rdma.barrier(64) > 0.0);
+    }
+
+    #[test]
+    fn software_copy_doubles_shared_updates() {
+        let cxl = Platform::composable_cxl();
+        let rdma = Platform::conventional_rdma();
+        assert_eq!(cxl.shared_update_bytes(1000), 1000);
+        assert_eq!(rdma.shared_update_bytes(1000), 2000);
+    }
+
+    #[test]
+    fn phase_accounting() {
+        let mut p = PhaseTime { compute: 10.0, comm: 5.0, sync: 5.0, bytes: 100 };
+        p.add(PhaseTime { compute: 10.0, comm: 0.0, sync: 0.0, bytes: 0 });
+        assert_eq!(p.total(), 30.0);
+        assert!((p.comm_fraction() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! RAG and Graph-RAG pipelines (§2.3, §5.2, Fig 33/34).
+//!
+//! The pipeline: embed the query → ANN vector search over a corpus living
+//! in *external* memory (tier-2 CXL pool vs RDMA/SSD-backed retrieval
+//! system) → LLM generation conditioned on the retrieved context.
+//!
+//! The search phase is **dependent pointer chasing**: each ANN hop reads a
+//! node's neighbour vectors before the next hop can be chosen, so its cost
+//! is `hops × (remote-read latency + distance compute)`. This is exactly
+//! the access pattern where the paper measures its largest CXL wins
+//! (Fig 33d: 14× search; Fig 34d: 8.05× end-to-end Graph-RAG).
+
+use super::inference::{generate_time, KvPlacement};
+use super::llm::ModelSpec;
+use super::{PhaseTime, Platform};
+
+/// RAG workload shape.
+#[derive(Clone, Debug)]
+pub struct RagConfig {
+    /// Embedding dimensionality.
+    pub dim: u64,
+    /// Bytes per element (2 = fp16).
+    pub elem_bytes: u64,
+    /// Dependent ANN hops per query (HNSW-style traversal depth).
+    pub hops: u64,
+    /// Vectors examined per hop.
+    pub width: u64,
+    /// Queries in the evaluated batch/stream.
+    pub queries: u64,
+    /// Host-side ANN bookkeeping per hop (ns) — heap updates, visited set.
+    pub ann_cpu_ns: f64,
+    /// Generation model.
+    pub model: ModelSpec,
+    /// Retrieved context tokens fed to the model.
+    pub context_tokens: u64,
+    /// Tokens generated per query.
+    pub gen_tokens: u64,
+    /// Fraction (%) of KV/context resident in the remote tier during
+    /// generation.
+    pub kv_remote_pct: u8,
+}
+
+impl RagConfig {
+    /// The Fig 33 recipe-recommendation scenario, scaled to this testbed:
+    /// 768-d fp16 embeddings, ~100k candidate visits per query
+    /// (corpus-scale ANN traversal + re-ranking), and a 7B-class generator
+    /// with half its context KV pooled. The visit count is calibrated so
+    /// the CXL-side search:generation balance matches the paper's measured
+    /// 0.5 s : 1.4 s split (Fig 33d).
+    pub fn recipe_demo() -> RagConfig {
+        RagConfig {
+            dim: 768,
+            elem_bytes: 2,
+            hops: 100_000,
+            width: 1,
+            queries: 64,
+            ann_cpu_ns: 100.0,
+            model: ModelSpec::dense_7b(),
+            context_tokens: 1_024,
+            gen_tokens: 32,
+            kv_remote_pct: 50,
+        }
+    }
+
+    /// The Fig 34 knowledge-graph scenario: much deeper traversal (KG walk
+    /// + neighbourhood expansion + re-ranking ≈ 540k visits/query), longer
+    /// retrieved context, more of it pooled. Calibrated to the paper's
+    /// 1.7 s : 2.2 s CXL-side phase split (Fig 34d).
+    pub fn graph_rag() -> RagConfig {
+        RagConfig {
+            dim: 768,
+            elem_bytes: 2,
+            hops: 538_000,
+            width: 1,
+            queries: 16,
+            ann_cpu_ns: 140.0, // edge filtering on top of heap updates
+            model: ModelSpec::dense_7b(),
+            context_tokens: 2_048,
+            gen_tokens: 48,
+            kv_remote_pct: 60,
+        }
+    }
+
+    /// Bytes fetched per ANN hop.
+    pub fn hop_bytes(&self) -> u64 {
+        self.width * self.dim * self.elem_bytes
+    }
+
+    /// "Data movement" accounting for the search phase (Fig 31's 21.1×):
+    /// total bytes crossing any bus. The CXL path moves exactly the vector
+    /// payload once (direct load). The conventional path fetches at its
+    /// block granularity (storage/RDMA page) and each byte crosses the NIC
+    /// wire plus every staging copy plus the final device write.
+    pub fn search_data_movement(&self, platform: &Platform) -> u64 {
+        let visits = self.queries * self.hops;
+        match platform.coherence {
+            crate::mem::coherence::CoherenceModel::HardwareDirectory => visits * self.hop_bytes(),
+            crate::mem::coherence::CoherenceModel::SoftwareCopy => {
+                let granule: u64 = 8 * 1024; // RDMA/storage block granularity
+                let copies = platform.tiers.pool.stack.copies as u64;
+                // wire + staging copies + destination write
+                visits * granule * (copies + 2)
+            }
+        }
+    }
+}
+
+/// Result of a RAG run: the two phases the paper plots.
+#[derive(Clone, Copy, Debug)]
+pub struct RagReport {
+    /// Vector-search phase.
+    pub search: PhaseTime,
+    /// LLM generation phase (prefill + decode).
+    pub generation: PhaseTime,
+}
+
+impl RagReport {
+    /// End-to-end time (ns).
+    pub fn total(&self) -> f64 {
+        self.search.total() + self.generation.total()
+    }
+
+    /// Total bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.search.bytes + self.generation.bytes
+    }
+}
+
+/// Vector-search phase: `queries × hops` dependent remote reads.
+pub fn vector_search(cfg: &RagConfig, platform: &Platform) -> PhaseTime {
+    let hop_bytes = cfg.hop_bytes();
+    let fetch = platform.remote_read(hop_bytes);
+    let dist_flops = (cfg.width * cfg.dim * 2) as f64;
+    let compute_per_hop = platform.compute(dist_flops) + cfg.ann_cpu_ns;
+    let per_query = cfg.hops as f64 * (fetch + compute_per_hop);
+    PhaseTime {
+        compute: cfg.queries as f64 * cfg.hops as f64 * compute_per_hop,
+        comm: cfg.queries as f64 * cfg.hops as f64 * fetch,
+        sync: 0.0,
+        bytes: cfg.queries * cfg.hops * hop_bytes,
+    }
+    .tap_total(per_query * cfg.queries as f64)
+}
+
+// PhaseTime is a plain struct; `tap_total` is a no-op hook kept for clarity.
+trait TapTotal {
+    fn tap_total(self, _t: f64) -> Self;
+}
+impl TapTotal for PhaseTime {
+    fn tap_total(self, _t: f64) -> Self {
+        self
+    }
+}
+
+/// Generation phase: prefill retrieved context, then decode — per query,
+/// summed over the query stream.
+pub fn generation(cfg: &RagConfig, platform: &Platform) -> PhaseTime {
+    let (prefill, decode) = generate_time(
+        &cfg.model,
+        1,
+        cfg.context_tokens,
+        cfg.gen_tokens,
+        KvPlacement::Remote { remote_frac_pct: cfg.kv_remote_pct },
+        platform,
+    );
+    // attribute the KV/context traffic: remote share of KV reads
+    let kv_bytes = cfg.model.kv_bytes_per_token()
+        * (cfg.context_tokens + cfg.gen_tokens / 2)
+        * cfg.gen_tokens
+        * cfg.kv_remote_pct as u64
+        / 100;
+    // decode time beyond pure compute is data movement
+    let flops = cfg.model.infer_flops_per_token() * (cfg.context_tokens + cfg.gen_tokens) as f64;
+    let pure_compute = platform.compute(flops);
+    let total = prefill + decode;
+    let comm = (total - pure_compute).max(0.0);
+    let q = cfg.queries as f64;
+    PhaseTime {
+        compute: pure_compute.min(total) * q,
+        comm: comm * q,
+        sync: 0.0,
+        bytes: kv_bytes * cfg.queries,
+    }
+}
+
+/// Full RAG pipeline on a platform.
+pub fn run_rag(cfg: &RagConfig, platform: &Platform) -> RagReport {
+    RagReport { search: vector_search(cfg, platform), generation: generation(cfg, platform) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig33_search_speedup_about_14x() {
+        let cfg = RagConfig::recipe_demo();
+        let cxl = vector_search(&cfg, &Platform::composable_cxl());
+        let rdma = vector_search(&cfg, &Platform::conventional_rdma());
+        let ratio = rdma.total() / cxl.total();
+        assert!((9.0..20.0).contains(&ratio), "search speedup={ratio} (paper: 14x)");
+    }
+
+    #[test]
+    fn fig33_generation_speedup_about_2_8x() {
+        let cfg = RagConfig::recipe_demo();
+        let cxl = generation(&cfg, &Platform::composable_cxl());
+        let rdma = generation(&cfg, &Platform::conventional_rdma());
+        let ratio = rdma.total() / cxl.total();
+        assert!((1.8..4.5).contains(&ratio), "generation speedup={ratio} (paper: 2.78x)");
+    }
+
+    #[test]
+    fn fig34_graph_rag_total_about_8x() {
+        let cfg = RagConfig::graph_rag();
+        let cxl = run_rag(&cfg, &Platform::composable_cxl());
+        let rdma = run_rag(&cfg, &Platform::conventional_rdma());
+        let ratio = rdma.total() / cxl.total();
+        assert!((5.0..12.0).contains(&ratio), "graph-rag speedup={ratio} (paper: 8.05x)");
+    }
+
+    #[test]
+    fn search_is_latency_bound() {
+        // comm dominates compute in the search phase on the baseline
+        let cfg = RagConfig::recipe_demo();
+        let r = vector_search(&cfg, &Platform::conventional_rdma());
+        assert!(r.comm_fraction() > 0.9, "frac={}", r.comm_fraction());
+    }
+
+    #[test]
+    fn deeper_walks_cost_more() {
+        let mut cfg = RagConfig::recipe_demo();
+        let a = vector_search(&cfg, &Platform::composable_cxl()).total();
+        cfg.hops *= 2;
+        let b = vector_search(&cfg, &Platform::composable_cxl()).total();
+        assert!(b > 1.9 * a);
+    }
+
+    #[test]
+    fn bytes_accounting_matches_shape() {
+        let cfg = RagConfig::recipe_demo();
+        let r = vector_search(&cfg, &Platform::composable_cxl());
+        assert_eq!(r.bytes, cfg.queries * cfg.hops * cfg.hop_bytes());
+    }
+}

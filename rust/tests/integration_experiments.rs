@@ -1,0 +1,77 @@
+//! Integration: every experiment driver runs and reproduces the paper's
+//! qualitative shape (who wins, by roughly what factor).
+
+use commtax::experiments;
+
+fn ratio(cell: &str) -> f64 {
+    cell.trim_end_matches('x').parse().unwrap()
+}
+
+#[test]
+fn fig31_all_ratios_in_band() {
+    let t = experiments::fig31();
+    let bands: [(&str, f64, f64); 7] = [
+        ("RAG exec-time reduction", 9.0, 20.0),
+        ("RAG data-movement reduction", 12.0, 32.0),
+        ("Graph-RAG exec-time reduction", 5.0, 12.0),
+        ("DLRM inference speedup", 2.4, 5.0),
+        ("DLRM tensor-init speedup", 1.9, 3.6),
+        ("MPI execution-time speedup", 1.4, 2.6),
+        ("MPI communication reduction", 3.5, 9.0),
+    ];
+    for (name, lo, hi) in bands {
+        let row = t.rows.iter().find(|r| r[0] == name).unwrap_or_else(|| panic!("row {name}"));
+        let m = ratio(&row[2]);
+        assert!((lo..=hi).contains(&m), "{name}: measured {m}, band [{lo}, {hi}] (paper {})", row[1]);
+    }
+}
+
+#[test]
+fn fig33_fig34_fig35_phase_ratios() {
+    let f33 = experiments::fig33();
+    assert!((9.0..20.0).contains(&ratio(&f33.rows[0][3])), "search {}", f33.rows[0][3]);
+    assert!((1.8..4.5).contains(&ratio(&f33.rows[1][3])), "gen {}", f33.rows[1][3]);
+    let f34 = experiments::fig34();
+    assert!((5.0..12.0).contains(&ratio(&f34.rows[2][3])), "graph-rag total {}", f34.rows[2][3]);
+    let f35 = experiments::fig35();
+    assert!((1.9..3.6).contains(&ratio(&f35.rows[0][3])), "init {}", f35.rows[0][3]);
+    assert!((2.4..5.0).contains(&ratio(&f35.rows[1][3])), "inference {}", f35.rows[1][3]);
+}
+
+#[test]
+fn fig36_fig37_mpi_ratios() {
+    let f36 = experiments::fig36();
+    assert!((1.3..2.1).contains(&ratio(&f36.rows[0][3])), "warpx compute {}", f36.rows[0][3]);
+    assert!((4.5..9.0).contains(&ratio(&f36.rows[1][3])), "warpx comm {}", f36.rows[1][3]);
+    let f37 = experiments::fig37();
+    assert!((1.0..1.25).contains(&ratio(&f37.rows[0][3])), "cfd compute {}", f37.rows[0][3]);
+    assert!((2.4..5.0).contains(&ratio(&f37.rows[1][3])), "cfd comm {}", f37.rows[1][3]);
+}
+
+#[test]
+fn table1_matches_spec_counts() {
+    let t = experiments::table1();
+    let find = |name: &str| t.rows.iter().find(|r| r[0] == name).unwrap().clone();
+    assert_eq!(find("max mem devices / root port")[1..], ["1", "256", "4096"]);
+    assert_eq!(find("memory sharing")[1..], ["-", "-", "yes"]);
+    assert_eq!(find("hot-plug")[1..], ["-", "yes", "yes"]);
+}
+
+#[test]
+fn table2_latency_cliff_present() {
+    let t = experiments::table2();
+    // row 0: cross-rack latency, conventional must be > 1 us, cxl < 1 us
+    let conv = &t.rows[0][1];
+    let comp = &t.rows[0][2];
+    assert!(conv.contains("us"), "conventional cross-rack should be us-scale: {conv}");
+    assert!(comp.contains("ns"), "composable cross-rack should be ns-scale: {comp}");
+}
+
+#[test]
+fn all_fifteen_experiments_run() {
+    let tables = experiments::all_tables();
+    assert_eq!(tables.len(), 15);
+    for t in &tables {
+        assert!(!t.rows.is_empty(), "{}", t.title);
+    }
+}

@@ -1,0 +1,190 @@
+//! Cross-module property tests (testkit-driven): invariants that span
+//! substrates — routing, fabric accounting, allocation, coherence,
+//! tiering — under randomized inputs.
+
+use commtax::fabric::link::LinkSpec;
+use commtax::fabric::routing::RoutingPolicy;
+use commtax::fabric::topology::Topology;
+use commtax::fabric::Fabric;
+use commtax::mem::allocator::RangeAllocator;
+use commtax::mem::coherence::{AccessMode, Directory};
+use commtax::testkit::check;
+
+#[test]
+fn property_fabric_delivery_iff_reachable() {
+    // every endpoint pair in a connected topology gets a route; latency is
+    // positive; payload accounting matches the sum of transfers.
+    check(
+        48,
+        |rng| {
+            let n = 2 + rng.index(24);
+            let planes = 1 + rng.index(4);
+            let pairs: Vec<(usize, usize, u64)> =
+                (0..20).map(|_| (rng.index(n), rng.index(n), 1 + rng.below(1 << 20))).collect();
+            (n, planes, pairs)
+        },
+        |(n, planes, pairs)| {
+            let topo = Topology::single_clos(*n, *planes);
+            let eps = topo.endpoints().to_vec();
+            let mut fabric = Fabric::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+            let mut expect_payload = 0u64;
+            for &(a, b, bytes) in pairs {
+                let r = fabric.transfer(eps[a], eps[b], bytes, 0.0).expect("route must exist");
+                if a != b {
+                    assert!(r.latency > 0.0);
+                    expect_payload += bytes;
+                }
+            }
+            fabric.total_payload() == expect_payload
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_pbr_never_longer_than_hbr() {
+    check(
+        32,
+        |rng| (2 + rng.index(16), 1 + rng.index(4), rng.index(16), rng.index(16)),
+        |&(n, planes, a, b)| {
+            let topo = Topology::single_clos(n, planes);
+            let eps = topo.endpoints().to_vec();
+            let (a, b) = (eps[a % n], eps[b % n]);
+            if a == b {
+                return true;
+            }
+            let busy = vec![0.0; topo.edge_count()];
+            let h = RoutingPolicy::Hbr.route(&topo, a, b, &busy).unwrap().len();
+            let p = RoutingPolicy::Pbr.route(&topo, a, b, &busy).unwrap().len();
+            p == h
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_allocator_conservation() {
+    // allocated + free == capacity at every step; frees always coalesce back
+    check(
+        64,
+        |rng| commtax::testkit::generators::alloc_script(rng, 60, 4096),
+        |script| {
+            let cap = 64 * 1024;
+            let mut a = RangeAllocator::new(cap);
+            let mut live = Vec::new();
+            for op in script {
+                match op {
+                    Some(sz) => {
+                        if let Some(h) = a.alloc(*sz) {
+                            live.push(h);
+                        }
+                    }
+                    None => {
+                        if !live.is_empty() {
+                            a.free(live.remove(0));
+                        }
+                    }
+                }
+                if a.allocated() + a.free_bytes() != cap {
+                    return false;
+                }
+            }
+            for h in live {
+                a.free(h);
+            }
+            a.allocated() == 0 && a.largest_free() == cap
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_coherence_single_writer() {
+    // after any access sequence, at most one agent holds write permission:
+    // a write by any *other* agent always invalidates someone or fetches.
+    check(
+        48,
+        |rng| (0..60).map(|_| (rng.index(4), rng.below(6), rng.chance(0.4))).collect::<Vec<_>>(),
+        |script| {
+            let mut d = Directory::new();
+            for r in 0..6 {
+                d.register(r, 256);
+            }
+            // a cache hit is legal iff the agent touched the region after
+            // the most recent *foreign* write (its copy is still valid)
+            let mut seq = 0u64;
+            let mut last_touch: std::collections::HashMap<(usize, u64), u64> = Default::default();
+            let mut last_foreign_write: std::collections::HashMap<u64, (usize, u64)> = Default::default();
+            for &(agent, region, is_write) in script {
+                seq += 1;
+                let mode = if is_write { AccessMode::Write } else { AccessMode::Read };
+                let out = d.access(agent, region, mode);
+                if out.cache_hit {
+                    let lt = last_touch.get(&(agent, region)).copied().unwrap_or(0);
+                    if lt == 0 {
+                        return false; // hit without ever fetching
+                    }
+                    if let Some(&(w, ws)) = last_foreign_write.get(&region) {
+                        if w != agent && ws > lt {
+                            return false; // stale copy served as a hit
+                        }
+                    }
+                }
+                last_touch.insert((agent, region), seq);
+                if is_write {
+                    last_foreign_write.insert(region, (agent, seq));
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_tier_reads_monotone_in_bytes() {
+    use commtax::mem::tier::{Tier, TieredMemory};
+    check(
+        48,
+        |rng| {
+            let mut sizes = commtax::testkit::generators::sizes(rng, 8, 64, 1 << 24);
+            sizes.sort_unstable();
+            sizes
+        },
+        |sizes| {
+            let t = TieredMemory::proposed(commtax::GIB, 100 * commtax::GIB);
+            for tier in [Tier::Local, Tier::ClusterPeer, Tier::Pool, Tier::Storage] {
+                let mut prev = 0.0;
+                for &b in sizes {
+                    let lat = t.read(tier, b);
+                    if lat < prev {
+                        return false;
+                    }
+                    prev = lat;
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_supercluster_transfer_total_order() {
+    // inter-cluster latency >= intra-cluster latency for the same payload
+    use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
+    check(
+        24,
+        |rng| (1 + rng.below(1 << 22), rng.index(3)),
+        |&(bytes, shape_i)| {
+            let shape = [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly]
+                [shape_i];
+            let mut sc = Supercluster::build(&[XLinkCluster::nvl72(), XLinkCluster::ualink(32)], shape, 2);
+            let intra = sc.transfer_accel((0, 0), (0, 1), bytes, 0.0).unwrap();
+            let mut sc2 = Supercluster::build(&[XLinkCluster::nvl72(), XLinkCluster::ualink(32)], shape, 2);
+            let inter = sc2.transfer_accel((0, 0), (1, 0), bytes, 0.0).unwrap();
+            inter.latency >= intra.latency
+        },
+    )
+    .assert_ok();
+}
