@@ -1,7 +1,73 @@
 //! Bench target regenerating the paper's fig29 result (see DESIGN.md
-//! per-experiment index). Prints the table and times its computation.
+//! per-experiment index), then pricing the same topology shapes under
+//! *contended* traffic: a 16-rank all-to-all issued as real flows on the
+//! flow-level fabric vs the analytic idle-fabric estimate. Direct networks
+//! (torus, dragonfly) pay for their longer paths with higher per-link
+//! utilization; the delta column is the communication tax the analytic
+//! model cannot see.
+
+use commtax::benchkit::{fmt_ns, table_header, table_row, time_once};
+use commtax::fabric::flow::FabricSim;
+use commtax::fabric::link::LinkSpec;
+use commtax::fabric::netstack::SoftwareStack;
+use commtax::fabric::routing::RoutingPolicy;
+use commtax::fabric::topology::Topology;
+use commtax::sim::Engine;
+use commtax::workload::collectives::all_to_all_flows;
 
 fn main() {
-    let (table, _ns) = commtax::benchkit::time_once("fig29", commtax::experiments::fig29);
+    let (table, _ns) = time_once("fig29", commtax::experiments::fig29);
     table.print();
+
+    let n_ranks = 16usize;
+    let bytes = 1u64 << 24; // 16 MiB per rank
+    table_header(
+        "fig29 addendum — 16-rank all-to-all, analytic vs contended (16 MiB/rank)",
+        &["topology", "analytic", "contended", "tax", "mean util"],
+    );
+    let shapes: Vec<(&str, Topology)> = vec![
+        ("multi-Clos", Topology::multi_clos(64, 8, 4)),
+        ("3D-Torus", Topology::torus3d(4, 4, 4)),
+        ("DragonFly", Topology::dragonfly(8, 8)),
+    ];
+    for (name, topo) in shapes {
+        let sim = FabricSim::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+        let ranks: Vec<_> = sim.endpoints().into_iter().take(n_ranks).collect();
+        // analytic: idle-fabric all-to-all over the *mean* pair route, so
+        // the tax column measures contention, not route-length variance
+        // (intra- vs inter-leaf pairs differ in hop count)
+        let chunk = bytes.div_ceil(n_ranks as u64);
+        let mut pair_sum = 0.0;
+        let mut pairs = 0u32;
+        for i in 0..n_ranks {
+            for j in 0..n_ranks {
+                if i == j {
+                    continue;
+                }
+                let rp = commtax::datacenter::hierarchy::RoutedPath::resolve_sim(
+                    &sim,
+                    ranks[i],
+                    ranks[j],
+                    SoftwareStack::hw_mediated(),
+                )
+                .expect("route");
+                pair_sum += rp.time(chunk);
+                pairs += 1;
+            }
+        }
+        let analytic = (n_ranks - 1) as f64 * (pair_sum / pairs as f64);
+        // contended: n(n-1) real flows competing on shared links
+        let mut eng = Engine::new();
+        let run = all_to_all_flows(&sim, &mut eng, &ranks, bytes);
+        eng.run();
+        let contended = run.finish_time().expect("all-to-all completes");
+        let ledger = sim.ledger();
+        table_row(&[
+            name.to_string(),
+            fmt_ns(analytic),
+            fmt_ns(contended),
+            format!("{:.2}x", contended / analytic),
+            format!("{:.0}%", 100.0 * ledger.mean_utilization),
+        ]);
+    }
 }

@@ -5,6 +5,7 @@
 use commtax::benchkit::{bench, fmt_ns};
 use commtax::coordinator::batcher::DynamicBatcher;
 use commtax::coordinator::router::{Router, RoutingStrategy};
+use commtax::fabric::flow::{FabricSim, TrafficClass, Transfer};
 use commtax::fabric::link::LinkSpec;
 use commtax::fabric::routing::RoutingPolicy;
 use commtax::fabric::topology::Topology;
@@ -60,6 +61,44 @@ fn main() {
     });
     println!("  -> {:.2} M transfers/s", 100_000.0 / (r.median() / 1e9) / 1e6);
 
+    // 2c. flow-level fabric: route + max-min rate recompute on every flow
+    // start/finish — the contention-aware hot path. 512 concurrent flows
+    // per wave, 4 waves, PBR spreading; measures end-to-end events/s of
+    // the progressive-filling scheduler.
+    let mut rng3 = Rng::new(3);
+    let flows_per_wave = 512usize;
+    let waves = 4usize;
+    // fixed (src != dst) pair list: every iteration runs the identical
+    // workload and the flows/s denominator matches submissions exactly
+    let pairs: Vec<(usize, usize)> = {
+        let mut v = Vec::with_capacity(flows_per_wave * waves);
+        while v.len() < flows_per_wave * waves {
+            let a = rng3.index(72);
+            let b = rng3.index(72);
+            if a != b {
+                v.push((a, b));
+            }
+        }
+        v
+    };
+    let r = bench("flow fabric: 2k flows, rate recompute (PBR)", 1, 5, || {
+        let sim = FabricSim::new(Topology::single_clos(72, 9), LinkSpec::nvlink5_bundle(), RoutingPolicy::Pbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        for (k, &(a, b)) in pairs.iter().enumerate() {
+            let at = (k / flows_per_wave) as f64 * 50_000.0;
+            let sim2 = sim.clone();
+            let tr = Transfer::new(eps[a], eps[b], 1 << 20, TrafficClass::Collective);
+            eng.schedule_at(at, move |e| {
+                sim2.submit(e, tr);
+            });
+        }
+        eng.run();
+        assert_eq!(sim.completed() as usize, pairs.len());
+    });
+    let total_flows = pairs.len() as f64;
+    println!("  -> {:.1} k flows/s through the contended scheduler", total_flows / (r.median() / 1e9) / 1e3);
+
     // 3. batcher + router serving front-end (target: >> 1M req/s)
     let r = bench("coordinator: 100k route+batch+complete", 2, 10, || {
         let mut batcher = DynamicBatcher::new(8, 1000.0);
@@ -77,6 +116,6 @@ fn main() {
     println!("  -> {:.2} M requests/s", 100_000.0 / (r.median() / 1e9) / 1e6);
 
     // 4. full experiment-suite regeneration cost
-    let (_t, ns) = commtax::benchkit::time_once("all 15 experiment tables", commtax::experiments::all_tables);
+    let (_t, ns) = commtax::benchkit::time_once("all 16 experiment tables", commtax::experiments::all_tables);
     println!("  -> full paper regeneration in {}", fmt_ns(ns));
 }

@@ -1,7 +1,47 @@
 //! Bench target regenerating the paper's sec34 result (see DESIGN.md
-//! per-experiment index). Prints the table and times its computation.
+//! per-experiment index), then re-measuring the data-parallel gradient
+//! sync with the flow-level fabric: one all-reduce alone on the scale-out
+//! network vs two training jobs synchronizing concurrently over the same
+//! spine. §3.4's 35–70% communication tax assumes an *unshared* fabric —
+//! the contended column shows how much worse multi-tenant sharing makes it.
+
+use commtax::benchkit::{fmt_ns, table_header, table_row, time_once};
+use commtax::fabric::flow::FabricSim;
+use commtax::fabric::link::LinkSpec;
+use commtax::fabric::routing::RoutingPolicy;
+use commtax::fabric::topology::Topology;
+use commtax::workload::collectives::allreduce_alone_vs_shared;
 
 fn main() {
-    let (table, _ns) = commtax::benchkit::time_once("sec34", commtax::experiments::sec34);
+    let (table, _ns) = time_once("sec34", commtax::experiments::sec34);
     table.print();
+
+    // 16 ranks spread across 4 racks of a spine-leaf scale-out fabric,
+    // ring all-reduce of a 256 MiB gradient shard per rank.
+    let bytes = 1u64 << 28;
+    let mk = || {
+        let sim = FabricSim::new(Topology::spine_leaf(4, 4, 2), LinkSpec::ethernet_800g(), RoutingPolicy::Pbr);
+        let ranks = sim.endpoints();
+        (sim, ranks)
+    };
+    let (alone, shared, ledger) = allreduce_alone_vs_shared(mk, bytes).expect("routable all-reduce");
+
+    table_header(
+        "sec34 addendum — DP all-reduce on shared spine-leaf (16 ranks x 256 MiB)",
+        &["scenario", "completion", "vs alone", "peak util", "contention p99"],
+    );
+    table_row(&[
+        "one job".to_string(),
+        fmt_ns(alone),
+        "1.00x".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    table_row(&[
+        "two jobs, same spine".to_string(),
+        fmt_ns(shared),
+        format!("{:.2}x", shared / alone),
+        format!("{:.0}%", 100.0 * ledger.peak_utilization),
+        fmt_ns(ledger.contention.percentile(99.0)),
+    ]);
 }

@@ -39,9 +39,9 @@ pub fn parse_args(argv: &[String]) -> Args {
 }
 
 /// Experiment ids accepted by `report --exp`.
-pub const EXPERIMENTS: [&str; 17] = [
+pub const EXPERIMENTS: [&str; 18] = [
     "fig21", "fig22", "fig29", "fig31", "fig33", "fig34", "fig35", "fig36", "fig37", "fig41", "table1", "table2",
-    "table3", "sec34", "sec63", "ablations", "pd-disagg",
+    "table3", "sec34", "sec63", "ablations", "pd-disagg", "comm-tax",
 ];
 
 fn experiment_table(id: &str) -> Option<experiments::Table> {
@@ -63,6 +63,7 @@ fn experiment_table(id: &str) -> Option<experiments::Table> {
         "sec63" => experiments::sec63(),
         "ablations" => experiments::ablations(),
         "pd-disagg" => experiments::pd_disagg(),
+        "comm-tax" => experiments::comm_tax(),
         _ => return None,
     })
 }

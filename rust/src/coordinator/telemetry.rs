@@ -1,5 +1,11 @@
 //! Telemetry registry (§5.1's centralized monitoring requirement).
+//!
+//! Besides generic counters/gauges, the registry knows how to fold a
+//! fabric [`CommTaxLedger`] into itself, so serving/experiment drivers
+//! surface per-run communication-tax telemetry (utilization, contention
+//! percentiles, per-class traffic) through one stable report.
 
+use crate::fabric::flow::{CommTaxLedger, TrafficClass};
 use std::collections::BTreeMap;
 
 /// Counters and gauges, keyed by name. BTreeMap keeps report output stable.
@@ -23,6 +29,37 @@ impl Telemetry {
     /// Set a gauge.
     pub fn gauge(&mut self, name: &str, value: f64) {
         self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Raise a gauge to `value` only if it exceeds the stored one
+    /// (peak-style gauges).
+    pub fn gauge_max(&mut self, name: &str, value: f64) {
+        let slot = self.gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if value > *slot {
+            *slot = value;
+        }
+    }
+
+    /// Fold a fabric communication-tax ledger into the registry under
+    /// `prefix` (e.g. `"serve.fabric"`). Counters accumulate across calls;
+    /// peak gauges keep their high-water mark. A ledger is a *cumulative*
+    /// snapshot of its simulation — fold each run's ledger once, not once
+    /// per snapshot, or the counters double-count.
+    pub fn record_fabric(&mut self, prefix: &str, ledger: &CommTaxLedger) {
+        self.incr(&format!("{prefix}.flows"), ledger.flows);
+        self.incr(&format!("{prefix}.payload_bytes"), ledger.total_payload);
+        self.gauge(&format!("{prefix}.util.mean"), ledger.mean_utilization);
+        self.gauge_max(&format!("{prefix}.util.peak"), ledger.peak_utilization);
+        self.gauge(&format!("{prefix}.active_flows.mean"), ledger.mean_active_flows);
+        self.gauge_max(&format!("{prefix}.active_flows.peak"), ledger.peak_active_flows);
+        self.gauge(&format!("{prefix}.contention.mean_ns"), ledger.contention.mean());
+        self.gauge_max(&format!("{prefix}.contention.p99_ns"), ledger.contention.percentile(99.0));
+        for class in TrafficClass::ALL {
+            let bytes = ledger.class_bytes(class);
+            if bytes > 0 {
+                self.incr(&format!("{prefix}.payload.{}", class.name()), bytes);
+            }
+        }
     }
 
     /// Read a counter (0 when absent).
@@ -67,6 +104,37 @@ mod tests {
         t.gauge("util", 0.5);
         t.gauge("util", 0.7);
         assert_eq!(t.gauge_value("util"), Some(0.7));
+    }
+
+    #[test]
+    fn gauge_max_keeps_high_water_mark() {
+        let mut t = Telemetry::new();
+        t.gauge_max("peak", 0.4);
+        t.gauge_max("peak", 0.9);
+        t.gauge_max("peak", 0.2);
+        assert_eq!(t.gauge_value("peak"), Some(0.9));
+    }
+
+    #[test]
+    fn fabric_ledger_folds_into_registry() {
+        use crate::fabric::flow::{FabricSim, TrafficClass, Transfer};
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        use crate::sim::Engine;
+        let sim = FabricSim::new(Topology::star(4), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        sim.submit(&mut eng, Transfer::new(eps[0], eps[1], 4096, TrafficClass::KvCache));
+        sim.submit(&mut eng, Transfer::new(eps[1], eps[2], 8192, TrafficClass::Collective));
+        eng.run();
+        let mut t = Telemetry::new();
+        t.record_fabric("fabric", &sim.ledger());
+        assert_eq!(t.counter("fabric.flows"), 2);
+        assert_eq!(t.counter("fabric.payload_bytes"), 4096 + 8192);
+        assert_eq!(t.counter("fabric.payload.kvcache"), 4096);
+        assert!(t.gauge_value("fabric.util.peak").unwrap() > 0.0);
+        assert!(t.report().contains("fabric.flows"));
     }
 
     #[test]

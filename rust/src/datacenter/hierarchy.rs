@@ -8,8 +8,11 @@
 //! only carries inter-row traffic.
 
 use super::rack::{Rack, RackKind};
+use crate::fabric::flow::FabricSim;
 use crate::fabric::link::LinkSpec;
 use crate::fabric::netstack::SoftwareStack;
+use crate::fabric::topology::NodeId;
+use crate::fabric::{EdgeId, Fabric};
 
 /// Where two communicating endpoints sit relative to each other.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -52,6 +55,58 @@ impl CommPath {
     /// Zero-byte round-trip-ish latency (ns).
     pub fn base_latency(&self) -> f64 {
         self.stack.fixed_cost() + self.links.iter().map(|l| l.hop_latency()).sum::<f64>()
+    }
+}
+
+/// A [`CommPath`] resolved onto a *concrete* edge route of a built cluster
+/// topology: it keeps the analytic per-hop link list (so closed-form
+/// pricing still works) **and** the edge ids, so the same logical path can
+/// be issued as a real flow through [`FabricSim`] where it competes for
+/// link bandwidth with everything else in flight.
+#[derive(Clone, Debug)]
+pub struct RoutedPath {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Directed edge ids along the route, in hop order.
+    pub edges: Vec<EdgeId>,
+    /// Analytic equivalent of the route (links in hop order + stack).
+    pub path: CommPath,
+}
+
+impl RoutedPath {
+    /// Resolve the shortest route between two nodes of a built [`Fabric`],
+    /// wrapping the software `stack` around the concrete hops.
+    pub fn resolve(fabric: &Fabric, src: NodeId, dst: NodeId, stack: SoftwareStack) -> Option<RoutedPath> {
+        if src == dst {
+            return Some(RoutedPath { src, dst, edges: Vec::new(), path: CommPath { links: Vec::new(), stack } });
+        }
+        let route = fabric.topology().shortest_path(src, dst)?;
+        let edges: Vec<EdgeId> = route.as_ref().clone();
+        let links = edges.iter().map(|&e| fabric.link(e).clone()).collect();
+        Some(RoutedPath { src, dst, edges, path: CommPath { links, stack } })
+    }
+
+    /// Resolve against a flow-level [`FabricSim`] using its routing policy
+    /// (PBR picks the least-loaded equal-cost candidate at resolve time).
+    pub fn resolve_sim(sim: &FabricSim, src: NodeId, dst: NodeId, stack: SoftwareStack) -> Option<RoutedPath> {
+        let edges = sim.route(src, dst)?;
+        let links = edges.iter().map(|&e| sim.link(e)).collect();
+        Some(RoutedPath { src, dst, edges, path: CommPath { links, stack } })
+    }
+
+    /// Analytic end-to-end time for `bytes` over the resolved route.
+    pub fn time(&self, bytes: u64) -> f64 {
+        self.path.time(bytes)
+    }
+
+    /// Zero-byte latency of the resolved route.
+    pub fn base_latency(&self) -> f64 {
+        self.path.base_latency()
+    }
+
+    /// Hop count of the concrete route.
+    pub fn hops(&self) -> usize {
+        self.edges.len()
     }
 }
 
@@ -271,6 +326,37 @@ mod tests {
                 prev = t;
             }
         }
+    }
+
+    #[test]
+    fn routed_path_resolves_concrete_edges() {
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let fabric = Fabric::new(Topology::spine_leaf(2, 4, 2), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let eps = fabric.topology().endpoints().to_vec();
+        let rp = RoutedPath::resolve(&fabric, eps[0], eps[7], SoftwareStack::hw_mediated()).unwrap();
+        assert_eq!(rp.hops(), 4, "cross-rack spine-leaf route is 4 hops");
+        assert_eq!(rp.path.links.len(), rp.edges.len());
+        // analytic pricing agrees with the fabric's own idle estimate
+        let est = fabric.latency_estimate(eps[0], eps[7], 1 << 20).unwrap();
+        assert!((rp.time(1 << 20) - est).abs() < 1e-6, "rp={} est={est}", rp.time(1 << 20));
+        // same-node resolution is a free zero-hop path
+        let same = RoutedPath::resolve(&fabric, eps[0], eps[0], SoftwareStack::hw_mediated()).unwrap();
+        assert_eq!(same.hops(), 0);
+        assert_eq!(same.time(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn routed_path_resolves_against_flow_sim() {
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let sim = FabricSim::new(Topology::single_clos(8, 2), LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+        let eps = sim.endpoints();
+        let rp = RoutedPath::resolve_sim(&sim, eps[0], eps[1], SoftwareStack::hw_mediated()).unwrap();
+        assert_eq!(rp.hops(), 2);
+        // the resolved analytic time matches the sim's idle estimate
+        let est = sim.estimate(eps[0], eps[1], 1 << 16).unwrap();
+        assert!((rp.time(1 << 16) - est).abs() < 1e-6);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod tray;
 
 pub use builder::DatacenterSpec;
 pub use cluster::{ClusterKind, Supercluster, SuperclusterTopology, XLinkCluster};
-pub use hierarchy::{Building, Floor, HierarchyLevel, Row};
+pub use hierarchy::{Building, Floor, HierarchyLevel, RoutedPath, Row};
 pub use node::{AcceleratorSpec, ComputeNode, CpuSpec, Gb200Module};
 pub use rack::{Rack, RackKind};
 pub use tray::{MemoryTrayKind, Tray, TrayKind};

@@ -805,6 +805,131 @@ pub fn ablations() -> Table {
     }
 }
 
+/// Communication-tax ledger — the same traffic priced by the analytic
+/// (idle-fabric) model and by the flow-level contention-aware simulator,
+/// plus the per-link utilization telemetry the simulator emits. The spread
+/// between the two columns *is* the paper's communication tax; the
+/// analytic model is structurally blind to it.
+pub fn comm_tax() -> Table {
+    use crate::fabric::flow::{FabricSim, TrafficClass, Transfer};
+    use crate::fabric::routing::RoutingPolicy;
+    use crate::sim::Engine;
+    use crate::workload::collectives::allreduce_alone_vs_shared;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // (a) idle fabric: the flow model collapses to the analytic closed form
+    {
+        let sim = FabricSim::new(Topology::single_clos(8, 2), LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+        let eps = sim.endpoints();
+        let bytes = 16 * (1u64 << 20);
+        let est = sim.estimate(eps[0], eps[1], bytes).expect("route");
+        let mut eng = Engine::new();
+        let d = sim
+            .transfer_sync(&mut eng, Transfer::new(eps[0], eps[1], bytes, TrafficClass::Parameter))
+            .expect("transfer");
+        rows.push(vec![
+            "16 MiB transfer, idle Clos".into(),
+            fmt_ns(est),
+            fmt_ns(d.latency),
+            format!("{:+.2}% (must be ~0)", 100.0 * (d.latency / est - 1.0)),
+        ]);
+    }
+
+    // (b) one NVL72-style rack: ring all-reduce alone vs two concurrent
+    let mk = || {
+        let sim = FabricSim::new(Topology::star(8), LinkSpec::nvlink5_bundle(), RoutingPolicy::Hbr);
+        let ranks = sim.endpoints();
+        (sim, ranks)
+    };
+    let (alone, shared, collective_ledger) =
+        allreduce_alone_vs_shared(mk, 1u64 << 26).expect("routable all-reduce");
+    rows.push(vec![
+        "ring all-reduce, 8 ranks x 64 MiB".into(),
+        format!("alone: {}", fmt_ns(alone)),
+        format!("2 concurrent: {}", fmt_ns(shared)),
+        format!("{:.2}x tax", shared / alone),
+    ]);
+
+    // (c) the ledger rows for (b): where the tax landed, link by link
+    {
+        let ledger = &collective_ledger;
+        rows.push(vec![
+            "ledger: fabric totals".into(),
+            format!("{} flows", ledger.flows),
+            format!("{} payload", crate::benchkit::fmt_bytes(ledger.total_payload)),
+            format!("mean util {:.0}%, peak {:.0}%", 100.0 * ledger.mean_utilization, 100.0 * ledger.peak_utilization),
+        ]);
+        rows.push(vec![
+            "ledger: per-flow contention".into(),
+            format!("p50 {}", fmt_ns(ledger.contention.percentile(50.0))),
+            format!("p99 {}", fmt_ns(ledger.contention.percentile(99.0))),
+            format!("max {}", fmt_ns(ledger.contention.max())),
+        ]);
+        for l in ledger.hottest(3) {
+            rows.push(vec![
+                format!("hot link #{} ({})", l.edge, l.link),
+                format!("{} -> {}", l.src, l.dst),
+                format!("util {:.0}%", 100.0 * l.utilization),
+                format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+            ]);
+        }
+    }
+
+    // (d) serving with KV/activation flows on the shared fabric
+    {
+        // bursty arrivals over 4 clusters sharing one 2-plane pool fabric:
+        // concurrent KV prefetches outnumber the planes, so serving feels
+        // real link queueing
+        let cfg = crate::serve::ServeConfig {
+            requests: 96,
+            clusters: 4,
+            arrival_mean: 50_000.0,
+            kv: KvPlacement::Remote { remote_frac_pct: 80 },
+            ..Default::default()
+        };
+        let plat = Platform::composable_cxl();
+        // same compute model (local KV), no fabric — the contended run is
+        // this plus real KV/activation flows on the shared Clos
+        let baseline_cfg = crate::serve::ServeConfig { kv: KvPlacement::Local, ..cfg.clone() };
+        let plain = crate::serve::simulate_serving(&baseline_cfg, &plat);
+        let (contended, ledger) = crate::serve::simulate_serving_contended(&cfg, &plat);
+        rows.push(vec![
+            "serving p99 latency (96 reqs, 80% pooled KV)".into(),
+            format!("no-fabric: {}", fmt_ns(plain.latency.percentile(99.0))),
+            format!("contended: {}", fmt_ns(contended.latency.percentile(99.0))),
+            format!(
+                "fabric wait mean {}, flow contention p99 {}, KV traffic {}",
+                fmt_ns(contended.fabric_wait.mean()),
+                fmt_ns(ledger.contention.percentile(99.0)),
+                crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::KvCache))
+            ),
+        ]);
+
+        // (e) both runs' ledgers folded through the coordinator's
+        // telemetry registry — the stable per-run reporting path
+        let mut tel = crate::coordinator::telemetry::Telemetry::new();
+        tel.record_fabric("train.fabric", &collective_ledger);
+        tel.record_fabric("serve.fabric", &ledger);
+        rows.push(vec![
+            "telemetry registry".into(),
+            format!("train.fabric.flows {}", tel.counter("train.fabric.flows")),
+            format!("serve.fabric.flows {}", tel.counter("serve.fabric.flows")),
+            format!(
+                "serve util peak {:.0}%, contention p99 {}",
+                100.0 * tel.gauge_value("serve.fabric.util.peak").unwrap_or(0.0),
+                fmt_ns(tel.gauge_value("serve.fabric.contention.p99_ns").unwrap_or(0.0))
+            ),
+        ]);
+    }
+
+    Table {
+        title: "Comm-tax ledger — analytic vs flow-level contention".into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
 /// Prefill/decode disaggregation (§4.3's reconfiguration story): TTFT and
 /// inter-token latency under unified vs disaggregated engine pools.
 pub fn pd_disagg() -> Table {
@@ -847,6 +972,7 @@ pub fn all_tables() -> Vec<Table> {
         fig41(),
         sec34(),
         sec63(),
+        comm_tax(),
     ]
 }
 
@@ -906,6 +1032,19 @@ mod tests {
             let md = t.markdown();
             assert!(md.contains("###"));
         }
+    }
+
+    #[test]
+    fn comm_tax_idle_matches_and_contention_taxes() {
+        let t = comm_tax();
+        // idle fabric: flow model within 1% of the analytic estimate
+        let delta: f64 = t.rows[0][3].split('%').next().unwrap().parse().unwrap();
+        assert!(delta.abs() < 1.0, "idle delta={delta}%");
+        // two concurrent collectives must pay a visible tax
+        let tax: f64 = t.rows[1][3].split('x').next().unwrap().parse().unwrap();
+        assert!(tax > 1.2, "tax={tax}");
+        // per-link telemetry rows exist
+        assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
     }
 
     #[test]

@@ -1,0 +1,1032 @@
+//! Flow-level, contention-aware fabric simulation on the event engine.
+//!
+//! The analytic [`super::Fabric`] prices a transfer with closed-form math
+//! against per-edge `busy_until` scalars — adequate for back-to-back
+//! traffic, but structurally blind to the paper's central object: the
+//! *communication tax* that appears when concurrent flows share links.
+//! [`FabricSim`] models it directly:
+//!
+//! * every [`Transfer`] is routed along a concrete edge path in the owned
+//!   [`Topology`] (HBR fixed shortest path, or PBR spreading over the
+//!   equal-cost set by live flow count);
+//! * each directed edge is a shared fluid resource; active flows get
+//!   **max-min fair** rates via progressive filling, weighted by each
+//!   edge's flit-framing expansion so wire bytes (not payload bytes) are
+//!   what saturates a link;
+//! * the simulation is **event-driven at flow granularity**: rates only
+//!   change when a flow starts or finishes, so we recompute bottleneck
+//!   rates at those instants and reschedule the next completion — no
+//!   per-flit or per-quantum ticking, which keeps supercluster-scale runs
+//!   cheap (work per rate change is `O(active flows × path length)`);
+//! * a per-link **communication-tax ledger** (delivered payload bytes,
+//!   time-integrated utilization, peak concurrent flows, per-flow
+//!   contention delay) is maintained as the run advances and can be
+//!   exported into experiment reports and [`crate::coordinator::telemetry`].
+//!
+//! An *uncontended* flow completes in exactly `Σ hop_latency +
+//! max_e wire_time_e(bytes)` — the same figure the analytic
+//! [`crate::datacenter::hierarchy::CommPath::time`] produces for the
+//! equivalent hardware-mediated path — so the flow model degrades to the
+//! closed form when the fabric is idle, and everything above that baseline
+//! is measured queueing/contention.
+//!
+//! Units follow the crate convention: time ns (`f64`), sizes bytes,
+//! bandwidth bytes/ns.
+
+use super::link::LinkSpec;
+use super::routing::RoutingPolicy;
+use super::topology::{NodeId, Topology};
+use super::EdgeId;
+use crate::sim::stats::TimeWeighted;
+use crate::sim::{Engine, SimTime, Summary};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Identifier of a flow within one [`FabricSim`] (submission order).
+pub type FlowId = u64;
+
+/// What a transfer carries — drives per-class ledger accounting so the
+/// tax can be attributed (gradient sync vs KV fetch vs activation hop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    /// Collective-communication step (all-reduce chunk, all-to-all shard).
+    Collective,
+    /// KV-cache movement between accelerator and pool.
+    KvCache,
+    /// Activation traffic (pipeline/tensor boundaries, prefill→decode).
+    Activation,
+    /// Parameter/weight movement (loads, rebalancing).
+    Parameter,
+    /// Small control/metadata messages.
+    Control,
+}
+
+impl TrafficClass {
+    /// All classes, in ledger column order.
+    pub const ALL: [TrafficClass; 5] =
+        [Self::Collective, Self::KvCache, Self::Activation, Self::Parameter, Self::Control];
+
+    /// Stable lowercase name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Collective => "collective",
+            Self::KvCache => "kvcache",
+            Self::Activation => "activation",
+            Self::Parameter => "parameter",
+            Self::Control => "control",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Self::Collective => 0,
+            Self::KvCache => 1,
+            Self::Activation => 2,
+            Self::Parameter => 3,
+            Self::Control => 4,
+        }
+    }
+}
+
+/// One transfer request.
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Payload bytes (wire expansion applied per edge from its flit format).
+    pub bytes: u64,
+    pub class: TrafficClass,
+}
+
+impl Transfer {
+    /// Convenience constructor.
+    pub fn new(src: NodeId, dst: NodeId, bytes: u64, class: TrafficClass) -> Self {
+        Transfer { src, dst, bytes, class }
+    }
+}
+
+/// Completion record handed to the submitter's callback.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowDone {
+    pub id: FlowId,
+    pub class: TrafficClass,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    /// Submission time (ns).
+    pub submitted: SimTime,
+    /// Delivery time of the last byte (ns).
+    pub arrival: SimTime,
+    /// End-to-end latency: `arrival - submitted`.
+    pub latency: f64,
+    /// Uncontended latency over the same route (hop latencies + bottleneck
+    /// wire time) — what the analytic model would have charged.
+    pub ideal: f64,
+    /// The communication tax on this flow: `latency - ideal` (>= 0 up to
+    /// float rounding).
+    pub contention: f64,
+    /// Hops traversed.
+    pub hops: usize,
+}
+
+/// Per-link row of the communication-tax ledger.
+#[derive(Clone, Debug)]
+pub struct LinkUse {
+    pub edge: EdgeId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Link technology name (from [`LinkSpec::name`]).
+    pub link: &'static str,
+    /// Payload bytes delivered across this edge.
+    pub payload: u64,
+    /// Time-weighted utilization in [0, 1] over the elapsed sim span.
+    pub utilization: f64,
+    /// Peak number of flows simultaneously routed over this edge.
+    pub peak_flows: u32,
+}
+
+/// Aggregated communication-tax ledger for one simulation run.
+#[derive(Clone, Debug)]
+pub struct CommTaxLedger {
+    /// Simulated span the utilization figures are normalized over (ns).
+    pub elapsed: f64,
+    /// Flows completed.
+    pub flows: u64,
+    /// Total payload bytes delivered.
+    pub total_payload: u64,
+    /// Payload bytes per traffic class (indexed per [`TrafficClass::ALL`]).
+    pub class_payload: [u64; 5],
+    /// Every edge that carried traffic, in edge-id order.
+    pub per_link: Vec<LinkUse>,
+    /// Per-flow contention delay (`latency - ideal`) distribution.
+    pub contention: Summary,
+    /// Mean utilization over links that carried traffic.
+    pub mean_utilization: f64,
+    /// Highest per-link utilization.
+    pub peak_utilization: f64,
+    /// Mean and peak concurrent active flows over time.
+    pub mean_active_flows: f64,
+    pub peak_active_flows: f64,
+}
+
+impl CommTaxLedger {
+    /// The `n` busiest links by utilization (ties broken by edge id).
+    pub fn hottest(&self, n: usize) -> Vec<&LinkUse> {
+        let mut refs: Vec<&LinkUse> = self.per_link.iter().collect();
+        refs.sort_by(|a, b| b.utilization.partial_cmp(&a.utilization).unwrap_or(std::cmp::Ordering::Equal));
+        refs.truncate(n);
+        refs
+    }
+
+    /// Payload bytes delivered for one traffic class.
+    pub fn class_bytes(&self, class: TrafficClass) -> u64 {
+        self.class_payload[class.index()]
+    }
+}
+
+/// One in-flight (or staged) flow.
+struct FlowState {
+    class: TrafficClass,
+    src: NodeId,
+    dst: NodeId,
+    bytes: u64,
+    /// Edge ids along the route (shares the topology's cached path storage
+    /// on the HBR fast path — no per-flow copy).
+    path: Arc<Vec<EdgeId>>,
+    /// Wire-byte expansion per path edge (`wire_bytes / payload`); the flow
+    /// consumes `rate × weight` of an edge's capacity.
+    weight: Vec<f64>,
+    /// Payload bytes still to stream.
+    remaining: f64,
+    /// Current max-min fair payload rate (bytes/ns).
+    rate: f64,
+    /// Predicted completion under the current rate assignment.
+    finish_at: SimTime,
+    submitted: SimTime,
+    /// Uncontended latency over this route.
+    ideal: f64,
+}
+
+/// Trace record kinds (kept numeric for compact deterministic rendering).
+const TRACE_SUBMIT: u8 = 0;
+const TRACE_DELIVER: u8 = 1;
+
+struct TraceRec {
+    t: SimTime,
+    kind: u8,
+    id: FlowId,
+    src: NodeId,
+    dst: NodeId,
+    bytes: u64,
+}
+
+type DoneCb = Box<dyn FnOnce(&mut Engine, FlowDone)>;
+
+/// Reusable buffers for the progressive-filling pass: rate recomputes run
+/// on every flow start/finish (the hot path), so their working vectors are
+/// kept across calls instead of reallocated.
+#[derive(Default)]
+struct RateScratch {
+    ids: Vec<FlowId>,
+    cap_left: Vec<f64>,
+    wsum: Vec<f64>,
+    rate: Vec<f64>,
+    frozen: Vec<bool>,
+    used: Vec<f64>,
+}
+
+/// Interior state of the simulator (single-threaded, event-callback shared).
+struct FlowNet {
+    topo: Topology,
+    /// Link spec per directed edge (parallel to the topology edge list).
+    links: Vec<LinkSpec>,
+    policy: RoutingPolicy,
+    /// Flows streaming right now (BTreeMap: deterministic iteration order).
+    active: BTreeMap<FlowId, FlowState>,
+    /// Flows submitted but still paying the head-of-message hop latency.
+    staged: BTreeMap<FlowId, FlowState>,
+    pending_cb: HashMap<FlowId, DoneCb>,
+    next_id: FlowId,
+    /// Generation counter: bumped on every rate recompute so completion
+    /// events scheduled under an older rate assignment become no-ops.
+    epoch: u64,
+    /// Clock of the last state advance.
+    last_t: SimTime,
+    /// Edges currently carrying flows, with their total wire rate.
+    in_use: Vec<(EdgeId, f64)>,
+    /// Live flow count per edge (routing signal + peak tracking).
+    flows_on_edge: Vec<u32>,
+    // ----- ledger -------------------------------------------------------
+    edge_payload: Vec<u64>,
+    edge_util_ns: Vec<f64>,
+    edge_peak: Vec<u32>,
+    class_payload: [u64; 5],
+    total_payload: u64,
+    completed: u64,
+    contention: Summary,
+    concurrency: TimeWeighted,
+    trace: Vec<TraceRec>,
+    trace_cap: usize,
+    scratch: RateScratch,
+}
+
+impl FlowNet {
+    fn new(topo: Topology, policy: RoutingPolicy, links: Vec<LinkSpec>) -> Self {
+        let ne = links.len();
+        FlowNet {
+            topo,
+            links,
+            policy,
+            active: BTreeMap::new(),
+            staged: BTreeMap::new(),
+            pending_cb: HashMap::new(),
+            next_id: 0,
+            epoch: 0,
+            last_t: 0.0,
+            in_use: Vec::new(),
+            flows_on_edge: vec![0; ne],
+            edge_payload: vec![0; ne],
+            edge_util_ns: vec![0.0; ne],
+            edge_peak: vec![0; ne],
+            class_payload: [0; 5],
+            total_payload: 0,
+            completed: 0,
+            contention: Summary::new(),
+            concurrency: TimeWeighted::new(),
+            trace: Vec::new(),
+            trace_cap: 1 << 16,
+            scratch: RateScratch::default(),
+        }
+    }
+
+    /// Pick a route for (src, dst). HBR: the cached shortest path. PBR:
+    /// the equal-cost candidate whose most-loaded edge carries the fewest
+    /// live flows (deterministic tie-break on candidate order).
+    fn route(&self, src: NodeId, dst: NodeId) -> Option<Arc<Vec<EdgeId>>> {
+        match self.policy {
+            // HBR: share the cache's Arc directly — no copy per flow.
+            RoutingPolicy::Hbr => self.topo.shortest_path(src, dst),
+            RoutingPolicy::Pbr => {
+                let cands = self.topo.equal_cost_paths_cached(src, dst, 8);
+                if cands.is_empty() {
+                    return None;
+                }
+                let mut best = 0usize;
+                let mut best_key = (u32::MAX, u64::MAX);
+                for (i, p) in cands.iter().enumerate() {
+                    let peak = p.iter().map(|&e| self.flows_on_edge[e]).max().unwrap_or(0);
+                    let sum: u64 = p.iter().map(|&e| self.flows_on_edge[e] as u64).sum();
+                    if (peak, sum) < best_key {
+                        best_key = (peak, sum);
+                        best = i;
+                    }
+                }
+                Some(Arc::new(cands[best].clone()))
+            }
+        }
+    }
+
+    /// Fixed hop latency and bottleneck wire time of a concrete route —
+    /// the idle (analytic-equivalent) cost of moving `bytes` over it.
+    /// [`FabricSim::estimate`] and flow submission share this, so
+    /// `FlowDone::ideal` can never drift from the public estimate.
+    fn hop_wire(&self, path: &[EdgeId], bytes: u64) -> (f64, f64) {
+        let mut hop = 0.0;
+        let mut wire: f64 = 0.0;
+        for &e in path {
+            hop += self.links[e].hop_latency();
+            wire = wire.max(self.links[e].wire_time(bytes));
+        }
+        (hop, wire)
+    }
+
+    /// Stream all active flows forward to `now` and integrate utilization.
+    /// The net clock never moves backwards (a fresh engine driving an old
+    /// sim resumes from the sim's high-water mark).
+    fn advance(&mut self, now: SimTime) {
+        let dt = now - self.last_t;
+        if dt > 0.0 {
+            for f in self.active.values_mut() {
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+            for &(e, wire_rate) in &self.in_use {
+                let cap = self.links[e].bw;
+                self.edge_util_ns[e] += dt * (wire_rate / cap).min(1.0);
+            }
+            self.last_t = now;
+        }
+    }
+
+    /// Progressive-filling max-min fair rate assignment over active flows,
+    /// weighted by per-edge wire expansion. O(iterations × flows × hops)
+    /// with at most one freeze round per flow.
+    fn recompute_rates(&mut self, now: SimTime) {
+        self.epoch += 1;
+        self.in_use.clear();
+        if self.active.is_empty() {
+            return;
+        }
+        let ne = self.links.len();
+        // pull the scratch buffers out so the borrow checker sees them as
+        // locals, disjoint from `self.active`/`self.links`
+        let mut s = std::mem::take(&mut self.scratch);
+        s.ids.clear();
+        s.ids.extend(self.active.keys().copied());
+        s.cap_left.clear();
+        s.cap_left.extend(self.links.iter().map(|l| l.bw));
+        s.wsum.clear();
+        s.wsum.resize(ne, 0.0);
+        s.rate.clear();
+        s.rate.resize(s.ids.len(), 0.0);
+        s.frozen.clear();
+        s.frozen.resize(s.ids.len(), false);
+        s.used.clear();
+        s.used.resize(ne, 0.0);
+        let mut left = s.ids.len();
+        while left > 0 {
+            for w in s.wsum.iter_mut() {
+                *w = 0.0;
+            }
+            for (i, id) in s.ids.iter().enumerate() {
+                if s.frozen[i] {
+                    continue;
+                }
+                let f = &self.active[id];
+                for (k, &e) in f.path.iter().enumerate() {
+                    s.wsum[e] += f.weight[k];
+                }
+            }
+            let mut inc = f64::INFINITY;
+            for e in 0..ne {
+                if s.wsum[e] > 0.0 {
+                    let room = (s.cap_left[e] / s.wsum[e]).max(0.0);
+                    if room < inc {
+                        inc = room;
+                    }
+                }
+            }
+            if !inc.is_finite() {
+                break;
+            }
+            for (i, r) in s.rate.iter_mut().enumerate() {
+                if !s.frozen[i] {
+                    *r += inc;
+                }
+            }
+            for e in 0..ne {
+                if s.wsum[e] > 0.0 {
+                    s.cap_left[e] -= inc * s.wsum[e];
+                }
+            }
+            let mut any = false;
+            for (i, id) in s.ids.iter().enumerate() {
+                if s.frozen[i] {
+                    continue;
+                }
+                let f = &self.active[id];
+                if f.path.iter().any(|&e| s.cap_left[e] <= self.links[e].bw * 1e-9) {
+                    s.frozen[i] = true;
+                    left -= 1;
+                    any = true;
+                }
+            }
+            if !any {
+                // numerical guard: no link saturated despite finite inc
+                break;
+            }
+        }
+        for (i, id) in s.ids.iter().enumerate() {
+            let f = self.active.get_mut(id).expect("active flow");
+            f.rate = s.rate[i];
+            f.finish_at = if f.rate > 0.0 { now + f.remaining / f.rate } else { f64::INFINITY };
+            for (k, &e) in f.path.iter().enumerate() {
+                s.used[e] += s.rate[i] * f.weight[k];
+            }
+        }
+        for (e, &u) in s.used.iter().enumerate() {
+            if u > 0.0 {
+                self.in_use.push((e, u));
+            }
+        }
+        self.scratch = s;
+    }
+
+    fn next_finish(&self) -> Option<SimTime> {
+        let mut t = f64::INFINITY;
+        for f in self.active.values() {
+            if f.finish_at < t {
+                t = f.finish_at;
+            }
+        }
+        if t.is_finite() {
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    fn record_trace(&mut self, t: SimTime, kind: u8, id: FlowId, src: NodeId, dst: NodeId, bytes: u64) {
+        if self.trace.len() < self.trace_cap {
+            self.trace.push(TraceRec { t, kind, id, src, dst, bytes });
+        }
+    }
+
+    /// Ledger bookkeeping at delivery time.
+    fn settle(&mut self, f: &FlowState, id: FlowId, now: SimTime) -> FlowDone {
+        for &e in f.path.iter() {
+            self.edge_payload[e] += f.bytes;
+            self.flows_on_edge[e] = self.flows_on_edge[e].saturating_sub(1);
+        }
+        self.total_payload += f.bytes;
+        self.class_payload[f.class.index()] += f.bytes;
+        self.completed += 1;
+        let latency = now - f.submitted;
+        let contention = (latency - f.ideal).max(0.0);
+        self.contention.add(contention);
+        self.record_trace(now, TRACE_DELIVER, id, f.src, f.dst, f.bytes);
+        FlowDone {
+            id,
+            class: f.class,
+            src: f.src,
+            dst: f.dst,
+            bytes: f.bytes,
+            submitted: f.submitted,
+            arrival: now,
+            latency,
+            ideal: f.ideal,
+            contention,
+            hops: f.path.len(),
+        }
+    }
+}
+
+/// Flow-level contention-aware fabric simulator. Cheap to clone: clones
+/// share the same interior state (the handle is an `Rc`), which is what
+/// event callbacks capture.
+#[derive(Clone)]
+pub struct FabricSim {
+    net: Rc<RefCell<FlowNet>>,
+}
+
+impl std::fmt::Debug for FabricSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.net.try_borrow() {
+            Ok(n) => f
+                .debug_struct("FabricSim")
+                .field("active", &n.active.len())
+                .field("completed", &n.completed)
+                .field("edges", &n.links.len())
+                .finish(),
+            Err(_) => f.debug_struct("FabricSim").finish_non_exhaustive(),
+        }
+    }
+}
+
+impl FabricSim {
+    /// Homogeneous fabric: every edge of `topo` uses `link`.
+    pub fn new(topo: Topology, link: LinkSpec, policy: RoutingPolicy) -> Self {
+        Self::new_with(topo, policy, |_, _| link.clone())
+    }
+
+    /// Heterogeneous fabric: per-edge link specs chosen by `link_for`.
+    pub fn new_with(topo: Topology, policy: RoutingPolicy, link_for: impl Fn(EdgeId, &Topology) -> LinkSpec) -> Self {
+        let links: Vec<LinkSpec> = (0..topo.edge_count()).map(|e| link_for(e, &topo)).collect();
+        FabricSim { net: Rc::new(RefCell::new(FlowNet::new(topo, policy, links))) }
+    }
+
+    /// Endpoint node ids of the owned topology.
+    pub fn endpoints(&self) -> Vec<NodeId> {
+        self.net.borrow().topo.endpoints().to_vec()
+    }
+
+    /// Run `f` against the owned topology.
+    pub fn with_topology<R>(&self, f: impl FnOnce(&Topology) -> R) -> R {
+        f(&self.net.borrow().topo)
+    }
+
+    /// Routing policy in force.
+    pub fn policy(&self) -> RoutingPolicy {
+        self.net.borrow().policy
+    }
+
+    /// Link spec of a directed edge (cloned out of the shared state).
+    pub fn link(&self, e: EdgeId) -> LinkSpec {
+        self.net.borrow().links[e].clone()
+    }
+
+    /// The route the current policy would pick right now (edge ids), or
+    /// `None` when unreachable. Same selection logic as [`Self::submit`].
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<Vec<EdgeId>> {
+        if src == dst {
+            return Some(Vec::new());
+        }
+        self.net.borrow().route(src, dst).map(|p| p.as_ref().clone())
+    }
+
+    /// Flows currently streaming (excludes staged submissions).
+    pub fn active_flows(&self) -> usize {
+        self.net.borrow().active.len()
+    }
+
+    /// Flows delivered so far.
+    pub fn completed(&self) -> u64 {
+        self.net.borrow().completed
+    }
+
+    /// Payload bytes delivered so far.
+    pub fn total_payload(&self) -> u64 {
+        self.net.borrow().total_payload
+    }
+
+    /// Analytic uncontended latency over the route the current policy would
+    /// pick: `Σ hop_latency + max_e wire_time_e(bytes)`. The flow model
+    /// reproduces exactly this figure when the fabric is otherwise idle.
+    pub fn estimate(&self, src: NodeId, dst: NodeId, bytes: u64) -> Option<f64> {
+        if src == dst {
+            return Some(0.0);
+        }
+        let n = self.net.borrow();
+        let path = n.route(src, dst)?;
+        let (hop, wire) = n.hop_wire(&path, bytes);
+        Some(hop + wire)
+    }
+
+    /// Submit a transfer at the engine's current time; `done` fires when the
+    /// last byte arrives. Returns `None` (dropping `done`) when no route
+    /// exists.
+    pub fn submit_with(
+        &self,
+        eng: &mut Engine,
+        tr: Transfer,
+        done: impl FnOnce(&mut Engine, FlowDone) + 'static,
+    ) -> Option<FlowId> {
+        let now = eng.now();
+        // Same-node transfers are local copies: free and instant.
+        if tr.src == tr.dst {
+            let id = {
+                let mut n = self.net.borrow_mut();
+                let id = n.next_id;
+                n.next_id += 1;
+                n.completed += 1;
+                // keep the ledger's byte columns consistent with its flow
+                // count even though no edge is crossed
+                n.total_payload += tr.bytes;
+                n.class_payload[tr.class.index()] += tr.bytes;
+                n.contention.add(0.0);
+                n.record_trace(now, TRACE_SUBMIT, id, tr.src, tr.dst, tr.bytes);
+                n.record_trace(now, TRACE_DELIVER, id, tr.src, tr.dst, tr.bytes);
+                id
+            };
+            let d = FlowDone {
+                id,
+                class: tr.class,
+                src: tr.src,
+                dst: tr.dst,
+                bytes: tr.bytes,
+                submitted: now,
+                arrival: now,
+                latency: 0.0,
+                ideal: 0.0,
+                contention: 0.0,
+                hops: 0,
+            };
+            eng.schedule_in(0.0, move |e| done(e, d));
+            return Some(id);
+        }
+        let (id, hop_lat) = {
+            let mut n = self.net.borrow_mut();
+            let path = n.route(tr.src, tr.dst)?;
+            let (hop, wire) = n.hop_wire(&path, tr.bytes);
+            let weight: Vec<f64> = path
+                .iter()
+                .map(|&e| {
+                    let l = &n.links[e];
+                    if tr.bytes > 0 { l.wire_bytes(tr.bytes) as f64 / tr.bytes as f64 } else { 1.0 }
+                })
+                .collect();
+            let id = n.next_id;
+            n.next_id += 1;
+            for &e in path.iter() {
+                n.flows_on_edge[e] += 1;
+                if n.flows_on_edge[e] > n.edge_peak[e] {
+                    n.edge_peak[e] = n.flows_on_edge[e];
+                }
+            }
+            n.record_trace(now, TRACE_SUBMIT, id, tr.src, tr.dst, tr.bytes);
+            let state = FlowState {
+                class: tr.class,
+                src: tr.src,
+                dst: tr.dst,
+                bytes: tr.bytes,
+                path,
+                weight,
+                remaining: tr.bytes as f64,
+                rate: 0.0,
+                finish_at: f64::INFINITY,
+                submitted: now,
+                ideal: hop + wire,
+            };
+            n.staged.insert(id, state);
+            (id, hop)
+        };
+        self.net.borrow_mut().pending_cb.insert(id, Box::new(done));
+        // The message head pays the fixed per-hop latencies up front; the
+        // body starts streaming (and competing for bandwidth) after them.
+        let net = self.net.clone();
+        eng.schedule_in(hop_lat, move |e| Self::activate(net, e, id));
+        Some(id)
+    }
+
+    /// Submit without a completion callback.
+    pub fn submit(&self, eng: &mut Engine, tr: Transfer) -> Option<FlowId> {
+        self.submit_with(eng, tr, |_, _| {})
+    }
+
+    /// Submit and drive the engine until this flow delivers. Other pending
+    /// flows progress naturally while waiting. Returns `None` when no route
+    /// exists (or the engine drains without delivery, e.g. a horizon stop).
+    pub fn transfer_sync(&self, eng: &mut Engine, tr: Transfer) -> Option<FlowDone> {
+        let slot: Rc<RefCell<Option<FlowDone>>> = Rc::new(RefCell::new(None));
+        let out = slot.clone();
+        self.submit_with(eng, tr, move |_, d| {
+            *out.borrow_mut() = Some(d);
+        })?;
+        // drop the read borrow before stepping: the completion callback
+        // needs borrow_mut on the same cell
+        loop {
+            if slot.borrow().is_some() {
+                break;
+            }
+            if !eng.step() {
+                break;
+            }
+        }
+        let d = slot.borrow_mut().take();
+        d
+    }
+
+    fn activate(net: Rc<RefCell<FlowNet>>, eng: &mut Engine, id: FlowId) {
+        let now = eng.now();
+        {
+            let mut n = net.borrow_mut();
+            n.advance(now);
+            if let Some(f) = n.staged.remove(&id) {
+                n.active.insert(id, f);
+                let count = n.active.len() as f64;
+                n.concurrency.set(now, count);
+                n.recompute_rates(now);
+            }
+        }
+        Self::drive(&net, eng);
+    }
+
+    /// Schedule the next completion under the current rate assignment. A
+    /// later rate change bumps the epoch, turning this event into a no-op.
+    fn drive(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+        let (next, epoch) = {
+            let n = net.borrow();
+            (n.next_finish(), n.epoch)
+        };
+        if let Some(t) = next {
+            let netc = net.clone();
+            eng.schedule_at(t, move |e| {
+                let live = netc.borrow().epoch == epoch;
+                if live {
+                    Self::complete_due(netc, e);
+                }
+            });
+        }
+    }
+
+    fn complete_due(net: Rc<RefCell<FlowNet>>, eng: &mut Engine) {
+        let now = eng.now();
+        let mut done: Vec<(FlowDone, Option<DoneCb>)> = Vec::new();
+        {
+            let mut n = net.borrow_mut();
+            n.advance(now);
+            let due: Vec<FlowId> =
+                n.active.iter().filter(|(_, f)| f.finish_at <= now + 1e-6).map(|(id, _)| *id).collect();
+            for id in due {
+                let f = n.active.remove(&id).expect("due flow");
+                let d = n.settle(&f, id, now);
+                let cb = n.pending_cb.remove(&id);
+                done.push((d, cb));
+            }
+            let count = n.active.len() as f64;
+            n.concurrency.set(now, count);
+            n.recompute_rates(now);
+        }
+        for (d, cb) in done {
+            if let Some(cb) = cb {
+                cb(eng, d);
+            }
+        }
+        Self::drive(&net, eng);
+    }
+
+    /// Snapshot the communication-tax ledger.
+    pub fn ledger(&self) -> CommTaxLedger {
+        let n = self.net.borrow();
+        let elapsed = n.last_t.max(1e-9);
+        let mut per_link = Vec::new();
+        let mut util_sum = 0.0;
+        let mut util_peak: f64 = 0.0;
+        for e in 0..n.links.len() {
+            if n.edge_payload[e] == 0 && n.edge_util_ns[e] == 0.0 {
+                continue;
+            }
+            let (src, dst) = n.topo.edge(e);
+            let utilization = (n.edge_util_ns[e] / elapsed).min(1.0);
+            util_sum += utilization;
+            if utilization > util_peak {
+                util_peak = utilization;
+            }
+            per_link.push(LinkUse {
+                edge: e,
+                src,
+                dst,
+                link: n.links[e].name,
+                payload: n.edge_payload[e],
+                utilization,
+                peak_flows: n.edge_peak[e],
+            });
+        }
+        let mean_utilization = if per_link.is_empty() { 0.0 } else { util_sum / per_link.len() as f64 };
+        CommTaxLedger {
+            elapsed: n.last_t,
+            flows: n.completed,
+            total_payload: n.total_payload,
+            class_payload: n.class_payload,
+            per_link,
+            contention: n.contention.clone(),
+            mean_utilization,
+            peak_utilization: util_peak,
+            mean_active_flows: n.concurrency.mean_until(n.last_t),
+            peak_active_flows: n.concurrency.peak(),
+        }
+    }
+
+    /// Render the flow event trace as stable text — two runs with the same
+    /// inputs produce byte-identical output (the determinism contract).
+    pub fn trace_render(&self) -> String {
+        let n = self.net.borrow();
+        let mut out = String::new();
+        for r in &n.trace {
+            let kind = if r.kind == TRACE_SUBMIT { "submit" } else { "deliver" };
+            out.push_str(&format!(
+                "{t:.3} {kind} flow={id} {src}->{dst} bytes={bytes}\n",
+                t = r.t,
+                id = r.id,
+                src = r.src,
+                dst = r.dst,
+                bytes = r.bytes,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::Topology;
+
+    fn star_sim(n: usize, policy: RoutingPolicy) -> FabricSim {
+        FabricSim::new(Topology::star(n), LinkSpec::cxl3_x16(), policy)
+    }
+
+    #[test]
+    fn idle_flow_matches_analytic_exactly() {
+        let sim = star_sim(2, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let bytes = 1u64 << 24;
+        let est = sim.estimate(eps[0], eps[1], bytes).unwrap();
+        // analytic cross-check against the equivalent 2-hop CommPath
+        let path = crate::datacenter::hierarchy::CommPath {
+            links: vec![LinkSpec::cxl3_x16(), LinkSpec::cxl3_x16()],
+            stack: crate::fabric::netstack::SoftwareStack::hw_mediated(),
+        };
+        assert!((est - path.time(bytes)).abs() < 1e-6, "est={est} path={}", path.time(bytes));
+        let mut eng = Engine::new();
+        let d = sim.transfer_sync(&mut eng, Transfer::new(eps[0], eps[1], bytes, TrafficClass::Collective)).unwrap();
+        let rel = (d.latency - est).abs() / est;
+        assert!(rel < 0.01, "latency={} est={est}", d.latency);
+        assert!(d.contention < est * 0.01, "idle flow must pay no tax, got {}", d.contention);
+    }
+
+    #[test]
+    fn sharing_halves_rate() {
+        let sim = star_sim(3, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let bytes = 1u64 << 24;
+        let solo = {
+            let mut eng = Engine::new();
+            sim.transfer_sync(&mut eng, Transfer::new(eps[0], eps[1], bytes, TrafficClass::Collective))
+                .unwrap()
+                .latency
+        };
+        // fresh sim: two flows leaving eps[0] at once share the e0->switch edge
+        let sim = star_sim(3, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        let done: Rc<RefCell<Vec<FlowDone>>> = Rc::new(RefCell::new(Vec::new()));
+        for &dst in &[eps[1], eps[2]] {
+            let d = done.clone();
+            sim.submit_with(&mut eng, Transfer::new(eps[0], dst, bytes, TrafficClass::Collective), move |_, r| {
+                d.borrow_mut().push(r)
+            });
+        }
+        eng.run();
+        let rs = done.borrow();
+        assert_eq!(rs.len(), 2);
+        for r in rs.iter() {
+            assert!(r.latency > 1.8 * solo, "shared={} solo={solo}", r.latency);
+            assert!(r.latency < 2.2 * solo, "shared={} solo={solo}", r.latency);
+            assert!(r.contention > 0.0);
+        }
+    }
+
+    #[test]
+    fn maxmin_downstream_flow_gets_leftover() {
+        // f1: a->b, f2: a->c (share a->sw), f3: d->b (shares sw->b with f1).
+        // Max-min: f1 and f2 pinned to 1/2 by a->sw; f3 then also gets 1/2
+        // of sw->b. All three finish around 2x the solo wire time.
+        let sim = star_sim(4, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let bytes = 1u64 << 24;
+        let solo_est = sim.estimate(eps[0], eps[1], bytes).unwrap();
+        let mut eng = Engine::new();
+        let done: Rc<RefCell<Vec<FlowDone>>> = Rc::new(RefCell::new(Vec::new()));
+        for (s, t) in [(0usize, 1usize), (0, 2), (3, 1)] {
+            let d = done.clone();
+            sim.submit_with(&mut eng, Transfer::new(eps[s], eps[t], bytes, TrafficClass::Collective), move |_, r| {
+                d.borrow_mut().push(r)
+            });
+        }
+        eng.run();
+        let rs = done.borrow();
+        assert_eq!(rs.len(), 3);
+        for r in rs.iter() {
+            assert!(r.latency > 1.5 * solo_est, "latency={} solo={solo_est}", r.latency);
+            assert!(r.latency < 2.5 * solo_est, "latency={} solo={solo_est}", r.latency);
+        }
+    }
+
+    #[test]
+    fn pbr_spreads_over_planes_hbr_contends() {
+        let run = |policy| {
+            let sim = FabricSim::new(Topology::single_clos(4, 2), LinkSpec::cxl3_x16(), policy);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let worst: Rc<RefCell<f64>> = Rc::new(RefCell::new(0.0));
+            for _ in 0..2 {
+                let w = worst.clone();
+                sim.submit_with(&mut eng, Transfer::new(eps[0], eps[1], 1 << 24, TrafficClass::Collective), move |_, r| {
+                    let mut m = w.borrow_mut();
+                    if r.latency > *m {
+                        *m = r.latency;
+                    }
+                });
+            }
+            eng.run();
+            let v = *worst.borrow();
+            v
+        };
+        let hbr = run(RoutingPolicy::Hbr);
+        let pbr = run(RoutingPolicy::Pbr);
+        assert!(hbr > 1.5 * pbr, "hbr={hbr} pbr={pbr} (PBR should use the idle plane)");
+    }
+
+    #[test]
+    fn ledger_conserves_bytes() {
+        let sim = star_sim(4, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        let flows = [(0usize, 1usize, 1000u64), (1, 2, 2000), (2, 3, 3000), (3, 0, 500)];
+        for &(s, t, b) in &flows {
+            sim.submit(&mut eng, Transfer::new(eps[s], eps[t], b, TrafficClass::KvCache));
+        }
+        eng.run();
+        let ledger = sim.ledger();
+        let demand: u64 = flows.iter().map(|f| f.2).sum();
+        assert_eq!(ledger.total_payload, demand);
+        // every flow crosses 2 edges in a star, so per-link sum is 2x demand
+        let per_link: u64 = ledger.per_link.iter().map(|l| l.payload).sum();
+        assert_eq!(per_link, 2 * demand);
+        assert_eq!(ledger.flows, flows.len() as u64);
+        assert_eq!(ledger.class_payload[TrafficClass::KvCache.index()], demand);
+        assert!(ledger.peak_utilization > 0.0 && ledger.peak_utilization <= 1.0);
+    }
+
+    #[test]
+    fn same_node_transfer_is_free() {
+        let sim = star_sim(2, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        let d = sim.transfer_sync(&mut eng, Transfer::new(eps[0], eps[0], 1 << 20, TrafficClass::Control)).unwrap();
+        assert_eq!(d.latency, 0.0);
+        assert_eq!(d.hops, 0);
+    }
+
+    #[test]
+    fn unreachable_returns_none() {
+        let mut topo = Topology::empty(crate::fabric::topology::TopologyKind::Custom);
+        let a = topo.add_node(crate::fabric::topology::NodeKind::Endpoint);
+        let b = topo.add_node(crate::fabric::topology::NodeKind::Endpoint);
+        let sim = FabricSim::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let mut eng = Engine::new();
+        assert!(sim.submit(&mut eng, Transfer::new(a, b, 64, TrafficClass::Control)).is_none());
+        assert!(sim.estimate(a, b, 64).is_none());
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let run = || {
+            let sim = star_sim(6, RoutingPolicy::Pbr);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let mut rng = crate::sim::Rng::new(7);
+            for _ in 0..40 {
+                let a = rng.index(6);
+                let b = rng.index(6);
+                sim.submit(&mut eng, Transfer::new(eps[a], eps[b], 1 + rng.below(1 << 20), TrafficClass::Collective));
+            }
+            eng.run();
+            (sim.trace_render(), sim.total_payload())
+        };
+        let (t1, p1) = run();
+        let (t2, p2) = run();
+        assert_eq!(t1, t2, "trace must be byte-identical across runs");
+        assert_eq!(p1, p2);
+        assert!(!t1.is_empty());
+    }
+
+    #[test]
+    fn staggered_flows_reschedule_completions() {
+        // A second flow arriving mid-stream slows the first one down: the
+        // first flow's completion must be pushed later than its idle
+        // estimate, proving completion events are rescheduled on rate change.
+        let sim = star_sim(3, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let bytes = 1u64 << 26; // 64 MiB: long enough to overlap
+        let est = sim.estimate(eps[0], eps[1], bytes).unwrap();
+        let mut eng = Engine::new();
+        let first: Rc<RefCell<Option<FlowDone>>> = Rc::new(RefCell::new(None));
+        let f = first.clone();
+        sim.submit_with(&mut eng, Transfer::new(eps[0], eps[1], bytes, TrafficClass::Collective), move |_, r| {
+            *f.borrow_mut() = Some(r)
+        });
+        // inject the competitor halfway through the first flow
+        let sim2 = sim.clone();
+        let eps2 = eps.clone();
+        eng.schedule_at(est * 0.5, move |e| {
+            sim2.submit(e, Transfer::new(eps2[0], eps2[2], bytes, TrafficClass::Collective));
+        });
+        eng.run();
+        let d = first.borrow().expect("first flow done");
+        assert!(d.latency > 1.3 * est, "latency={} est={est}", d.latency);
+        assert!(d.latency < 1.7 * est, "latency={} est={est}", d.latency);
+    }
+}

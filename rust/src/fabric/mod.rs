@@ -11,9 +11,19 @@
 //!
 //! The [`Fabric`] type combines a topology with link/switch parameters and a
 //! per-edge contention model, exposing `transfer()` for the workload layer.
+//!
+//! Two pricing substrates coexist:
+//!
+//! * [`Fabric`] — closed-form per-transfer math against `busy_until`
+//!   scalars; fast analytic estimation (idle-fabric assumption).
+//! * [`flow::FabricSim`] — the flow-level, contention-aware simulator on
+//!   [`crate::sim::Engine`]: concurrent transfers share link bandwidth
+//!   max-min fairly, so queueing (the paper's communication tax) is a
+//!   measured output, with a per-link utilization ledger.
 
 pub mod cxl;
 pub mod flit;
+pub mod flow;
 pub mod link;
 pub mod netstack;
 pub mod routing;
@@ -22,6 +32,7 @@ pub mod topology;
 
 pub use cxl::{CxlProtocol, CxlStack, CxlVersion};
 pub use flit::FlitFormat;
+pub use flow::{CommTaxLedger, FabricSim, FlowDone, FlowId, LinkUse, TrafficClass, Transfer};
 pub use link::{LinkClass, LinkSpec};
 pub use netstack::SoftwareStack;
 pub use routing::RoutingPolicy;

@@ -8,16 +8,17 @@
 
 use super::topology::{NodeId, Topology};
 use crate::sim::SimTime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A selected route: shared ownership of cached path storage — zero path
-/// copies on the hot transfer path (§Perf).
+/// copies on the hot transfer path (§Perf). `Arc`-backed so routes can be
+/// carried across threads along with their (now `Sync`) topology.
 #[derive(Clone, Debug)]
 pub enum Route {
     /// The single cached shortest path (HBR).
-    Single(Rc<Vec<usize>>),
+    Single(Arc<Vec<usize>>),
     /// Index into a cached equal-cost candidate set (PBR).
-    OneOf(Rc<Vec<Vec<usize>>>, usize),
+    OneOf(Arc<Vec<Vec<usize>>>, usize),
 }
 
 impl Route {

@@ -15,9 +15,9 @@
 //! * `spine_leaf` — conventional scale-out data-center network (§3.3).
 //! * `star` / `line` — degenerate helpers for tests and rack models.
 
-use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::{Arc, Mutex};
 
 /// Multiply-shift hasher for the (src, dst) route caches — SipHash showed
 /// up in the §Perf transfer-path profile; route keys are small integers so
@@ -68,6 +68,14 @@ pub enum TopologyKind {
 }
 
 /// Directed graph with BFS route cache.
+///
+/// The route/ECMP caches sit behind `Mutex`es and hand out `Arc`s, so a
+/// built `Topology` is `Send + Sync`: experiments can fan shared read-only
+/// topologies out across threads while still enjoying warm caches. The
+/// uncontended lock is one atomic pair per lookup — accepted over a
+/// lock-free design for simplicity; hot-path callers hold the returned
+/// `Arc` per flow instead of re-resolving, and `perf_hotpath` tracks the
+/// transfer-path cost.
 #[derive(Debug)]
 pub struct Topology {
     kind: TopologyKind,
@@ -77,9 +85,9 @@ pub struct Topology {
     /// adjacency: node -> [(neighbor, edge id)]
     adj: Vec<Vec<(NodeId, usize)>>,
     endpoints: Vec<NodeId>,
-    route_cache: RefCell<PairMap<Option<std::rc::Rc<Vec<usize>>>>>,
+    route_cache: Mutex<PairMap<Option<Arc<Vec<usize>>>>>,
     /// Equal-cost candidate sets for PBR (computed once per pair).
-    ecmp_cache: RefCell<PairMap<std::rc::Rc<Vec<Vec<usize>>>>>,
+    ecmp_cache: Mutex<PairMap<Arc<Vec<Vec<usize>>>>>,
 }
 
 impl Topology {
@@ -91,8 +99,8 @@ impl Topology {
             edges: Vec::new(),
             adj: Vec::new(),
             endpoints: Vec::new(),
-            route_cache: RefCell::new(HashMap::default()),
-            ecmp_cache: RefCell::new(HashMap::default()),
+            route_cache: Mutex::new(HashMap::default()),
+            ecmp_cache: Mutex::new(HashMap::default()),
         }
     }
 
@@ -115,8 +123,8 @@ impl Topology {
         let rev = self.edges.len();
         self.edges.push((b, a));
         self.adj[b].push((a, rev));
-        self.route_cache.borrow_mut().clear();
-        self.ecmp_cache.borrow_mut().clear();
+        self.route_cache.lock().expect("route cache").clear();
+        self.ecmp_cache.lock().expect("ecmp cache").clear();
         (fwd, rev)
     }
 
@@ -161,17 +169,17 @@ impl Topology {
     }
 
     /// BFS shortest path (deterministic: neighbor insertion order breaks
-    /// ties). Cached; the returned Rc avoids per-call path clones on the
+    /// ties). Cached; the returned Arc avoids per-call path clones on the
     /// hot transfer path (§Perf). Edge ids along the path.
-    pub fn shortest_path(&self, src: NodeId, dst: NodeId) -> Option<std::rc::Rc<Vec<usize>>> {
+    pub fn shortest_path(&self, src: NodeId, dst: NodeId) -> Option<Arc<Vec<usize>>> {
         if src == dst {
-            return Some(std::rc::Rc::new(Vec::new()));
+            return Some(Arc::new(Vec::new()));
         }
-        if let Some(hit) = self.route_cache.borrow().get(&(src, dst)) {
+        if let Some(hit) = self.route_cache.lock().expect("route cache").get(&(src, dst)) {
             return hit.clone();
         }
-        let path = self.bfs(src, dst).map(std::rc::Rc::new);
-        self.route_cache.borrow_mut().insert((src, dst), path.clone());
+        let path = self.bfs(src, dst).map(Arc::new);
+        self.route_cache.lock().expect("route cache").insert((src, dst), path.clone());
         path
     }
 
@@ -211,12 +219,12 @@ impl Topology {
     /// (src, dst) is static, only the congestion-based choice among them is
     /// dynamic, so the DFS runs once per pair (§Perf optimization — this
     /// took PBR routing from 0.63 to HBR-class M transfers/s).
-    pub fn equal_cost_paths_cached(&self, src: NodeId, dst: NodeId, cap: usize) -> std::rc::Rc<Vec<Vec<usize>>> {
-        if let Some(hit) = self.ecmp_cache.borrow().get(&(src, dst)) {
+    pub fn equal_cost_paths_cached(&self, src: NodeId, dst: NodeId, cap: usize) -> Arc<Vec<Vec<usize>>> {
+        if let Some(hit) = self.ecmp_cache.lock().expect("ecmp cache").get(&(src, dst)) {
             return hit.clone();
         }
-        let paths = std::rc::Rc::new(self.equal_cost_paths(src, dst, cap));
-        self.ecmp_cache.borrow_mut().insert((src, dst), paths.clone());
+        let paths = Arc::new(self.equal_cost_paths(src, dst, cap));
+        self.ecmp_cache.lock().expect("ecmp cache").insert((src, dst), paths.clone());
         paths
     }
 
@@ -627,6 +635,35 @@ mod tests {
         assert_eq!(paths.len(), 4);
         for p in &paths {
             assert_eq!(p.len(), 2);
+        }
+    }
+
+    #[test]
+    fn topology_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Topology>();
+    }
+
+    #[test]
+    fn route_cache_is_shared_across_threads() {
+        let t = Arc::new(Topology::single_clos(16, 4));
+        let mut handles = Vec::new();
+        for k in 0..4usize {
+            let tc = t.clone();
+            handles.push(std::thread::spawn(move || {
+                let eps = tc.endpoints().to_vec();
+                let mut total = 0usize;
+                for i in 0..eps.len() {
+                    let j = (i + k + 1) % eps.len();
+                    if i != j {
+                        total += tc.shortest_path(eps[i], eps[j]).unwrap().len();
+                    }
+                }
+                total
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap() > 0);
         }
     }
 

@@ -10,16 +10,28 @@
 //!   fabric models ([`fabric`]: CXL 1.0/2.0/3.0, NVLink 5.0, NVLink-C2C,
 //!   UALink 1.0, PCIe, Ethernet/InfiniBand + the RDMA software stack), and a
 //!   memory subsystem ([`mem`]: media, composable pools, tiers, coherence,
-//!   KV-cache).
+//!   KV-cache). Transfers can be priced two ways: the closed-form
+//!   [`fabric::Fabric`] (idle-fabric analytic math) or the flow-level
+//!   contention-aware [`fabric::flow::FabricSim`], which routes every
+//!   [`fabric::flow::Transfer`] along concrete topology edges on the event
+//!   engine and shares link bandwidth max-min fairly between concurrent
+//!   flows — the paper's communication tax as a *measured* output, with a
+//!   per-link utilization ledger ([`fabric::flow::CommTaxLedger`]).
 //! * **Infrastructure** — hierarchical data-center composition
 //!   ([`datacenter`]: GB200 nodes, trays, NVL72 and composable CXL racks,
-//!   rows/floors/buildings, XLink clusters, CXL-over-XLink superclusters) and
-//!   the paper's workloads ([`workload`]: LLM training/inference, RAG,
-//!   Graph-RAG, DLRM, MPI PIC/CFD, collective communication).
+//!   rows/floors/buildings, XLink clusters, CXL-over-XLink superclusters;
+//!   [`datacenter::hierarchy::RoutedPath`] resolves abstract `CommPath`s
+//!   onto concrete cluster routes) and the paper's workloads ([`workload`]:
+//!   LLM training/inference, RAG, Graph-RAG, DLRM, MPI PIC/CFD, collective
+//!   communication — analytic *and* event-driven collectives behind the
+//!   [`workload::collectives::CommCost`] surface).
 //! * **System** — the composable-resource coordinator ([`coordinator`]:
-//!   orchestrator, router, batcher, scheduler, placement, telemetry), the
-//!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
-//!   ([`runtime`]), and the end-to-end serving stack ([`serve`]).
+//!   orchestrator, router, batcher, scheduler, placement, telemetry with
+//!   fabric-ledger folding), the optional PJRT runtime that executes
+//!   AOT-compiled JAX/Pallas artifacts (`runtime`, behind the `pjrt`
+//!   feature), and the end-to-end serving stack ([`serve`] — including
+//!   fabric-contended serving where KV/activation traffic queues on shared
+//!   links).
 //!
 //! Units convention across the whole crate: **time in nanoseconds (f64)**,
 //! **sizes in bytes (u64)**, **bandwidth in bytes/ns (== GB/s)**.
@@ -32,6 +44,7 @@ pub mod datacenter;
 pub mod experiments;
 pub mod fabric;
 pub mod mem;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -11,11 +11,17 @@
 
 pub mod pd;
 
-use crate::coordinator::batcher::DynamicBatcher;
+use crate::coordinator::batcher::{Batch, DynamicBatcher};
 use crate::coordinator::router::{Router, RoutingStrategy};
-use crate::sim::{Rng, Summary};
+use crate::fabric::flow::{CommTaxLedger, FabricSim, TrafficClass, Transfer};
+use crate::fabric::link::LinkSpec;
+use crate::fabric::routing::RoutingPolicy;
+use crate::fabric::topology::Topology;
+use crate::sim::{Engine, Rng, Summary};
 use crate::workload::inference::{decode_step_time, prefill_time, KvPlacement};
 use crate::workload::{ModelSpec, Platform};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// Serving workload configuration.
 #[derive(Clone, Debug)]
@@ -65,6 +71,10 @@ pub struct ServeReport {
     pub latency: Summary,
     /// Per-request queueing (arrival → batch start) latency (ns).
     pub queueing: Summary,
+    /// Per-batch time spent waiting on fabric transfers (KV fetch +
+    /// activation writeback), including backlog behind earlier batches'
+    /// flows. Empty when batches run without a fabric.
+    pub fabric_wait: Summary,
     /// Requests per second of simulated time.
     pub throughput_rps: f64,
     /// Batches executed.
@@ -78,47 +88,39 @@ pub struct ServeReport {
 /// Execution-cost model for one batch; returns ns.
 pub type BatchExec<'a> = dyn FnMut(usize) -> f64 + 'a;
 
+/// Dispatch context handed to a context-aware batch executor.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCtx {
+    /// Requests in the batch.
+    pub batch: usize,
+    /// Batch start time on its cluster (ns).
+    pub start: f64,
+    /// Cluster index the router chose.
+    pub cluster: usize,
+}
+
+/// Execution-cost model that also sees when/where the batch runs; returns ns.
+pub type BatchExecCtx<'a> = dyn FnMut(BatchCtx) -> f64 + 'a;
+
 /// Run the serving pipeline with a caller-provided batch executor.
 pub fn serve_with(cfg: &ServeConfig, exec: &mut BatchExec) -> ServeReport {
+    serve_with_ctx(cfg, &mut |ctx: BatchCtx| exec(ctx.batch))
+}
+
+/// Generate the Poisson arrivals and run the dynamic batcher over them:
+/// (arrival time per request id, batches in formation order). Batch
+/// formation depends only on the arrival process, so the sequential and
+/// the fabric-contended drivers share it.
+fn form_batches(cfg: &ServeConfig) -> (Vec<f64>, Vec<Batch>) {
     let mut rng = Rng::new(cfg.seed);
-    // Poisson arrivals
     let mut arrivals = Vec::with_capacity(cfg.requests);
     let mut t = 0.0;
     for _ in 0..cfg.requests {
         t += rng.exp(cfg.arrival_mean);
         arrivals.push(t);
     }
-
     let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
-    let mut router = Router::new(cfg.clusters, RoutingStrategy::LeastLoaded);
-    let mut cluster_free = vec![0.0f64; cfg.clusters];
-    let mut latency = Summary::new();
-    let mut queueing = Summary::new();
-    let mut batch_sizes = Summary::new();
-    let mut last_finish: f64 = 0.0;
-    let arrival_of = |id: u64| arrivals[id as usize];
-
-    let dispatch = |batch: crate::coordinator::batcher::Batch,
-                        router: &mut Router,
-                        cluster_free: &mut [f64],
-                        exec: &mut BatchExec,
-                        latency: &mut Summary,
-                        queueing: &mut Summary,
-                        batch_sizes: &mut Summary,
-                        last_finish: &mut f64| {
-        let c = router.route(batch.ids[0]);
-        let start = batch.formed_at.max(cluster_free[c]);
-        let dur = exec(batch.ids.len());
-        cluster_free[c] = start + dur;
-        for &id in &batch.ids {
-            latency.add(start + dur - arrival_of(id));
-            queueing.add(start - arrival_of(id));
-        }
-        batch_sizes.add(batch.ids.len() as f64);
-        *last_finish = last_finish.max(start + dur);
-        router.complete(c);
-    };
-
+    let mut batches = Vec::new();
     for (i, &at) in arrivals.iter().enumerate() {
         // deadline-triggered batches before this arrival
         while let Some(dl) = batcher.next_deadline() {
@@ -126,14 +128,14 @@ pub fn serve_with(cfg: &ServeConfig, exec: &mut BatchExec) -> ServeReport {
                 break;
             }
             if let Some(b) = batcher.poll(dl) {
-                dispatch(b, &mut router, &mut cluster_free, exec, &mut latency, &mut queueing, &mut batch_sizes, &mut last_finish);
+                batches.push(b);
             } else {
                 break;
             }
         }
         batcher.push(i as u64, at);
         if let Some(b) = batcher.poll(at) {
-            dispatch(b, &mut router, &mut cluster_free, exec, &mut latency, &mut queueing, &mut batch_sizes, &mut last_finish);
+            batches.push(b);
         }
     }
     // drain
@@ -141,8 +143,34 @@ pub fn serve_with(cfg: &ServeConfig, exec: &mut BatchExec) -> ServeReport {
     while batcher.pending() > 0 {
         now = batcher.next_deadline().unwrap_or(now).max(now);
         if let Some(b) = batcher.poll(now).or_else(|| batcher.flush(now)) {
-            dispatch(b, &mut router, &mut cluster_free, exec, &mut latency, &mut queueing, &mut batch_sizes, &mut last_finish);
+            batches.push(b);
         }
+    }
+    (arrivals, batches)
+}
+
+/// Run the serving pipeline with a context-aware batch executor.
+pub fn serve_with_ctx(cfg: &ServeConfig, exec: &mut BatchExecCtx) -> ServeReport {
+    let (arrivals, batches) = form_batches(cfg);
+    let mut router = Router::new(cfg.clusters, RoutingStrategy::LeastLoaded);
+    let mut cluster_free = vec![0.0f64; cfg.clusters];
+    let mut latency = Summary::new();
+    let mut queueing = Summary::new();
+    let mut batch_sizes = Summary::new();
+    let mut last_finish: f64 = 0.0;
+
+    for batch in batches {
+        let c = router.route(batch.ids[0]);
+        let start = batch.formed_at.max(cluster_free[c]);
+        let dur = exec(BatchCtx { batch: batch.ids.len(), start, cluster: c });
+        cluster_free[c] = start + dur;
+        for &id in &batch.ids {
+            latency.add(start + dur - arrivals[id as usize]);
+            queueing.add(start - arrivals[id as usize]);
+        }
+        batch_sizes.add(batch.ids.len() as f64);
+        last_finish = last_finish.max(start + dur);
+        router.complete(c);
     }
 
     let makespan = last_finish;
@@ -152,6 +180,7 @@ pub fn serve_with(cfg: &ServeConfig, exec: &mut BatchExec) -> ServeReport {
         mean_batch: batch_sizes.mean(),
         latency,
         queueing,
+        fabric_wait: Summary::new(),
         makespan,
     }
 }
@@ -170,6 +199,224 @@ pub fn simulate_serving(cfg: &ServeConfig, platform: &Platform) -> ServeReport {
         prefill + decode
     };
     serve_with(cfg, &mut exec)
+}
+
+/// Fixed inputs of one fabric-contended serving run.
+struct ContendedEnv {
+    model: ModelSpec,
+    platform: Platform,
+    prompt: u64,
+    gen: u64,
+    remote_frac: f64,
+    /// Pooled-memory KV tray endpoint all frontends share.
+    pool: crate::fabric::topology::NodeId,
+    /// Serving-frontend endpoint per cluster.
+    fronts: Vec<crate::fabric::topology::NodeId>,
+}
+
+/// Mutable state of one fabric-contended serving run.
+struct ContendedRun {
+    batches: Vec<Batch>,
+    arrivals: Vec<f64>,
+    router: Router,
+    /// Formed batches waiting for an idle cluster (formation order).
+    waiting: std::collections::VecDeque<usize>,
+    // per-batch bookkeeping, indexed like `batches`
+    start: Vec<f64>,
+    compute: Vec<f64>,
+    pending_flows: Vec<u8>,
+    fabric_end: Vec<f64>,
+    latency: Summary,
+    queueing: Summary,
+    batch_sizes: Summary,
+    fabric_wait: Summary,
+    last_finish: f64,
+}
+
+/// Serving with the data path routed through a flow-level fabric, run as a
+/// single event-driven simulation: batches are dispatched work-conserving
+/// onto idle clusters, each dispatched batch prefetches its remote KV
+/// shard from a pooled tier-2 tray and writes activations back as real
+/// flows on a shared single-hop Clos ([`FabricSim`]), and a cluster is
+/// busy until its batch's flows *and* compute finish. Batches running
+/// concurrently on different clusters share the pool's links, so their
+/// transfer times — and the request latencies built on them — include
+/// genuine fabric queueing, and the router's least-loaded choice sees live
+/// in-flight load. The fabric *replaces* the analytic remote-KV path:
+/// compute is priced with [`KvPlacement::Local`] (the shard is local once
+/// fetched), so remote movement is charged exactly once — by the flow.
+/// Returns the serve report plus the fabric's communication-tax ledger.
+pub fn simulate_serving_contended(cfg: &ServeConfig, platform: &Platform) -> (ServeReport, CommTaxLedger) {
+    let remote_frac = match cfg.kv {
+        KvPlacement::Local => 0.0,
+        KvPlacement::Remote { remote_frac_pct } => remote_frac_pct.min(100) as f64 / 100.0,
+    };
+    // clusters 0..n are serving frontends; the last endpoint is the
+    // pooled-memory KV tray they all share.
+    let sim = FabricSim::new(Topology::single_clos(cfg.clusters + 1, 2), LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+    let eps = sim.endpoints();
+    let (arrivals, batches) = form_batches(cfg);
+    let n_batches = batches.len();
+    let env = Rc::new(ContendedEnv {
+        model: cfg.model,
+        platform: platform.clone(),
+        prompt: cfg.prompt_tokens,
+        gen: cfg.gen_tokens,
+        remote_frac,
+        pool: eps[cfg.clusters],
+        fronts: eps[..cfg.clusters].to_vec(),
+    });
+    let st = Rc::new(RefCell::new(ContendedRun {
+        batches,
+        arrivals,
+        router: Router::new(cfg.clusters, RoutingStrategy::LeastLoaded),
+        waiting: std::collections::VecDeque::new(),
+        start: vec![0.0; n_batches],
+        compute: vec![0.0; n_batches],
+        pending_flows: vec![0; n_batches],
+        fabric_end: vec![0.0; n_batches],
+        latency: Summary::new(),
+        queueing: Summary::new(),
+        batch_sizes: Summary::new(),
+        fabric_wait: Summary::new(),
+        last_finish: 0.0,
+    }));
+    let mut eng = Engine::new();
+    for k in 0..n_batches {
+        let at = st.borrow().batches[k].formed_at;
+        let (st2, sim2, env2) = (st.clone(), sim.clone(), env.clone());
+        eng.schedule_at(at, move |e| {
+            st2.borrow_mut().waiting.push_back(k);
+            dispatch_waiting(&st2, &sim2, e, &env2);
+        });
+    }
+    eng.run();
+    let s = st.borrow();
+    let makespan = s.last_finish;
+    let report = ServeReport {
+        throughput_rps: cfg.requests as f64 / (makespan / crate::SEC),
+        batches: s.batch_sizes.count() as u64,
+        mean_batch: s.batch_sizes.mean(),
+        latency: s.latency.clone(),
+        queueing: s.queueing.clone(),
+        fabric_wait: s.fabric_wait.clone(),
+        makespan,
+    };
+    (report, sim.ledger())
+}
+
+/// Start waiting batches on idle clusters (work-conserving). The router's
+/// in-flight counts are live — a cluster stays loaded until its batch
+/// completes — so LeastLoaded genuinely spreads concurrent batches.
+fn dispatch_waiting(st: &Rc<RefCell<ContendedRun>>, sim: &FabricSim, eng: &mut Engine, env: &Rc<ContendedEnv>) {
+    loop {
+        let launched = {
+            let mut s = st.borrow_mut();
+            if s.waiting.is_empty() || !s.router.load().iter().any(|&l| l == 0) {
+                None
+            } else {
+                let k = s.waiting.pop_front().expect("non-empty waiting queue");
+                let first_id = s.batches[k].ids[0];
+                let c = s.router.route(first_id);
+                Some((k, c))
+            }
+        };
+        match launched {
+            Some((k, c)) => launch_batch(st, sim, eng, env, c, k),
+            None => break,
+        }
+    }
+}
+
+/// Dispatch batch `k` on cluster `c` at the engine's current time: price
+/// its compute, then issue the KV prefetch and activation writeback as
+/// flows competing with everything else in flight.
+fn launch_batch(
+    st: &Rc<RefCell<ContendedRun>>,
+    sim: &FabricSim,
+    eng: &mut Engine,
+    env: &Rc<ContendedEnv>,
+    c: usize,
+    k: usize,
+) {
+    let now = eng.now();
+    let (kv_bytes, act_bytes) = {
+        let mut s = st.borrow_mut();
+        let b = s.batches[k].ids.len() as u64;
+        let prefill = prefill_time(&env.model, env.prompt * b, &env.platform);
+        // KV is local during decode: the remote fraction is moved by the
+        // fabric flow below, not by the tier model (no double charge).
+        let decode =
+            decode_step_time(&env.model, b, env.prompt + env.gen / 2, KvPlacement::Local, &env.platform) * env.gen as f64;
+        let kv_bytes = ((env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b) as f64 * env.remote_frac) as u64;
+        let act_bytes = env.model.activation_bytes_per_token() * b;
+        s.start[k] = now;
+        s.compute[k] = prefill + decode;
+        s.fabric_end[k] = now;
+        s.pending_flows[k] = if kv_bytes > 0 { 2 } else { 1 };
+        (kv_bytes, act_bytes)
+    };
+    let front = env.fronts[c];
+    if kv_bytes > 0 {
+        let (st2, sim2, env2) = (st.clone(), sim.clone(), env.clone());
+        let kv = sim.submit_with(eng, Transfer::new(env.pool, front, kv_bytes, TrafficClass::KvCache), move |e, d| {
+            flow_done(&st2, &sim2, e, &env2, c, k, d.arrival);
+        });
+        if kv.is_none() {
+            flow_done(st, sim, eng, env, c, k, now);
+        }
+    }
+    let (st2, sim2, env2) = (st.clone(), sim.clone(), env.clone());
+    let act = sim.submit_with(eng, Transfer::new(front, env.pool, act_bytes, TrafficClass::Activation), move |e, d| {
+        flow_done(&st2, &sim2, e, &env2, c, k, d.arrival);
+    });
+    if act.is_none() {
+        flow_done(st, sim, eng, env, c, k, now);
+    }
+}
+
+/// One of batch `k`'s flows delivered. When the last one lands, account
+/// the batch and free its cluster once compute also finishes.
+fn flow_done(
+    st: &Rc<RefCell<ContendedRun>>,
+    sim: &FabricSim,
+    eng: &mut Engine,
+    env: &Rc<ContendedEnv>,
+    c: usize,
+    k: usize,
+    arrival: f64,
+) {
+    let finish = {
+        let mut s = st.borrow_mut();
+        if arrival > s.fabric_end[k] {
+            s.fabric_end[k] = arrival;
+        }
+        s.pending_flows[k] -= 1;
+        if s.pending_flows[k] > 0 {
+            return;
+        }
+        let start = s.start[k];
+        let fabric_ns = (s.fabric_end[k] - start).max(0.0);
+        let finish = s.fabric_end[k] + s.compute[k];
+        let ids = s.batches[k].ids.clone();
+        for &id in &ids {
+            let at = s.arrivals[id as usize];
+            s.latency.add(finish - at);
+            s.queueing.add(start - at);
+        }
+        s.batch_sizes.add(ids.len() as f64);
+        s.fabric_wait.add(fabric_ns);
+        if finish > s.last_finish {
+            s.last_finish = finish;
+        }
+        finish
+    };
+    // the cluster frees only when compute is also done
+    let (st2, sim2, env2) = (st.clone(), sim.clone(), env.clone());
+    eng.schedule_at(finish, move |e| {
+        st2.borrow_mut().router.complete(c);
+        dispatch_waiting(&st2, &sim2, e, &env2);
+    });
 }
 
 #[cfg(test)]
@@ -222,6 +469,64 @@ mod tests {
         };
         let r = serve_with(&cfg, &mut exec);
         assert_eq!(r.batches as usize, calls);
+    }
+
+    #[test]
+    fn contended_serving_adds_fabric_wait() {
+        let cfg = ServeConfig { requests: 64, kv: KvPlacement::Remote { remote_frac_pct: 80 }, ..Default::default() };
+        let plat = Platform::composable_cxl();
+        // baseline with the same compute model (local KV) and no fabric:
+        // the contended run is exactly this plus the fabric wait per batch.
+        let compute_only = simulate_serving(&ServeConfig { kv: KvPlacement::Local, ..cfg.clone() }, &plat);
+        let (contended, ledger) = simulate_serving_contended(&cfg, &plat);
+        assert_eq!(contended.latency.count(), 64);
+        assert!(contended.fabric_wait.count() > 0);
+        assert!(contended.fabric_wait.mean() > 0.0, "KV/activation flows must cost time");
+        assert!(
+            contended.latency.mean() > compute_only.latency.mean(),
+            "fabric transfers must surface in request latency: contended={} compute-only={}",
+            contended.latency.mean(),
+            compute_only.latency.mean()
+        );
+        // the ledger attributes traffic per class and per link
+        assert_eq!(ledger.flows, 2 * contended.batches, "KV prefetch + activation writeback per batch");
+        assert!(!ledger.per_link.is_empty());
+        assert!(ledger.class_bytes(crate::fabric::TrafficClass::KvCache) > 0);
+        assert!(ledger.class_bytes(crate::fabric::TrafficClass::Activation) > 0);
+    }
+
+    #[test]
+    fn flooded_serving_shows_fabric_contention() {
+        // Near-simultaneous arrivals over 4 clusters sharing a 2-plane
+        // Clos: more concurrent KV prefetches than planes, so flows must
+        // share pool uplinks and the ledger records nonzero contention —
+        // the queueing delay the router/batcher now actually feel.
+        let cfg = ServeConfig {
+            requests: 64,
+            clusters: 4,
+            arrival_mean: 1_000.0,
+            kv: KvPlacement::Remote { remote_frac_pct: 80 },
+            ..Default::default()
+        };
+        let (report, ledger) = simulate_serving_contended(&cfg, &Platform::composable_cxl());
+        assert_eq!(report.latency.count(), 64);
+        assert!(
+            ledger.contention.max() > 0.0,
+            "concurrent batches must queue on shared pool links (peak util {})",
+            ledger.peak_utilization
+        );
+    }
+
+    #[test]
+    fn contended_serving_is_deterministic() {
+        let cfg = ServeConfig { requests: 48, kv: KvPlacement::Remote { remote_frac_pct: 50 }, ..Default::default() };
+        let plat = Platform::composable_cxl();
+        let (a, la) = simulate_serving_contended(&cfg, &plat);
+        let (b, lb) = simulate_serving_contended(&cfg, &plat);
+        assert_eq!(a.latency.mean(), b.latency.mean());
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(la.total_payload, lb.total_payload);
+        assert_eq!(la.flows, lb.flows);
     }
 
     #[test]

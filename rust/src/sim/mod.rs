@@ -12,5 +12,5 @@ pub mod trace;
 
 pub use engine::{Engine, EventId, SimTime};
 pub use rng::Rng;
-pub use stats::{Percentiles, Summary};
+pub use stats::{Percentiles, Summary, TimeWeighted};
 pub use trace::{Trace, TraceEvent};

@@ -121,6 +121,53 @@ pub struct Percentiles {
     pub p99: f64,
 }
 
+/// Piecewise-constant signal tracked over simulated time: call
+/// [`TimeWeighted::set`] whenever the value changes and read back the
+/// time-weighted mean and peak. Used for utilization-style telemetry
+/// (active flows on a fabric, queue depths) where a plain sample mean
+/// would over-weight busy bursts of events.
+#[derive(Clone, Debug, Default)]
+pub struct TimeWeighted {
+    last_t: f64,
+    last_v: f64,
+    integral: f64,
+    peak: f64,
+}
+
+impl TimeWeighted {
+    /// Signal at value 0 from t=0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that the signal takes value `v` from time `t` onward.
+    /// Out-of-order times are clamped (no negative intervals).
+    pub fn set(&mut self, t: f64, v: f64) {
+        if t > self.last_t {
+            self.integral += self.last_v * (t - self.last_t);
+            self.last_t = t;
+        }
+        self.last_v = v;
+        if v > self.peak {
+            self.peak = v;
+        }
+    }
+
+    /// Time-weighted mean over [0, t] (0 when t <= 0).
+    pub fn mean_until(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let tail = if t > self.last_t { self.last_v * (t - self.last_t) } else { 0.0 };
+        (self.integral + tail) / t
+    }
+
+    /// Highest value ever set.
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+}
+
 /// Geometric mean of ratios (used for multi-workload speedup summaries).
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -173,6 +220,18 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_mean_and_peak() {
+        let mut w = TimeWeighted::new();
+        w.set(0.0, 2.0); // 2 over [0, 10)
+        w.set(10.0, 6.0); // 6 over [10, 20)
+        assert!((w.mean_until(20.0) - 4.0).abs() < 1e-12);
+        assert_eq!(w.peak(), 6.0);
+        // tail extension: still 6 over [20, 40)
+        assert!((w.mean_until(40.0) - 5.0).abs() < 1e-12);
+        assert_eq!(w.mean_until(0.0), 0.0);
     }
 
     #[test]

@@ -1,13 +1,57 @@
 //! Collective communication cost models (§3.1, §6.2).
 //!
 //! Message-passing algorithms (ring All-Reduce, All-Gather, Reduce-Scatter,
-//! All-to-All) priced over a [`CommPath`], plus the §6.2 *coherence-implicit*
-//! variants in which CXL.cache makes the data movement implicit: consumers
-//! simply load the shared region, so the explicit synchronization and
-//! redundant copy rounds disappear.
+//! All-to-All) priced over anything implementing [`CommCost`] — the
+//! analytic [`CommPath`], or a concrete
+//! [`crate::datacenter::hierarchy::RoutedPath`] — plus the §6.2
+//! *coherence-implicit* variants in which CXL.cache makes the data movement
+//! implicit: consumers simply load the shared region, so the explicit
+//! synchronization and redundant copy rounds disappear.
+//!
+//! Two pricing modes share one surface:
+//!
+//! * **analytic** (`ring_allreduce`, `all_to_all`, …) — closed-form step
+//!   counts × per-step path time; fast, idle-fabric assumption;
+//! * **flow-level** (`ring_allreduce_flows`, `all_to_all_flows`,
+//!   `tree_broadcast_flows`) — every step is a real overlapping flow on a
+//!   [`FabricSim`], so steps of *this* collective, and anything else
+//!   sharing the fabric, contend for link bandwidth. The spread between
+//!   the two modes is the communication tax.
 
 use super::Platform;
 use crate::datacenter::hierarchy::CommPath;
+use crate::fabric::flow::{FabricSim, TrafficClass, Transfer};
+use crate::fabric::topology::NodeId;
+use crate::sim::Engine;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Cost surface shared by analytic paths and resolved routes: anything
+/// that can price "move `bytes` end to end once".
+pub trait CommCost {
+    /// End-to-end time to move `bytes` (ns).
+    fn time(&self, bytes: u64) -> f64;
+    /// Zero-byte fixed latency (ns).
+    fn base_latency(&self) -> f64;
+}
+
+impl CommCost for CommPath {
+    fn time(&self, bytes: u64) -> f64 {
+        CommPath::time(self, bytes)
+    }
+    fn base_latency(&self) -> f64 {
+        CommPath::base_latency(self)
+    }
+}
+
+impl CommCost for crate::datacenter::hierarchy::RoutedPath {
+    fn time(&self, bytes: u64) -> f64 {
+        crate::datacenter::hierarchy::RoutedPath::time(self, bytes)
+    }
+    fn base_latency(&self) -> f64 {
+        crate::datacenter::hierarchy::RoutedPath::base_latency(self)
+    }
+}
 
 /// Collective operation kinds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,7 +65,7 @@ pub enum Collective {
 
 /// Ring All-Reduce over `n` ranks of a `bytes` buffer: 2(n-1) steps moving
 /// `bytes/n` chunks; each step is one neighbor exchange on `path`.
-pub fn ring_allreduce(n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn ring_allreduce(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     if n <= 1 {
         return 0.0;
     }
@@ -31,7 +75,7 @@ pub fn ring_allreduce(n: usize, bytes: u64, path: &CommPath) -> f64 {
 }
 
 /// Ring All-Gather: (n-1) steps of `bytes/n` chunks.
-pub fn ring_allgather(n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn ring_allgather(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     if n <= 1 {
         return 0.0;
     }
@@ -40,13 +84,13 @@ pub fn ring_allgather(n: usize, bytes: u64, path: &CommPath) -> f64 {
 }
 
 /// Reduce-Scatter: (n-1) steps of `bytes/n` chunks.
-pub fn ring_reduce_scatter(n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn ring_reduce_scatter(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     ring_allgather(n, bytes, path)
 }
 
 /// All-to-All (MoE expert dispatch): each rank sends `bytes/n` to every
 /// other rank; with full bisection this pipelines into ~(n-1) chunk sends.
-pub fn all_to_all(n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn all_to_all(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     if n <= 1 {
         return 0.0;
     }
@@ -55,7 +99,7 @@ pub fn all_to_all(n: usize, bytes: u64, path: &CommPath) -> f64 {
 }
 
 /// Tree broadcast: log2(n) rounds of the full buffer.
-pub fn tree_broadcast(n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn tree_broadcast(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     if n <= 1 {
         return 0.0;
     }
@@ -118,7 +162,7 @@ pub fn ring_allreduce_on_fabric(
 }
 
 /// Cost of a collective on a message-passing platform.
-pub fn collective_time(op: Collective, n: usize, bytes: u64, path: &CommPath) -> f64 {
+pub fn collective_time(op: Collective, n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     match op {
         Collective::AllReduce => ring_allreduce(n, bytes, path),
         Collective::AllGather => ring_allgather(n, bytes, path),
@@ -126,6 +170,215 @@ pub fn collective_time(op: Collective, n: usize, bytes: u64, path: &CommPath) ->
         Collective::AllToAll => all_to_all(n, bytes, path),
         Collective::Broadcast => tree_broadcast(n, bytes, path),
     }
+}
+
+// ----- event-driven collectives on the flow-level fabric -----------------
+
+struct CollectiveProgress {
+    /// Flows not yet delivered.
+    remaining: u64,
+    /// Latest delivery time seen.
+    finish: f64,
+    /// A submission failed to route — the collective cannot complete.
+    stalled: bool,
+}
+
+/// Progress handle for a collective issued as flows on a [`FabricSim`].
+/// Poll after the engine runs; [`CollectiveRun::finish_time`] yields the
+/// completion time once every constituent flow has delivered.
+pub struct CollectiveRun {
+    prog: Rc<RefCell<CollectiveProgress>>,
+}
+
+impl CollectiveRun {
+    fn new(flows: u64, now: f64) -> (CollectiveRun, Rc<RefCell<CollectiveProgress>>) {
+        let prog = Rc::new(RefCell::new(CollectiveProgress { remaining: flows, finish: now, stalled: false }));
+        (CollectiveRun { prog: prog.clone() }, prog)
+    }
+
+    /// Have all flows delivered?
+    pub fn is_done(&self) -> bool {
+        let p = self.prog.borrow();
+        p.remaining == 0 && !p.stalled
+    }
+
+    /// Completion time (ns) once done; `None` while flows remain in flight
+    /// or when a step found no route.
+    pub fn finish_time(&self) -> Option<f64> {
+        let p = self.prog.borrow();
+        if p.remaining == 0 && !p.stalled {
+            Some(p.finish)
+        } else {
+            None
+        }
+    }
+}
+
+fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, arrival: f64) {
+    let mut p = prog.borrow_mut();
+    p.remaining = p.remaining.saturating_sub(1);
+    if arrival > p.finish {
+        p.finish = arrival;
+    }
+}
+
+/// One chain step of the event-driven ring: the chunk that started at rank
+/// `chain` has reached rank `chain + round`; forward it one hop. The next
+/// hop launches from the arrival callback, so ring dependencies are real
+/// events and every in-flight chunk competes for link bandwidth.
+fn ring_chain_step(
+    sim: FabricSim,
+    eng: &mut Engine,
+    ranks: Rc<Vec<NodeId>>,
+    chunk: u64,
+    chain: usize,
+    round: u32,
+    total_rounds: u32,
+    prog: Rc<RefCell<CollectiveProgress>>,
+) {
+    let n = ranks.len();
+    let src = ranks[(chain + round as usize) % n];
+    let dst = ranks[(chain + round as usize + 1) % n];
+    let simc = sim.clone();
+    let prog_cb = prog.clone();
+    let submitted = sim.submit_with(eng, Transfer::new(src, dst, chunk, TrafficClass::Collective), move |e, d| {
+        note_arrival(&prog_cb, d.arrival);
+        let next = round + 1;
+        if next < total_rounds {
+            ring_chain_step(simc, e, ranks, chunk, chain, next, total_rounds, prog_cb);
+        }
+    });
+    if submitted.is_none() {
+        prog.borrow_mut().stalled = true;
+    }
+}
+
+/// Ring All-Reduce as 2(n-1) rounds of n overlapping flows on the fabric
+/// simulator. All n round-0 chunks depart immediately; each later send is
+/// triggered by the arrival of its predecessor chunk (real ring
+/// dependency). Run the engine, then read the handle.
+pub fn ring_allreduce_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    let total_rounds = (2 * (n - 1)) as u32;
+    let (run, prog) = CollectiveRun::new(n as u64 * total_rounds as u64, eng.now());
+    let ranks = Rc::new(ranks.to_vec());
+    for chain in 0..n {
+        // per-chain running count: the remaining counter already tracks all
+        // chains, so note_arrival on the shared progress is enough
+        ring_chain_step(sim.clone(), eng, ranks.clone(), chunk, chain, 0, total_rounds, prog.clone());
+    }
+    run
+}
+
+/// All-to-All (MoE dispatch) as n(n-1) simultaneous flows of `bytes/n`.
+/// Under full bisection they pipeline; on an oversubscribed fabric the
+/// shared links throttle them — exactly the §3.4 expert-parallel tax.
+pub fn all_to_all_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    let (run, prog) = CollectiveRun::new((n * (n - 1)) as u64, eng.now());
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let p = prog.clone();
+            let submitted = sim.submit_with(
+                eng,
+                Transfer::new(ranks[i], ranks[j], chunk, TrafficClass::Collective),
+                move |_, d| note_arrival(&p, d.arrival),
+            );
+            if submitted.is_none() {
+                prog.borrow_mut().stalled = true;
+            }
+        }
+    }
+    run
+}
+
+/// Binomial-tree broadcast: `ranks[lo]` holds the buffer; spans split and
+/// forward as arrivals land, so independent subtrees overlap on the fabric.
+fn bcast_span(
+    sim: FabricSim,
+    eng: &mut Engine,
+    ranks: Rc<Vec<NodeId>>,
+    bytes: u64,
+    lo: usize,
+    hi: usize,
+    prog: Rc<RefCell<CollectiveProgress>>,
+) {
+    let len = hi - lo;
+    if len <= 1 {
+        return;
+    }
+    let mid = lo + len.div_ceil(2);
+    let simc = sim.clone();
+    let ranks_cb = ranks.clone();
+    let prog_cb = prog.clone();
+    let submitted = sim.submit_with(
+        eng,
+        Transfer::new(ranks[lo], ranks[mid], bytes, TrafficClass::Collective),
+        move |e, d| {
+            note_arrival(&prog_cb, d.arrival);
+            bcast_span(simc, e, ranks_cb, bytes, mid, hi, prog_cb);
+        },
+    );
+    if submitted.is_none() {
+        prog.borrow_mut().stalled = true;
+    }
+    bcast_span(sim, eng, ranks, bytes, lo, mid, prog);
+}
+
+/// Tree broadcast as n-1 flows forwarded along a binomial tree.
+pub fn tree_broadcast_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    let (run, prog) = CollectiveRun::new((n - 1) as u64, eng.now());
+    bcast_span(sim.clone(), eng, Rc::new(ranks.to_vec()), bytes, 0, n, prog);
+    run
+}
+
+/// Convenience: run one ring All-Reduce to completion on a fresh engine.
+/// Returns the completion time (ns since engine start), or `None` when a
+/// step found no route.
+pub fn ring_allreduce_contended(sim: &FabricSim, ranks: &[NodeId], bytes: u64) -> Option<f64> {
+    let mut eng = Engine::new();
+    let run = ring_allreduce_flows(sim, &mut eng, ranks, bytes);
+    eng.run();
+    run.finish_time()
+}
+
+/// The canonical alone-vs-shared measurement (§3.4, Fig 29 addenda, the
+/// `comm-tax` experiment): one ring All-Reduce on an idle fabric, then the
+/// same collective twice concurrently on a fresh instance of the same
+/// fabric. Returns `(alone_ns, shared_ns, shared-run ledger)`; the spread
+/// is the communication tax. `mk` builds the fabric and its ranks, and is
+/// called once per scenario so each starts idle.
+pub fn allreduce_alone_vs_shared(
+    mk: impl Fn() -> (FabricSim, Vec<NodeId>),
+    bytes: u64,
+) -> Option<(f64, f64, crate::fabric::flow::CommTaxLedger)> {
+    let (sim, ranks) = mk();
+    let alone = ring_allreduce_contended(&sim, &ranks, bytes)?;
+    let (sim, ranks) = mk();
+    let mut eng = Engine::new();
+    let a = ring_allreduce_flows(&sim, &mut eng, &ranks, bytes);
+    let b = ring_allreduce_flows(&sim, &mut eng, &ranks, bytes);
+    eng.run();
+    let shared = a.finish_time()?.max(b.finish_time()?);
+    Some((alone, shared, sim.ledger()))
 }
 
 #[cfg(test)]
@@ -240,6 +493,108 @@ mod tests {
         let ranks = vec![topo.endpoints()[0]];
         let mut fabric = Fabric::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
         assert_eq!(ring_allreduce_on_fabric(&mut fabric, &ranks, 1 << 20, 7.0), Some(7.0));
+    }
+
+    #[test]
+    fn flow_ring_on_full_bisection_matches_analytic() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        // fully-connected: ring neighbors have private links, so the flow-
+        // level result must collapse to the analytic closed form.
+        let n = 6;
+        let sim = FabricSim::new(Topology::fully_connected(n), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let ranks = sim.endpoints();
+        let bytes = 1u64 << 24;
+        let t = ring_allreduce_contended(&sim, &ranks, bytes).unwrap();
+        let path = CommPath {
+            links: vec![LinkSpec::cxl3_x16()],
+            stack: crate::fabric::netstack::SoftwareStack::hw_mediated(),
+        };
+        let analytic = ring_allreduce(n, bytes, &path);
+        let rel = (t - analytic).abs() / analytic;
+        assert!(rel < 0.01, "flow={t} analytic={analytic}");
+    }
+
+    #[test]
+    fn concurrent_collectives_pay_the_tax() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let mk = || {
+            let sim = FabricSim::new(Topology::star(8), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            let ranks = sim.endpoints();
+            (sim, ranks)
+        };
+        let (sim, ranks) = mk();
+        let alone = ring_allreduce_contended(&sim, &ranks, 1 << 22).unwrap();
+        // same collective twice, concurrently, over the same shared path
+        let (sim, ranks) = mk();
+        let mut eng = Engine::new();
+        let a = ring_allreduce_flows(&sim, &mut eng, &ranks, 1 << 22);
+        let b = ring_allreduce_flows(&sim, &mut eng, &ranks, 1 << 22);
+        eng.run();
+        let ta = a.finish_time().unwrap();
+        let tb = b.finish_time().unwrap();
+        assert!(ta > alone && tb > alone, "alone={alone} ta={ta} tb={tb} (contention must be observable)");
+        // and the fabric's ledger attributes the tax
+        let ledger = sim.ledger();
+        assert!(ledger.contention.max() > 0.0);
+        assert!(ledger.peak_utilization > 0.5);
+    }
+
+    #[test]
+    fn flow_all_to_all_and_broadcast_complete() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let sim = FabricSim::new(Topology::single_clos(8, 4), LinkSpec::nvlink5_bundle(), RoutingPolicy::Pbr);
+        let ranks = sim.endpoints();
+        let mut eng = Engine::new();
+        let a2a = all_to_all_flows(&sim, &mut eng, &ranks, 1 << 22);
+        eng.run();
+        let t_a2a = a2a.finish_time().expect("all-to-all completes");
+        assert!(t_a2a > 0.0);
+        assert_eq!(sim.completed(), (8 * 7) as u64, "n(n-1) all-to-all flows");
+        let sim = FabricSim::new(Topology::single_clos(8, 4), LinkSpec::nvlink5_bundle(), RoutingPolicy::Pbr);
+        let ranks = sim.endpoints();
+        let mut eng = Engine::new();
+        let bc = tree_broadcast_flows(&sim, &mut eng, &ranks, 1 << 22);
+        eng.run();
+        assert!(bc.finish_time().expect("broadcast completes") > 0.0);
+        assert_eq!(sim.completed(), 7, "n-1 broadcast flows");
+    }
+
+    #[test]
+    fn flow_collectives_trivial_sizes() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let sim = FabricSim::new(Topology::star(2), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let one = vec![sim.endpoints()[0]];
+        let mut eng = Engine::new();
+        let run = ring_allreduce_flows(&sim, &mut eng, &one, 1 << 20);
+        eng.run();
+        assert_eq!(run.finish_time(), Some(0.0));
+        assert!(run.is_done());
+    }
+
+    #[test]
+    fn routed_path_prices_collectives() {
+        use crate::datacenter::hierarchy::RoutedPath;
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        use crate::fabric::Fabric;
+        let fabric = Fabric::new(Topology::single_clos(8, 4), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let eps = fabric.topology().endpoints().to_vec();
+        let rp = RoutedPath::resolve(&fabric, eps[0], eps[1], crate::fabric::netstack::SoftwareStack::hw_mediated())
+            .unwrap();
+        // the generic analytic functions accept resolved routes directly
+        let t = ring_allreduce(8, 1 << 24, &rp);
+        assert!(t > 0.0);
+        let equivalent = CommPath { links: rp.path.links.clone(), stack: rp.path.stack.clone() };
+        assert_eq!(t, ring_allreduce(8, 1 << 24, &equivalent));
     }
 
     #[test]

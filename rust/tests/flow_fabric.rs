@@ -1,0 +1,161 @@
+//! Integration: the flow-level contention-aware fabric.
+//!
+//! The two contracts the subsystem must keep:
+//! * **determinism** — same seed + workload ⇒ byte-identical event trace
+//!   and telemetry, across independent runs;
+//! * **conservation** — per-link delivered bytes match flow demand, a
+//!   contended flow never beats its analytic time, and an idle fabric
+//!   reproduces the closed form within 1%.
+
+use commtax::datacenter::hierarchy::{CommPath, RoutedPath};
+use commtax::fabric::flow::{FabricSim, TrafficClass, Transfer};
+use commtax::fabric::link::LinkSpec;
+use commtax::fabric::netstack::SoftwareStack;
+use commtax::fabric::routing::RoutingPolicy;
+use commtax::fabric::topology::Topology;
+use commtax::sim::{Engine, Rng};
+use commtax::workload::collectives::{ring_allreduce, ring_allreduce_contended, ring_allreduce_flows};
+
+/// A randomized mixed workload on a two-level Clos; returns the sim after
+/// the engine drains.
+fn run_mixed_workload(seed: u64) -> FabricSim {
+    let sim = FabricSim::new(Topology::multi_clos(16, 4, 2), LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+    let eps = sim.endpoints();
+    let mut eng = Engine::new();
+    let mut rng = Rng::new(seed);
+    let classes = [TrafficClass::Collective, TrafficClass::KvCache, TrafficClass::Activation];
+    for k in 0..120 {
+        let a = eps[rng.index(eps.len())];
+        let b = eps[rng.index(eps.len())];
+        let bytes = 1 + rng.below(1 << 22);
+        let class = classes[k % classes.len()];
+        let at = rng.range(0.0, 2.0e6);
+        let sim2 = sim.clone();
+        eng.schedule_at(at, move |e| {
+            sim2.submit(e, Transfer::new(a, b, bytes, class));
+        });
+    }
+    eng.run();
+    sim
+}
+
+#[test]
+fn determinism_same_seed_identical_trace_and_telemetry() {
+    let s1 = run_mixed_workload(1234);
+    let s2 = run_mixed_workload(1234);
+    assert_eq!(s1.trace_render(), s2.trace_render(), "event traces must be byte-identical");
+    let (l1, l2) = (s1.ledger(), s2.ledger());
+    assert_eq!(l1.total_payload, l2.total_payload);
+    assert_eq!(l1.flows, l2.flows);
+    assert_eq!(l1.class_payload, l2.class_payload);
+    assert_eq!(l1.per_link.len(), l2.per_link.len());
+    for (a, b) in l1.per_link.iter().zip(l2.per_link.iter()) {
+        assert_eq!(a.edge, b.edge);
+        assert_eq!(a.payload, b.payload);
+        assert_eq!(a.peak_flows, b.peak_flows);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "utilization must be bit-identical");
+    }
+    assert_eq!(l1.contention.sum().to_bits(), l2.contention.sum().to_bits());
+}
+
+#[test]
+fn different_seeds_differ() {
+    let s1 = run_mixed_workload(1);
+    let s2 = run_mixed_workload(2);
+    assert_ne!(s1.trace_render(), s2.trace_render());
+}
+
+#[test]
+fn conservation_per_link_bytes_match_demand() {
+    let sim = FabricSim::new(Topology::single_clos(8, 4), LinkSpec::cxl3_x16(), RoutingPolicy::Pbr);
+    let eps = sim.endpoints();
+    let mut eng = Engine::new();
+    let mut rng = Rng::new(99);
+    let mut demand = 0u64;
+    let mut routed_hops: u64 = 0;
+    for _ in 0..60 {
+        let a = eps[rng.index(eps.len())];
+        let b = eps[rng.index(eps.len())];
+        if a == b {
+            continue;
+        }
+        let bytes = 1 + rng.below(1 << 20);
+        demand += bytes;
+        // every clos route here is 2 hops, so each flow deposits its bytes
+        // on exactly 2 edges
+        routed_hops += 2;
+        sim.submit(&mut eng, Transfer::new(a, b, bytes, TrafficClass::Parameter));
+    }
+    eng.run();
+    let ledger = sim.ledger();
+    assert_eq!(ledger.total_payload, demand, "delivered payload == submitted demand");
+    let per_link: u64 = ledger.per_link.iter().map(|l| l.payload).sum();
+    assert_eq!(per_link, 2 * demand, "per-link deposits == demand x hops ({routed_hops} hop-crossings)");
+    for l in &ledger.per_link {
+        assert!(l.utilization >= 0.0 && l.utilization <= 1.0, "utilization in [0,1], got {}", l.utilization);
+    }
+}
+
+#[test]
+fn idle_fabric_matches_analytic_within_one_percent() {
+    let sim = FabricSim::new(Topology::single_clos(8, 4), LinkSpec::nvlink5_bundle(), RoutingPolicy::Hbr);
+    let eps = sim.endpoints();
+    for bytes in [4096u64, 1 << 20, 1 << 26] {
+        let mut eng = Engine::new();
+        let d = sim.transfer_sync(&mut eng, Transfer::new(eps[0], eps[5], bytes, TrafficClass::Parameter)).unwrap();
+        // equivalent analytic CommPath over the same 2 NVLink hops
+        let path = CommPath {
+            links: vec![LinkSpec::nvlink5_bundle(), LinkSpec::nvlink5_bundle()],
+            stack: SoftwareStack::hw_mediated(),
+        };
+        let analytic = path.time(bytes);
+        let rel = (d.latency - analytic).abs() / analytic;
+        assert!(rel < 0.01, "bytes={bytes}: flow={} analytic={analytic}", d.latency);
+    }
+}
+
+#[test]
+fn contended_flow_never_beats_analytic() {
+    // load the fabric with background traffic, then measure a probe flow:
+    // its latency must be >= the idle analytic estimate.
+    let sim = FabricSim::new(Topology::star(6), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+    let eps = sim.endpoints();
+    let mut eng = Engine::new();
+    // three background flows converging on eps[1]: they share the probe's
+    // last hop (switch -> eps[1])
+    for i in 2..5 {
+        sim.submit(&mut eng, Transfer::new(eps[i], eps[1], 1 << 24, TrafficClass::Collective));
+    }
+    let est = sim.estimate(eps[0], eps[1], 1 << 24).unwrap();
+    let d = sim.transfer_sync(&mut eng, Transfer::new(eps[0], eps[1], 1 << 24, TrafficClass::Parameter)).unwrap();
+    assert!(d.latency >= est * 0.999, "contended {} < analytic {est}", d.latency);
+    assert!(d.latency > est * 1.01, "sharing the sw->eps[1] edge must actually delay the probe");
+}
+
+#[test]
+fn concurrent_collectives_slower_than_alone_end_to_end() {
+    // the acceptance criterion, across the workload -> fabric stack: the
+    // same collective twice concurrently on a shared path is strictly
+    // slower than running alone.
+    let mk = || {
+        let sim = FabricSim::new(Topology::multi_clos(8, 4, 1), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let ranks = sim.endpoints();
+        (sim, ranks)
+    };
+    let bytes = 1u64 << 24;
+    let (sim, ranks) = mk();
+    let alone = ring_allreduce_contended(&sim, &ranks, bytes).unwrap();
+    let (sim, ranks) = mk();
+    let mut eng = Engine::new();
+    let a = ring_allreduce_flows(&sim, &mut eng, &ranks, bytes);
+    let b = ring_allreduce_flows(&sim, &mut eng, &ranks, bytes);
+    eng.run();
+    let (ta, tb) = (a.finish_time().unwrap(), b.finish_time().unwrap());
+    assert!(ta > alone, "ta={ta} alone={alone}");
+    assert!(tb > alone, "tb={tb} alone={alone}");
+    // and the analytic closed form over the resolved route agrees with the
+    // solo flow-level run within a loose factor (same order of magnitude)
+    let rp = RoutedPath::resolve_sim(&sim, ranks[0], ranks[1], SoftwareStack::hw_mediated()).unwrap();
+    let analytic = ring_allreduce(ranks.len(), bytes, &rp);
+    assert!(alone >= analytic * 0.9, "flow-level solo {alone} vs analytic {analytic}");
+}

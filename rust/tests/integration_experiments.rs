@@ -68,9 +68,9 @@ fn table2_latency_cliff_present() {
 }
 
 #[test]
-fn all_fifteen_experiments_run() {
+fn all_sixteen_experiments_run() {
     let tables = experiments::all_tables();
-    assert_eq!(tables.len(), 15);
+    assert_eq!(tables.len(), 16);
     for t in &tables {
         assert!(!t.rows.is_empty(), "{}", t.title);
     }

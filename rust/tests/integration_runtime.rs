@@ -4,7 +4,9 @@
 //!
 //! Requires `make artifacts` to have run; tests skip (with a loud message)
 //! when the artifacts directory is absent so `cargo test` stays green in
-//! any order.
+//! any order. The whole file is gated on the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use commtax::runtime::{ArtifactManifest, Runtime};
 use std::path::Path;

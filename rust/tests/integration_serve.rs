@@ -1,6 +1,8 @@
 //! Integration: the full serving pipeline (router → batcher → execution)
 //! driven by *real PJRT execution* of the AOT artifacts — the coordinator
-//! and the runtime composing end-to-end.
+//! and the runtime composing end-to-end. Gated on the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use commtax::runtime::Runtime;
 use commtax::serve::{serve_with, ServeConfig};
