@@ -1,0 +1,8 @@
+//! Bench target for the mem-tax experiment: hierarchical-memory traffic
+//! (KV spill/fetch, migrations, P/D handoff) priced by the analytic tier
+//! model vs measured on the contended flow fabric.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("mem-tax", commtax::experiments::mem_tax);
+    table.print();
+}

@@ -7,8 +7,10 @@
 //! * [`router`] — serving request router across accelerator clusters.
 //! * [`batcher`] — dynamic batching (size + deadline).
 //! * [`scheduler`] — prefill/decode-disaggregated admission with KV budget.
-//! * [`placement`] — temperature-based tier placement and migration.
-//! * [`telemetry`] — counters/gauges for the monitoring frameworks of §5.1.
+//! * [`placement`] — temperature-based tier placement whose migration
+//!   budget feeds back from measured per-link fabric utilization.
+//! * [`telemetry`] — counters/gauges for the monitoring frameworks of
+//!   §5.1, with fabric-ledger and memory-hierarchy folding.
 
 pub mod batcher;
 pub mod orchestrator;

@@ -6,6 +6,14 @@
 //! local, warm → tier-2 pool, cold → storage. Migration recommendations are
 //! hysteresis-damped so data does not ping-pong between tiers (the §6.3
 //! warning about excessively frequent inter-tier migration).
+//!
+//! Placement is also a *feedback* policy: migrations ride the same pool
+//! links as foreground serving/collective traffic, so
+//! [`PlacementPolicy::rebalance_fed`] takes the fabric's measured per-link
+//! utilization (e.g.
+//! [`crate::mem::hierarchy::HierarchicalMemory::pool_utilization`]) and
+//! defers the least-urgent moves when the links are hot instead of adding
+//! migration traffic to a congested fabric's tax.
 
 use crate::mem::tier::Tier;
 use std::collections::HashMap;
@@ -34,6 +42,8 @@ pub struct PlacementPolicy {
     local_budget: u64,
     local_used: u64,
     pub migrations: u64,
+    /// Moves planned but deferred because the fabric was hot.
+    pub deferred: u64,
 }
 
 impl PlacementPolicy {
@@ -48,6 +58,7 @@ impl PlacementPolicy {
             local_budget,
             local_used: 0,
             migrations: 0,
+            deferred: 0,
         }
     }
 
@@ -65,7 +76,19 @@ impl PlacementPolicy {
 
     /// Close an observation window: decay temperatures and compute the
     /// migration plan, applying it. Returns (region, from, to) moves.
+    /// Equivalent to [`Self::rebalance_fed`] on an idle fabric.
     pub fn rebalance(&mut self) -> Vec<(u64, Tier, Tier)> {
+        self.rebalance_fed(0.0)
+    }
+
+    /// Close an observation window with fabric feedback. `pool_util` is
+    /// the measured utilization of the tier-1↔tier-2 links in [0,1]; the
+    /// planned moves are ordered most-urgent-first (distance past their
+    /// threshold) and only a `1 - pool_util` fraction is applied this
+    /// window. Deferred regions keep their tier (and are re-planned next
+    /// window), so migration traffic yields to foreground flows instead of
+    /// deepening a congested link's communication tax.
+    pub fn rebalance_fed(&mut self, pool_util: f64) -> Vec<(u64, Tier, Tier)> {
         // decay
         for r in self.regions.values_mut() {
             r.temperature *= self.decay;
@@ -77,7 +100,8 @@ impl PlacementPolicy {
             let tb = self.regions[b].temperature;
             tb.partial_cmp(&ta).unwrap().then(a.cmp(b))
         });
-        let mut moves = Vec::new();
+        // plan: (region, from, to, urgency = distance past the threshold)
+        let mut plan: Vec<(u64, Tier, Tier, f64)> = Vec::new();
         let mut local_used = 0u64;
         for id in ids {
             let st = self.regions[&id];
@@ -92,12 +116,62 @@ impl PlacementPolicy {
                 local_used += st.bytes;
             }
             if want != st.tier {
-                moves.push((id, st.tier, want));
-                self.migrations += 1;
-                self.regions.get_mut(&id).unwrap().tier = want;
+                let urgency = match want {
+                    Tier::Local => st.temperature - self.effective_hot(st.tier),
+                    Tier::Storage => self.effective_cold(st.tier) - st.temperature,
+                    // falling out of tier-1 / warming out of storage: how far
+                    // from the band it violated
+                    _ if st.tier == Tier::Local => self.effective_hot(st.tier) - st.temperature,
+                    _ => st.temperature - self.effective_cold(st.tier),
+                };
+                plan.push((id, st.tier, want, urgency));
             }
         }
-        self.local_used = local_used;
+        let budget = if plan.is_empty() {
+            0
+        } else {
+            ((1.0 - pool_util.clamp(0.0, 1.0)) * plan.len() as f64).ceil() as usize
+        };
+        plan.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0)));
+        // Apply up to `budget` moves in urgency order, never overflowing the
+        // tier-1 budget: a promotion whose room is a not-yet-applied
+        // demotion's is skipped for now (the budget slot goes to the next
+        // move — typically that demotion) and retried on a later pass, so
+        // the plan converges without ever exceeding capacity.
+        let mut remaining: Vec<(u64, Tier, Tier)> = plan.iter().map(|&(id, from, to, _)| (id, from, to)).collect();
+        let planned = remaining.len();
+        let mut actual_local: u64 =
+            self.regions.values().filter(|r| r.tier == Tier::Local).map(|r| r.bytes).sum();
+        let mut moves = Vec::new();
+        loop {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < remaining.len() && moves.len() < budget {
+                let (id, from, to) = remaining[i];
+                let bytes = self.regions[&id].bytes;
+                if to == Tier::Local && actual_local + bytes > self.local_budget {
+                    i += 1;
+                    continue;
+                }
+                if from == Tier::Local {
+                    actual_local -= bytes;
+                }
+                if to == Tier::Local {
+                    actual_local += bytes;
+                }
+                self.regions.get_mut(&id).unwrap().tier = to;
+                self.migrations += 1;
+                moves.push((id, from, to));
+                remaining.remove(i);
+                progressed = true;
+            }
+            if !progressed || moves.len() >= budget {
+                break;
+            }
+        }
+        self.deferred += (planned - moves.len()) as u64;
+        // tier-1 usage reflects what actually lives there after deferral
+        self.local_used = actual_local;
         moves
     }
 
@@ -188,6 +262,69 @@ mod tests {
             }
         }
         assert!(flips <= 2, "tier flipped {flips} times — hysteresis failed");
+    }
+
+    #[test]
+    fn hot_fabric_defers_migrations() {
+        // identical workloads; the fed policy sees a 90%-utilized pool link
+        // and applies only the most urgent tenth of its plan per window.
+        let drive = |util: f64| {
+            let mut p = PlacementPolicy::new(1 << 30);
+            for id in 0..16 {
+                p.register(id, 1 << 20);
+            }
+            for _ in 0..4 {
+                for id in 0..16 {
+                    p.touch(id, 30);
+                }
+                p.rebalance_fed(util);
+            }
+            (p.migrations, p.deferred)
+        };
+        let (idle_moves, idle_deferred) = drive(0.0);
+        let (hot_moves, hot_deferred) = drive(0.9);
+        assert_eq!(idle_deferred, 0, "idle fabric applies the whole plan");
+        assert!(hot_moves < idle_moves, "hot={hot_moves} idle={idle_moves}");
+        assert!(hot_deferred > 0);
+    }
+
+    #[test]
+    fn deferred_demotion_never_lets_promotion_overflow_budget() {
+        // tier-1 fits exactly one region; region 1 holds it, region 2 gets
+        // hotter. The plan is {demote 1, promote 2}; with a hot fabric only
+        // one move fits each window. The promotion must never apply before
+        // the demotion has freed its room — and the budget slot must fall
+        // through to the demotion so the swap still converges.
+        let mut p = PlacementPolicy::new(1 << 20);
+        p.register(1, 1 << 20);
+        p.register(2, 1 << 20);
+        for _ in 0..3 {
+            p.touch(1, 40);
+            p.rebalance();
+        }
+        assert_eq!(p.tier_of(1), Some(Tier::Local));
+        for _ in 0..8 {
+            p.touch(2, 60);
+            p.rebalance_fed(0.5);
+            assert!(p.local_used() <= 1 << 20, "tier-1 budget exceeded: {}", p.local_used());
+        }
+        assert_eq!(p.tier_of(2), Some(Tier::Local), "swap must converge across windows");
+    }
+
+    #[test]
+    fn saturated_fabric_freezes_all_moves() {
+        let mut p = PlacementPolicy::new(1 << 30);
+        p.register(1, 1 << 20);
+        for _ in 0..4 {
+            p.touch(1, 50);
+            p.rebalance_fed(1.0);
+        }
+        assert_eq!(p.migrations, 0, "fully saturated links admit no migration");
+        assert_eq!(p.tier_of(1), Some(Tier::Pool));
+        // the pressure lifting releases the backlog
+        p.touch(1, 50);
+        p.rebalance_fed(0.0);
+        assert_eq!(p.tier_of(1), Some(Tier::Local));
     }
 
     #[test]

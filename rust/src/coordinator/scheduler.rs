@@ -47,6 +47,9 @@ impl Request {
 pub struct PdScheduler {
     queue: VecDeque<Request>,
     prefill: Vec<Request>,
+    /// Prefilled requests whose KV handoff is still in flight: their
+    /// prefill-pool slot is already free, their decode entry pending.
+    staging: Vec<Request>,
     decode: Vec<Request>,
     /// KV budget (bytes) across admitted requests.
     kv_budget: u64,
@@ -67,6 +70,7 @@ impl PdScheduler {
         PdScheduler {
             queue: VecDeque::new(),
             prefill: Vec::new(),
+            staging: Vec::new(),
             decode: Vec::new(),
             kv_budget,
             kv_used: 0,
@@ -106,19 +110,52 @@ impl PdScheduler {
         ids
     }
 
-    /// A prefill finished: promote to the decode pool (or requeue if the
-    /// decode pool is full — pathological config).
+    /// A prefill finished: promote straight to the decode pool (or leave
+    /// in the prefill pool if decode is full — pathological config). For a
+    /// disaggregated deployment whose KV handoff takes time, use
+    /// [`Self::prefill_complete`] + [`Self::enter_decode`] instead so the
+    /// prefill slot frees while the handoff is in flight.
     pub fn prefill_done(&mut self, id: u64) -> bool {
+        if self.decode.len() >= self.max_decode {
+            return false;
+        }
+        if !self.prefill.iter().any(|r| r.id == id) {
+            return false;
+        }
+        self.prefill_complete(id) && self.enter_decode(id)
+    }
+
+    /// Prefill *compute* finished: free the prefill-pool slot while the KV
+    /// handoff is still in flight. The request parks in staging until
+    /// [`Self::enter_decode`].
+    pub fn prefill_complete(&mut self, id: u64) -> bool {
         let Some(pos) = self.prefill.iter().position(|r| r.id == id) else {
+            return false;
+        };
+        let req = self.prefill.remove(pos);
+        self.staging.push(req);
+        true
+    }
+
+    /// A staged (handoff-complete) request joins the decode pool; false
+    /// when the pool is full (retry after a decode step) or the id is not
+    /// staged.
+    pub fn enter_decode(&mut self, id: u64) -> bool {
+        let Some(pos) = self.staging.iter().position(|r| r.id == id) else {
             return false;
         };
         if self.decode.len() >= self.max_decode {
             return false;
         }
-        let mut req = self.prefill.remove(pos);
+        let mut req = self.staging.remove(pos);
         req.phase = RequestPhase::Decode;
         self.decode.push(req);
         true
+    }
+
+    /// Requests parked between prefill completion and decode entry.
+    pub fn staging_len(&self) -> usize {
+        self.staging.len()
     }
 
     /// One decode iteration across the decode pool; returns ids that
@@ -193,6 +230,24 @@ mod tests {
         assert_eq!(done, vec![1]);
         assert_eq!(s.completed, 1);
         assert_eq!(s.kv_utilization(), 0.0, "KV released on completion");
+    }
+
+    #[test]
+    fn staged_handoff_frees_prefill_slot_before_decode_entry() {
+        let mut s = sched(100_000);
+        for id in 0..5 {
+            s.submit(Request::new(id, 10, 3, 0.0));
+        }
+        assert_eq!(s.admit().len(), 4, "prefill pool holds 4");
+        // request 0's compute finishes; its KV handoff is still in flight
+        assert!(s.prefill_complete(0));
+        assert_eq!(s.staging_len(), 1);
+        assert_eq!(s.admit(), vec![4], "freed slot admits the next request");
+        assert_eq!(s.decode_batch(), 0, "not decoding until the KV lands");
+        assert!(s.enter_decode(0));
+        assert_eq!(s.staging_len(), 0);
+        assert_eq!(s.decode_batch(), 1);
+        assert!(!s.enter_decode(0), "already entered");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! percentiles, per-class traffic) through one stable report.
 
 use crate::fabric::flow::{CommTaxLedger, TrafficClass};
+use crate::mem::hierarchy::HierStats;
 use std::collections::BTreeMap;
 
 /// Counters and gauges, keyed by name. BTreeMap keeps report output stable.
@@ -60,6 +61,22 @@ impl Telemetry {
                 self.incr(&format!("{prefix}.payload.{}", class.name()), bytes);
             }
         }
+    }
+
+    /// Fold a hierarchical-memory run's statistics into the registry under
+    /// `prefix` (e.g. `"mem.hier"`). Same cumulative-snapshot caveat as
+    /// [`Self::record_fabric`]: fold each run once.
+    pub fn record_hierarchy(&mut self, prefix: &str, stats: &HierStats) {
+        self.incr(&format!("{prefix}.spills"), stats.spills);
+        self.incr(&format!("{prefix}.demotions"), stats.demotions);
+        self.incr(&format!("{prefix}.promotions"), stats.promotions);
+        self.incr(&format!("{prefix}.fetches"), stats.fetches);
+        self.incr(&format!("{prefix}.local_accesses"), stats.local_accesses);
+        self.incr(&format!("{prefix}.spill_bytes"), stats.spill_bytes);
+        self.incr(&format!("{prefix}.migrate_bytes"), stats.migrate_bytes);
+        self.incr(&format!("{prefix}.fetch_bytes"), stats.fetch_bytes);
+        self.gauge(&format!("{prefix}.contention.mean_ns"), stats.contention.mean());
+        self.gauge_max(&format!("{prefix}.contention.p99_ns"), stats.contention.percentile(99.0));
     }
 
     /// Read a counter (0 when absent).
@@ -135,6 +152,25 @@ mod tests {
         assert_eq!(t.counter("fabric.payload.kvcache"), 4096);
         assert!(t.gauge_value("fabric.util.peak").unwrap() > 0.0);
         assert!(t.report().contains("fabric.flows"));
+    }
+
+    #[test]
+    fn hierarchy_stats_fold_into_registry() {
+        use crate::fabric::flow::TrafficClass;
+        use crate::mem::hierarchy::HierarchicalMemory;
+        use crate::mem::tier::TieredMemory;
+        use crate::sim::Engine;
+        let hier = HierarchicalMemory::new(2, 0, TieredMemory::proposed(crate::GIB, crate::GIB));
+        let mut eng = Engine::new();
+        hier.write_new(&mut eng, 1, 4096, 0, TrafficClass::KvCache, |_, _| {});
+        eng.run();
+        hier.read_sync(&mut eng, 1, TrafficClass::KvCache).expect("fetch");
+        let mut t = Telemetry::new();
+        t.record_hierarchy("mem.hier", &hier.stats());
+        assert_eq!(t.counter("mem.hier.spills"), 1);
+        assert_eq!(t.counter("mem.hier.fetches"), 1);
+        assert_eq!(t.counter("mem.hier.spill_bytes"), 4096);
+        assert!(t.report().contains("mem.hier.spills"));
     }
 
     #[test]

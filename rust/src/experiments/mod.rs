@@ -930,6 +930,175 @@ pub fn comm_tax() -> Table {
     }
 }
 
+/// Memory-tax ledger — the §6.3 hierarchical-memory traffic (KV
+/// spills/fetches, tier migrations, P/D KV handoff) priced by the analytic
+/// tier model next to the event-driven hierarchy on the contended flow
+/// fabric. Idle rows must agree (~0% delta — the closed-form parity
+/// contract); contended rows show memory flows sharing pool links with
+/// serving traffic, the half of the communication tax the tier math is
+/// structurally blind to.
+pub fn mem_tax() -> Table {
+    use crate::coordinator::placement::PlacementPolicy;
+    use crate::fabric::flow::{TrafficClass, Transfer};
+    use crate::mem::hierarchy::{HierarchicalMemory, MemDone};
+    use crate::sim::Engine;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // (a) closed-form parity: idle-fabric spill + fetch == analytic tiers
+    {
+        let tiers = TieredMemory::proposed(GIB, 16 * GIB);
+        let hier = HierarchicalMemory::new(2, 0, tiers.clone());
+        let bytes = 4u64 << 20;
+        let mut eng = Engine::new();
+        let done: Rc<RefCell<Option<MemDone>>> = Rc::new(RefCell::new(None));
+        let d2 = done.clone();
+        hier.write_new(&mut eng, 1, bytes, 0, TrafficClass::KvCache, move |_, d| *d2.borrow_mut() = Some(d));
+        eng.run();
+        let spill = done.borrow().expect("idle spill completes");
+        let analytic_w = tiers.write(Tier::Pool, bytes);
+        rows.push(vec![
+            "4 MiB KV spill to pool, idle fabric".into(),
+            fmt_ns(analytic_w),
+            fmt_ns(spill.latency),
+            format!("{:+.2}% (must be ~0)", 100.0 * (spill.latency / analytic_w - 1.0)),
+        ]);
+        let fetch = hier.read_sync(&mut eng, 1, TrafficClass::KvCache).expect("idle fetch completes");
+        let analytic_r = tiers.read(Tier::Pool, bytes);
+        rows.push(vec![
+            "4 MiB KV fetch from pool, idle fabric".into(),
+            fmt_ns(analytic_r),
+            fmt_ns(fetch.latency),
+            format!("{:+.2}% (must be ~0)", 100.0 * (fetch.latency / analytic_r - 1.0)),
+        ]);
+    }
+
+    // (b) contended tiering: four accelerators spill + fetch against
+    // serving activation flows on the same tray uplinks
+    {
+        let tiers = TieredMemory::proposed(GIB, 16 * GIB);
+        let hier = HierarchicalMemory::new(4, 0, tiers);
+        let bytes = 8u64 << 20;
+        let mut eng = Engine::new();
+        let fetches: Rc<RefCell<Vec<MemDone>>> = Rc::new(RefCell::new(Vec::new()));
+        for r in 0..4u64 {
+            // spill flows contend with the serving writebacks on the tray
+            // ingress; each fetch starts only once its bytes have landed
+            let (v, hier2) = (fetches.clone(), hier.clone());
+            hier.write_new(&mut eng, r, bytes, r as usize, TrafficClass::KvCache, move |e, _| {
+                let v2 = v.clone();
+                hier2.read(e, r, TrafficClass::KvCache, move |_, d| v2.borrow_mut().push(d));
+            });
+        }
+        // two concurrent serving batches write activations back to the
+        // same pool tray — memory and serving flows share links
+        let fab = hier.fabric().clone();
+        for c in 0..2 {
+            fab.submit(&mut eng, Transfer::new(hier.node(c), hier.pool_node(), 16 << 20, TrafficClass::Activation));
+        }
+        eng.run();
+        let ds = fetches.borrow();
+        let mut ideal = 0.0;
+        let mut measured = 0.0;
+        for d in ds.iter() {
+            ideal += d.ideal;
+            measured += d.latency;
+        }
+        let n = ds.len().max(1) as f64;
+        rows.push(vec![
+            "4 concurrent KV fetches, shared tray uplink".into(),
+            format!("idle: {}", fmt_ns(ideal / n)),
+            format!("contended: {}", fmt_ns(measured / n)),
+            format!("{:.2}x tax", measured / ideal.max(1e-9)),
+        ]);
+        let ledger = fab.ledger();
+        rows.push(vec![
+            "ledger: traffic by class".into(),
+            format!("kvcache {}", crate::benchkit::fmt_bytes(ledger.class_bytes(TrafficClass::KvCache))),
+            format!("activation {}", crate::benchkit::fmt_bytes(ledger.class_bytes(TrafficClass::Activation))),
+            format!("contention p99 {}", fmt_ns(ledger.contention.percentile(99.0))),
+        ]);
+        for l in ledger.hottest(2) {
+            rows.push(vec![
+                format!("hot link #{} ({})", l.edge, l.link),
+                format!("{} -> {}", l.src, l.dst),
+                format!("util {:.0}%", 100.0 * l.utilization),
+                format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+            ]);
+        }
+        // the coordinator's stable reporting path
+        let mut tel = crate::coordinator::telemetry::Telemetry::new();
+        tel.record_fabric("mem.fabric", &ledger);
+        tel.record_hierarchy("mem.hier", &hier.stats());
+        rows.push(vec![
+            "telemetry registry".into(),
+            format!("mem.hier.spills {}", tel.counter("mem.hier.spills")),
+            format!("mem.hier.fetches {}", tel.counter("mem.hier.fetches")),
+            format!(
+                "fabric util peak {:.0}%",
+                100.0 * tel.gauge_value("mem.fabric.util.peak").unwrap_or(0.0)
+            ),
+        ]);
+    }
+
+    // (c) fabric-fed placement: migrations defer when the pool links are hot
+    {
+        let drive = |util: f64| {
+            let mut p = PlacementPolicy::new(64 * (1 << 20));
+            for id in 0..24 {
+                p.register(id, 1 << 20);
+            }
+            for _ in 0..4 {
+                for id in 0..24 {
+                    p.touch(id, 30);
+                }
+                p.rebalance_fed(util);
+            }
+            (p.migrations, p.deferred)
+        };
+        let (idle_m, _) = drive(0.0);
+        let (hot_m, hot_d) = drive(0.85);
+        rows.push(vec![
+            "placement migrations over 4 windows".into(),
+            format!("idle fabric: {idle_m} applied"),
+            format!("85% hot: {hot_m} applied"),
+            format!("{hot_d} deferred to protect foreground flows"),
+        ]);
+    }
+
+    // (d) P/D disaggregation's KV handoff as measured pool traffic
+    {
+        use crate::serve::pd::{simulate_pd_fabric, PdConfig};
+        let cfg = PdConfig { requests: 48, arrival_mean: 8.0e6, ..Default::default() };
+        let plat = Platform::composable_cxl();
+        let (uni, _, _) = simulate_pd_fabric(&cfg, &plat, false);
+        let (dis, ledger, _) = simulate_pd_fabric(&cfg, &plat, true);
+        rows.push(vec![
+            "P/D KV handoff (48 reqs, 7B-class)".into(),
+            "unified: local handoff, 0 flows".into(),
+            format!(
+                "disagg: {} flows, {}",
+                ledger.flows,
+                crate::benchkit::fmt_bytes(ledger.class_bytes(TrafficClass::KvCache))
+            ),
+            format!(
+                "handoff mean {}, ITL p99 {} vs {}",
+                fmt_ns(dis.handoff.mean()),
+                fmt_ns(dis.itl.percentile(99.0)),
+                fmt_ns(uni.itl.percentile(99.0))
+            ),
+        ]);
+    }
+
+    Table {
+        title: "Mem-tax ledger — hierarchical memory: analytic vs contended fabric".into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
 /// Prefill/decode disaggregation (§4.3's reconfiguration story): TTFT and
 /// inter-token latency under unified vs disaggregated engine pools.
 pub fn pd_disagg() -> Table {
@@ -973,6 +1142,7 @@ pub fn all_tables() -> Vec<Table> {
         sec34(),
         sec63(),
         comm_tax(),
+        mem_tax(),
     ]
 }
 
@@ -1044,6 +1214,23 @@ mod tests {
         let tax: f64 = t.rows[1][3].split('x').next().unwrap().parse().unwrap();
         assert!(tax > 1.2, "tax={tax}");
         // per-link telemetry rows exist
+        assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
+    }
+
+    #[test]
+    fn mem_tax_idle_parity_and_contended_sharing() {
+        let t = mem_tax();
+        // idle hierarchy rows reproduce the analytic tier math within 1%
+        for row in &t.rows[..2] {
+            let delta: f64 = row[3].split('%').next().unwrap().parse().unwrap();
+            assert!(delta.abs() < 1.0, "{}: idle delta={delta}%", row[0]);
+        }
+        // contended fetches pay a visible tax sharing links with serving
+        let tax: f64 = t.rows[2][3].split('x').next().unwrap().parse().unwrap();
+        assert!(tax > 1.2, "tax={tax}");
+        // the ledger attributes both memory and serving traffic
+        assert!(t.rows[3][1].starts_with("kvcache"));
+        assert!(t.rows[3][2].starts_with("activation"));
         assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
     }
 

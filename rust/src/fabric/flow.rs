@@ -61,12 +61,18 @@ pub enum TrafficClass {
     Parameter,
     /// Small control/metadata messages.
     Control,
+    /// Hierarchical-memory tier movement (demotion, promotion, placement
+    /// migration) — the §6.3 traffic the tier model used to price analytically.
+    Migration,
 }
 
 impl TrafficClass {
+    /// Number of traffic classes (ledger column count).
+    pub const COUNT: usize = 6;
+
     /// All classes, in ledger column order.
-    pub const ALL: [TrafficClass; 5] =
-        [Self::Collective, Self::KvCache, Self::Activation, Self::Parameter, Self::Control];
+    pub const ALL: [TrafficClass; Self::COUNT] =
+        [Self::Collective, Self::KvCache, Self::Activation, Self::Parameter, Self::Control, Self::Migration];
 
     /// Stable lowercase name for reports.
     pub fn name(self) -> &'static str {
@@ -76,6 +82,7 @@ impl TrafficClass {
             Self::Activation => "activation",
             Self::Parameter => "parameter",
             Self::Control => "control",
+            Self::Migration => "migration",
         }
     }
 
@@ -86,6 +93,7 @@ impl TrafficClass {
             Self::Activation => 2,
             Self::Parameter => 3,
             Self::Control => 4,
+            Self::Migration => 5,
         }
     }
 }
@@ -157,7 +165,7 @@ pub struct CommTaxLedger {
     /// Total payload bytes delivered.
     pub total_payload: u64,
     /// Payload bytes per traffic class (indexed per [`TrafficClass::ALL`]).
-    pub class_payload: [u64; 5],
+    pub class_payload: [u64; TrafficClass::COUNT],
     /// Every edge that carried traffic, in edge-id order.
     pub per_link: Vec<LinkUse>,
     /// Per-flow contention delay (`latency - ideal`) distribution.
@@ -262,7 +270,7 @@ struct FlowNet {
     edge_payload: Vec<u64>,
     edge_util_ns: Vec<f64>,
     edge_peak: Vec<u32>,
-    class_payload: [u64; 5],
+    class_payload: [u64; TrafficClass::COUNT],
     total_payload: u64,
     completed: u64,
     contention: Summary,
@@ -290,7 +298,7 @@ impl FlowNet {
             edge_payload: vec![0; ne],
             edge_util_ns: vec![0.0; ne],
             edge_peak: vec![0; ne],
-            class_payload: [0; 5],
+            class_payload: [0; TrafficClass::COUNT],
             total_payload: 0,
             completed: 0,
             contention: Summary::new(),
@@ -563,6 +571,13 @@ impl FabricSim {
             return Some(Vec::new());
         }
         self.net.borrow().route(src, dst).map(|p| p.as_ref().clone())
+    }
+
+    /// Whether the current policy can route `src` → `dst`, without copying
+    /// a path out (the cheap pre-check for callers that must not lose
+    /// their completion callback to an unroutable [`Self::submit_with`]).
+    pub fn reachable(&self, src: NodeId, dst: NodeId) -> bool {
+        src == dst || self.net.borrow().route(src, dst).is_some()
     }
 
     /// Flows currently streaming (excludes staged submissions).

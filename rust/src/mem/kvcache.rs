@@ -78,6 +78,23 @@ impl KvCache {
         self.pool_used_pages
     }
 
+    /// Pages currently resident in tier-1.
+    pub fn local_pages_used(&self) -> u64 {
+        self.local_used_pages
+    }
+
+    /// Tier-1 page budget.
+    pub fn local_budget_pages(&self) -> u64 {
+        self.local_budget_pages
+    }
+
+    /// (tier-1 pages, pool pages) of one sequence — every page is counted
+    /// in exactly one tier (the single-residency invariant the property
+    /// suite audits).
+    pub fn seq_pages(&self, seq: u64) -> Option<(u64, u64)> {
+        self.seqs.get(&seq).map(|e| (e.local_pages, e.pool_pages))
+    }
+
     /// Live sequences.
     pub fn live_seqs(&self) -> usize {
         self.seqs.len()
@@ -87,12 +104,23 @@ impl KvCache {
     /// spill the *oldest* resident pages of the same sequence to the pool.
     /// Returns bytes written to tier-1 and bytes spilled.
     pub fn append(&mut self, seq: u64, tokens: u64) -> (u64, u64) {
+        let (local, evicted, direct) = self.append_split(seq, tokens);
+        (local, evicted + direct)
+    }
+
+    /// [`Self::append`] with the spill split by provenance: (tier-1 bytes
+    /// written, bytes *evicted* from tier-1 to the pool, bytes that went
+    /// *straight* to the pool without ever being tier-1-resident). The
+    /// event-driven layer prices the two spill kinds differently — only an
+    /// eviction pays a tier-1 media read.
+    pub fn append_split(&mut self, seq: u64, tokens: u64) -> (u64, u64, u64) {
         let e = self.seqs.entry(seq).or_insert(SeqEntry { local_pages: 0, pool_pages: 0, tokens: 0 });
         let before_pages = e.tokens.div_ceil(self.page_tokens.max(1));
         e.tokens += tokens;
         let after_pages = e.tokens.div_ceil(self.page_tokens.max(1));
         let new_pages = after_pages - before_pages;
-        let mut spilled = 0u64;
+        let mut evicted = 0u64;
+        let mut direct = 0u64;
         for _ in 0..new_pages {
             if self.local_used_pages < self.local_budget_pages {
                 self.local_used_pages += 1;
@@ -102,17 +130,17 @@ impl KvCache {
                 e.local_pages -= 1;
                 e.pool_pages += 1;
                 self.pool_used_pages += 1;
-                spilled += self.page_bytes;
+                evicted += self.page_bytes;
                 e.local_pages += 1; // new page takes the freed slot
             } else {
                 // nothing local to evict: page goes straight to pool
                 e.pool_pages += 1;
                 self.pool_used_pages += 1;
-                spilled += self.page_bytes;
+                direct += self.page_bytes;
             }
         }
-        self.spill_bytes += spilled;
-        (new_pages * self.page_bytes - spilled, spilled)
+        self.spill_bytes += evicted + direct;
+        (new_pages * self.page_bytes - evicted - direct, evicted, direct)
     }
 
     /// A decode step touches the whole cache of `seq`: local pages hit at

@@ -10,11 +10,17 @@
 //! * [`coherence`] — directory coherence with CXL.cache semantics and
 //!   back-invalidation vs the software-copy (RDMA) alternative (§4.2, §6.2).
 //! * [`tier`] — the §6.3 two-tier hierarchy: accelerator-local tier-1 and
-//!   capacity-oriented tier-2 pools.
+//!   capacity-oriented tier-2 pools (closed-form access math).
 //! * [`kvcache`] — paged KV-cache manager with tier spill (§2.3, §3.1).
+//! * [`hierarchy`] — the event-driven hierarchy on the contended flow
+//!   fabric: spills, demotions, promotions, fetches and migrations as
+//!   routed [`crate::fabric::flow::Transfer`]s that share pool links with
+//!   serving/collective flows and fold into the communication-tax ledger;
+//!   reproduces the [`tier`] closed forms exactly on an idle fabric.
 
 pub mod allocator;
 pub mod coherence;
+pub mod hierarchy;
 pub mod kvcache;
 pub mod media;
 pub mod pool;
@@ -22,6 +28,7 @@ pub mod tier;
 
 pub use allocator::RangeAllocator;
 pub use coherence::{AccessMode, CoherenceModel, Directory};
+pub use hierarchy::{HierStats, HierarchicalMemory, KvFlowCache, MemDone, MemOp};
 pub use kvcache::KvCache;
 pub use media::MediaSpec;
 pub use pool::{MemoryDevice, MemoryPool};

@@ -57,6 +57,19 @@ impl TierPath {
         let wire = self.links.iter().map(|l| l.wire_time(bytes)).fold(0.0, f64::max);
         sw + hop + wire + self.media.write_time(bytes)
     }
+
+    /// Software + media share of a read — everything in [`Self::read_time`]
+    /// *except* the fabric links. The event-driven hierarchy charges the
+    /// hop + wire terms through a routed flow, so
+    /// `read_time(b) == read_overhead(b) + Σ hop + max wire` by construction.
+    pub fn read_overhead(&self, bytes: u64) -> f64 {
+        self.stack.cost(bytes) + self.media.read_time(bytes)
+    }
+
+    /// Software + media share of a write (see [`Self::read_overhead`]).
+    pub fn write_overhead(&self, bytes: u64) -> f64 {
+        self.stack.cost(bytes) + self.media.write_time(bytes)
+    }
 }
 
 /// The assembled hierarchy.

@@ -2,12 +2,19 @@
 //! execution (simulated platform cost, or real PJRT artifacts) → latency /
 //! throughput accounting.
 //!
-//! Two drivers:
+//! Three drivers:
 //! * [`simulate_serving`] — fully simulated execution cost from the
 //!   workload models; used by benches and the scheduling experiments.
+//! * [`simulate_serving_contended`] — the same pipeline as one event-driven
+//!   simulation whose KV/activation traffic are real flows on a shared
+//!   [`FabricSim`] (measured queueing in every latency).
 //! * [`serve_with`] — the same coordinator pipeline, but batch execution is
 //!   delegated to a caller-provided closure (the `serve_rag` example passes
 //!   real PJRT execution of the AOT artifacts here).
+//!
+//! The [`pd`] submodule is the event-driven prefill/decode disaggregation
+//! experiment: its KV handoff (prefill engine → pooled tier → decode
+//! engine) is contended fabric traffic too.
 
 pub mod pd;
 

@@ -1,23 +1,39 @@
-//! Prefill/decode disaggregation experiment (§4.3: "GPU trays can scale to
-//! handle ... the inference prefill stage and reconfigure to meet stringent
-//! latency constraints during inference decode operations").
+//! Event-driven prefill/decode disaggregation on the contended fabric
+//! (§4.3: "GPU trays can scale to handle ... the inference prefill stage
+//! and reconfigure to meet stringent latency constraints during inference
+//! decode operations").
 //!
 //! Two deployments of the same accelerator budget serve the same request
-//! stream:
+//! stream, as one discrete-event simulation on [`crate::sim::Engine`]:
 //!
-//! * **Unified** — one engine runs both phases; every admitted prompt's
-//!   prefill *pauses* ongoing decode iterations (the classic inter-token
-//!   latency stall).
+//! * **Unified** — one engine runs both phases; a pending prompt's prefill
+//!   *preempts* the decode loop (the classic inter-token latency stall),
+//!   and the prefilled KV is already local, so the handoff is free.
 //! * **Disaggregated** — a prefill engine and a decode engine (composable
-//!   trays) run concurrently; decode iterations never stall on prefill.
+//!   trays) run concurrently; decode iterations never stall on prefill,
+//!   but every finished prefill must hand its KV to the decode engine
+//!   **through the pooled tier-2 tray**: two routed
+//!   [`TrafficClass::KvCache`] flows (prefill→pool spill, pool→decode
+//!   fetch) on a [`FabricSim`] whose links the handoffs genuinely share —
+//!   concurrent handoffs queue on the tray uplink and the measured delay
+//!   lands in TTFT and the communication-tax ledger.
 //!
-//! Measured: time-to-first-token (TTFT), inter-token latency (ITL) p99, and
-//! request completion throughput.
+//! Measured: time-to-first-token (TTFT — request enters the decode pool),
+//! inter-token latency (ITL — gap between consecutive decode-iteration
+//! completions while streams are active), handoff latency, throughput.
+//! Determinism contract: same seed ⇒ byte-identical event trace
+//! ([`simulate_pd_fabric`] returns it; `tests/pd_disagg.rs` locks it down,
+//! mirroring `tests/flow_fabric.rs`).
 
 use crate::coordinator::scheduler::{PdScheduler, Request};
-use crate::sim::{Rng, Summary};
+use crate::fabric::flow::{CommTaxLedger, FabricSim, TrafficClass};
+use crate::mem::hierarchy::HierarchicalMemory;
+use crate::sim::{Engine, Rng, Summary};
 use crate::workload::inference::{decode_step_time, prefill_time, KvPlacement};
 use crate::workload::{ModelSpec, Platform};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
 
 /// Experiment configuration.
 #[derive(Clone, Debug)]
@@ -53,18 +69,75 @@ impl Default for PdConfig {
 /// Measured outcome.
 #[derive(Debug)]
 pub struct PdReport {
-    /// Time to first token per request (ns).
+    /// Time to first token per request (ns): arrival → decode-pool entry.
     pub ttft: Summary,
     /// Inter-token latency per decode iteration (ns).
     pub itl: Summary,
+    /// KV handoff latency per request (ns): prefill finish → KV resident
+    /// at the decode engine. All-zero in unified mode (local handoff).
+    pub handoff: Summary,
     /// Completed requests.
     pub completed: usize,
     /// Wall span (ns).
     pub makespan: f64,
 }
 
+/// Fixed inputs of one run.
+struct PdEnv {
+    model: ModelSpec,
+    platform: Platform,
+    prompt: u64,
+    gen: u64,
+    disagg: bool,
+    prefill_cost: f64,
+    /// KV bytes a finished prefill hands to the decode engine.
+    handoff_bytes: u64,
+    /// The memory hierarchy carrying the handoff: node 0 is the prefill
+    /// engine, node 1 the decode engine, plus the pooled KV tray. Its
+    /// spill/fetch movements price the tier media + software overheads and
+    /// put both legs on the shared fabric.
+    hier: HierarchicalMemory,
+    arrivals: Vec<f64>,
+}
+
+/// `PdEnv::hier` node index of the prefill engine.
+const PREFILL_NODE: usize = 0;
+/// `PdEnv::hier` node index of the decode engine.
+const DECODE_NODE: usize = 1;
+
+/// Mutable state of one run.
+struct PdRun {
+    sched: PdScheduler,
+    /// Admitted ids awaiting the prefill engine (admission order).
+    prefill_q: VecDeque<u64>,
+    /// Prefilled ids whose KV has landed, awaiting decode-pool entry.
+    ready_q: VecDeque<u64>,
+    prefill_busy: bool,
+    decode_busy: bool,
+    /// Completion time of the previous decode iteration while the decode
+    /// pool stayed occupied (None across idle gaps).
+    last_token_at: Option<f64>,
+    ttft: Summary,
+    itl: Summary,
+    handoff: Summary,
+    completed: usize,
+    makespan: f64,
+    trace: Vec<String>,
+}
+
 /// Run the experiment. `disaggregated` selects the deployment.
 pub fn simulate_pd(cfg: &PdConfig, platform: &Platform, disaggregated: bool) -> PdReport {
+    simulate_pd_fabric(cfg, platform, disaggregated).0
+}
+
+/// Run the experiment and also return the fabric's communication-tax
+/// ledger (the KV-handoff flows) and the deterministic event trace — same
+/// seed ⇒ byte-identical text, the golden-trace contract.
+pub fn simulate_pd_fabric(
+    cfg: &PdConfig,
+    platform: &Platform,
+    disaggregated: bool,
+) -> (PdReport, CommTaxLedger, String) {
     let mut rng = Rng::new(cfg.seed);
     let mut arrivals: Vec<f64> = Vec::with_capacity(cfg.requests);
     let mut t = 0.0;
@@ -72,83 +145,195 @@ pub fn simulate_pd(cfg: &PdConfig, platform: &Platform, disaggregated: bool) -> 
         t += rng.exp(cfg.arrival_mean);
         arrivals.push(t);
     }
-    let kv_per_token = cfg.model.kv_bytes_per_token();
-    let mut sched = PdScheduler::new(cfg.kv_budget, kv_per_token, 4, 64);
-    let prefill_cost = prefill_time(&cfg.model, cfg.prompt_tokens, platform);
-
-    let mut ttft = Summary::new();
-    let mut itl = Summary::new();
-    let mut arrived = 0usize;
-    let mut now = 0.0f64;
-    // engine availability clocks
-    let mut prefill_free = 0.0f64;
-    // in unified mode decode shares prefill_free; in disaggregated it has
-    // its own clock
-    let mut decode_free = 0.0f64;
-    let mut prefill_end: Vec<(u64, f64)> = Vec::new(); // (id, finish time)
-    let arrival_of = |id: u64, arr: &[f64]| arr[id as usize];
-
-    let mut completed = 0usize;
-    let mut guard = 0u32;
-    while completed < cfg.requests && guard < 2_000_000 {
-        guard += 1;
-        // admit arrivals up to `now`
-        while arrived < cfg.requests && arrivals[arrived] <= now {
-            sched.submit(Request::new(arrived as u64, cfg.prompt_tokens, cfg.gen_tokens, arrivals[arrived]));
-            arrived += 1;
-        }
-        // launch prefills for newly admitted requests
-        for id in sched.admit() {
-            let engine_free = if disaggregated { prefill_free } else { prefill_free.max(decode_free) };
-            let start = engine_free.max(now);
-            let finish = start + prefill_cost;
-            prefill_free = finish;
-            if !disaggregated {
-                // unified: prefill occupies the shared engine — decode stalls
-                decode_free = decode_free.max(finish);
+    // prefill engine, decode engine and the pooled KV tray behind one
+    // mid-of-rack switch, with the handoff legs on the platform's tier-2
+    // link — exactly the hierarchy's own fabric shape, so build it there
+    // (tier-1 capacity 0: the handoff uses raw spill/fetch streams, no
+    // region bookkeeping)
+    let hier = HierarchicalMemory::new(2, 0, platform.tiers.clone());
+    let sim = hier.fabric().clone();
+    let handoff_bytes = cfg.model.kv_bytes_per_token() * cfg.prompt_tokens;
+    let env = Rc::new(PdEnv {
+        model: cfg.model,
+        platform: platform.clone(),
+        prompt: cfg.prompt_tokens,
+        gen: cfg.gen_tokens,
+        disagg: disaggregated,
+        prefill_cost: prefill_time(&cfg.model, cfg.prompt_tokens, platform),
+        handoff_bytes,
+        hier,
+        arrivals: arrivals.clone(),
+    });
+    let st = Rc::new(RefCell::new(PdRun {
+        sched: PdScheduler::new(cfg.kv_budget, cfg.model.kv_bytes_per_token(), 4, 64),
+        prefill_q: VecDeque::new(),
+        ready_q: VecDeque::new(),
+        prefill_busy: false,
+        decode_busy: false,
+        last_token_at: None,
+        ttft: Summary::new(),
+        itl: Summary::new(),
+        handoff: Summary::new(),
+        completed: 0,
+        makespan: 0.0,
+        trace: Vec::new(),
+    }));
+    let mut eng = Engine::new();
+    for (i, &at) in arrivals.iter().enumerate() {
+        let (st2, env2, sim2) = (st.clone(), env.clone(), sim.clone());
+        let (p, g) = (cfg.prompt_tokens, cfg.gen_tokens);
+        eng.schedule_at(at, move |e| {
+            {
+                let mut s = st2.borrow_mut();
+                s.sched.submit(Request::new(i as u64, p, g, at));
+                s.trace.push(format!("{at:.3} arrive req={i}"));
             }
-            prefill_end.push((id, finish));
-            ttft.add(finish - arrival_of(id, &arrivals));
-        }
-        // promote finished prefills
-        prefill_end.retain(|&(id, fin)| {
-            if fin <= now {
-                sched.prefill_done(id);
-                false
-            } else {
-                true
-            }
+            kick(&st2, &env2, &sim2, e);
         });
-        // one decode iteration over the current continuous batch
-        let batch = sched.decode_batch();
-        if batch > 0 {
-            let d = decode_step_time(
-                &cfg.model,
-                batch as u64,
-                cfg.prompt_tokens + cfg.gen_tokens / 2,
-                KvPlacement::Local,
-                platform,
-            );
-            let start = decode_free.max(now);
-            decode_free = start + d;
-            if !disaggregated {
-                prefill_free = prefill_free.max(decode_free);
-            }
-            itl.add(decode_free - now);
-            completed += sched.decode_step().len();
-            now = decode_free;
-        } else {
-            // idle: jump to the next event (arrival or prefill completion)
-            let next_arrival = arrivals.get(arrived).copied().unwrap_or(f64::INFINITY);
-            let next_prefill = prefill_end.iter().map(|&(_, f)| f).fold(f64::INFINITY, f64::min);
-            let next = next_arrival.min(next_prefill);
-            if !next.is_finite() {
+    }
+    eng.run();
+    let s = st.borrow();
+    let report = PdReport {
+        ttft: s.ttft.clone(),
+        itl: s.itl.clone(),
+        handoff: s.handoff.clone(),
+        completed: s.completed,
+        makespan: s.makespan,
+    };
+    let mut trace = s.trace.join("\n");
+    trace.push_str("\n---- flows ----\n");
+    trace.push_str(&sim.trace_render());
+    (report, sim.ledger(), trace)
+}
+
+/// Advance everything that can advance at the current instant: admission,
+/// decode-pool entry of handed-off requests, and both engines.
+fn kick(st: &Rc<RefCell<PdRun>>, env: &Rc<PdEnv>, sim: &FabricSim, eng: &mut Engine) {
+    let now = eng.now();
+    {
+        let mut s = st.borrow_mut();
+        let admitted = s.sched.admit();
+        for id in admitted {
+            s.prefill_q.push_back(id);
+            s.trace.push(format!("{now:.3} admit req={id}"));
+        }
+        // requests whose KV has landed enter continuous batching (retrying
+        // when the decode pool was momentarily full)
+        while let Some(&id) = s.ready_q.front() {
+            if !s.sched.enter_decode(id) {
                 break;
             }
-            now = next.max(now);
+            s.ready_q.pop_front();
+            let at = env.arrivals[id as usize];
+            s.ttft.add(now - at);
+            s.trace.push(format!("{now:.3} decode-enter req={id}"));
         }
     }
-    PdReport { ttft, itl, completed, makespan: now }
+    start_prefill(st, env, sim, eng);
+    start_decode(st, env, sim, eng);
+}
+
+fn start_prefill(st: &Rc<RefCell<PdRun>>, env: &Rc<PdEnv>, sim: &FabricSim, eng: &mut Engine) {
+    let id = {
+        let mut s = st.borrow_mut();
+        // unified: one engine serves both phases, so a running decode
+        // iteration blocks prefill (and vice versa)
+        if s.prefill_busy || (!env.disagg && s.decode_busy) {
+            return;
+        }
+        let Some(id) = s.prefill_q.pop_front() else { return };
+        s.prefill_busy = true;
+        s.trace.push(format!("{:.3} prefill-start req={id}", eng.now()));
+        id
+    };
+    let (st2, env2, sim2) = (st.clone(), env.clone(), sim.clone());
+    eng.schedule_in(env.prefill_cost, move |e| prefill_fin(&st2, &env2, &sim2, e, id));
+}
+
+fn prefill_fin(st: &Rc<RefCell<PdRun>>, env: &Rc<PdEnv>, sim: &FabricSim, eng: &mut Engine, id: u64) {
+    let now = eng.now();
+    {
+        let mut s = st.borrow_mut();
+        s.prefill_busy = false;
+        // the prefill-pool slot frees now — the handoff happens in staging,
+        // so admission is not throttled by in-flight KV movement
+        s.sched.prefill_complete(id);
+        s.trace.push(format!("{now:.3} prefill-finish req={id}"));
+    }
+    if env.disagg && env.handoff_bytes > 0 {
+        // KV handoff through the pooled tier, as two hierarchy movements
+        // on the shared fabric: a spill (tier-1 read → flow → pool write)
+        // from the prefill engine, then a persisting fetch (pool read →
+        // flow → tier-1 write) into the decode engine. Concurrent handoffs
+        // genuinely queue on the tray links.
+        let (st1, env1, sim1) = (st.clone(), env.clone(), sim.clone());
+        env.hier.stream(eng, id, env.handoff_bytes, PREFILL_NODE, true, TrafficClass::KvCache, move |e, _spill| {
+            let (st2, env2, sim2) = (st1.clone(), env1.clone(), sim1.clone());
+            env1.hier.fetch_into(e, id, env1.handoff_bytes, DECODE_NODE, TrafficClass::KvCache, move |e2, _fetch| {
+                let t = e2.now();
+                {
+                    let mut s = st2.borrow_mut();
+                    s.handoff.add(t - now);
+                    s.ready_q.push_back(id);
+                    s.trace.push(format!("{t:.3} handoff-finish req={id}"));
+                }
+                kick(&st2, &env2, &sim2, e2);
+            });
+        });
+    } else {
+        // unified engine (or zero-KV model): the cache is already local
+        let mut s = st.borrow_mut();
+        s.handoff.add(0.0);
+        s.ready_q.push_back(id);
+    }
+    kick(st, env, sim, eng);
+}
+
+fn start_decode(st: &Rc<RefCell<PdRun>>, env: &Rc<PdEnv>, sim: &FabricSim, eng: &mut Engine) {
+    let batch = {
+        let mut s = st.borrow_mut();
+        if s.decode_busy || (!env.disagg && s.prefill_busy) {
+            return;
+        }
+        // unified: a pending prefill preempts the decode loop — the
+        // §4.3 inter-token stall the disaggregated deployment removes
+        if !env.disagg && !s.prefill_q.is_empty() {
+            return;
+        }
+        let batch = s.sched.decode_batch();
+        if batch == 0 {
+            return;
+        }
+        s.decode_busy = true;
+        s.trace.push(format!("{:.3} decode-iter batch={batch}", eng.now()));
+        batch
+    };
+    let d = decode_step_time(&env.model, batch as u64, env.prompt + env.gen / 2, KvPlacement::Local, &env.platform);
+    let (st2, env2, sim2) = (st.clone(), env.clone(), sim.clone());
+    eng.schedule_in(d, move |e| decode_fin(&st2, &env2, &sim2, e));
+}
+
+fn decode_fin(st: &Rc<RefCell<PdRun>>, env: &Rc<PdEnv>, sim: &FabricSim, eng: &mut Engine) {
+    let now = eng.now();
+    {
+        let mut s = st.borrow_mut();
+        s.decode_busy = false;
+        let done = s.sched.decode_step();
+        s.completed += done.len();
+        for id in &done {
+            s.trace.push(format!("{now:.3} complete req={id}"));
+        }
+        // ITL: gap between consecutive iteration completions; in unified
+        // mode a preempting prefill widens this gap — the measured stall
+        if let Some(prev) = s.last_token_at {
+            s.itl.add(now - prev);
+        }
+        s.last_token_at = if s.sched.decode_batch() > 0 || !s.ready_q.is_empty() { Some(now) } else { None };
+        if now > s.makespan {
+            s.makespan = now;
+        }
+    }
+    kick(st, env, sim, eng);
 }
 
 #[cfg(test)]
@@ -190,5 +375,30 @@ mod tests {
         let b = simulate_pd(&cfg, &p, true);
         assert_eq!(a.ttft.mean(), b.ttft.mean());
         assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn disaggregated_handoff_is_real_fabric_traffic() {
+        let cfg = PdConfig { requests: 16, ..Default::default() };
+        let p = Platform::composable_cxl();
+        let (r, ledger, trace) = simulate_pd_fabric(&cfg, &p, true);
+        assert_eq!(r.completed, 16);
+        assert_eq!(ledger.flows, 2 * 16, "spill + fetch leg per request");
+        assert_eq!(
+            ledger.class_bytes(TrafficClass::KvCache),
+            2 * cfg.model.kv_bytes_per_token() * cfg.prompt_tokens * 16
+        );
+        assert!(r.handoff.mean() > 0.0, "handoff must cost time");
+        assert!(trace.contains("handoff-finish"));
+    }
+
+    #[test]
+    fn unified_handoff_is_local_and_free() {
+        let cfg = PdConfig { requests: 16, ..Default::default() };
+        let p = Platform::composable_cxl();
+        let (r, ledger, _) = simulate_pd_fabric(&cfg, &p, false);
+        assert_eq!(r.completed, 16);
+        assert_eq!(ledger.flows, 0, "no fabric traffic in the unified engine");
+        assert_eq!(r.handoff.max(), 0.0);
     }
 }

@@ -5,6 +5,13 @@
 //! Requires `make artifacts` to have run; tests skip (with a loud message)
 //! when the artifacts directory is absent so `cargo test` stays green in
 //! any order. The whole file is gated on the `pjrt` feature.
+//!
+//! TRIAGE (seed-failure audit): in the default configuration this file
+//! compiles to nothing (`#![cfg(feature = "pjrt")]`), so it cannot fail a
+//! default `cargo test` run. Under `--features pjrt` it additionally
+//! self-skips without the AOT artifacts. Kept as-is — the feature gate +
+//! artifact check are the quarantine; CI's best-effort `pjrt` job covers
+//! the compile path.
 
 #![cfg(feature = "pjrt")]
 

@@ -1,6 +1,15 @@
 //! Integration: the full serving pipeline (router → batcher → execution)
 //! driven by *real PJRT execution* of the AOT artifacts — the coordinator
 //! and the runtime composing end-to-end. Gated on the `pjrt` feature.
+//!
+//! TRIAGE (seed-failure audit): this file only compiles under
+//! `--features pjrt` (the whole file is `#![cfg(feature = "pjrt")]`), and
+//! even then every test self-skips with a loud `SKIP:` message unless
+//! `make artifacts` has produced `artifacts/manifest.json`. In the default
+//! configuration it contributes zero tests, so it cannot be the source of
+//! a default-run failure; with `pjrt` it requires the xla_extension
+//! toolchain plus artifacts. Kept as-is — the gating *is* the quarantine —
+//! and CI now exercises the `pjrt` compile in a dedicated best-effort job.
 
 #![cfg(feature = "pjrt")]
 

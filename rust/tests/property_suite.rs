@@ -170,6 +170,174 @@ fn property_tier_reads_monotone_in_bytes() {
 }
 
 #[test]
+fn property_hierarchy_conserves_bytes_across_migrations() {
+    // event-driven hierarchy: however spill/demote/promote/read/free
+    // interleave, allocator accounting conserves bytes at every step and
+    // resident bytes equal the live regions' footprint.
+    use commtax::fabric::flow::TrafficClass;
+    use commtax::mem::hierarchy::HierarchicalMemory;
+    use commtax::mem::tier::TieredMemory;
+    use commtax::sim::Engine;
+    check(
+        32,
+        |rng| {
+            let n = 1 + rng.index(12);
+            let sizes: Vec<u64> = (0..n).map(|_| 1 + rng.below(1 << 16)).collect();
+            let ops: Vec<(u8, u64)> = (0..40).map(|_| (rng.below(5) as u8, rng.below(n as u64))).collect();
+            (sizes, ops)
+        },
+        |(sizes, ops)| {
+            let tiers = TieredMemory::proposed(commtax::GIB, commtax::GIB);
+            // small tier-1 so spills and failed promotions both occur
+            let hier = HierarchicalMemory::new(3, 1 << 17, tiers);
+            let mut eng = Engine::new();
+            let mut live = 0u64;
+            let mut alive: Vec<bool> = vec![false; sizes.len()];
+            for (i, &b) in sizes.iter().enumerate() {
+                if hier.write_new(&mut eng, i as u64, b, i % 3, TrafficClass::KvCache, |_, _| {}) {
+                    live += b;
+                    alive[i] = true;
+                }
+            }
+            eng.run();
+            for &(op, r) in ops {
+                match op {
+                    0 => {
+                        hier.demote(&mut eng, r, TrafficClass::Migration, |_, _| {});
+                    }
+                    1 => {
+                        hier.promote(&mut eng, r, TrafficClass::Migration, |_, _| {});
+                    }
+                    2 | 3 => {
+                        hier.read(&mut eng, r, TrafficClass::KvCache, |_, _| {});
+                    }
+                    _ => {
+                        if alive[r as usize] && hier.free(r) {
+                            live -= sizes[r as usize];
+                            alive[r as usize] = false;
+                        }
+                    }
+                }
+                eng.run();
+                if !hier.check_conservation() {
+                    return false;
+                }
+            }
+            let (l, p) = hier.resident_bytes();
+            l + p == live && hier.live_bytes() == live
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_hierarchy_extents_never_overlap() {
+    // allocator no-overlap under churn: the live regions' extents in each
+    // tier-1 arena and in the pool stay pairwise disjoint.
+    use commtax::fabric::flow::TrafficClass;
+    use commtax::mem::hierarchy::HierarchicalMemory;
+    use commtax::mem::tier::TieredMemory;
+    use commtax::sim::Engine;
+    check(
+        32,
+        |rng| {
+            let n = 2 + rng.index(10);
+            let sizes: Vec<u64> = (0..n).map(|_| 1 + rng.below(1 << 14)).collect();
+            let ops: Vec<(u8, u64)> = (0..50).map(|_| (rng.below(4) as u8, rng.below(n as u64))).collect();
+            (sizes, ops)
+        },
+        |(sizes, ops)| {
+            let tiers = TieredMemory::proposed(commtax::GIB, commtax::GIB);
+            let hier = HierarchicalMemory::new(2, 1 << 15, tiers);
+            let mut eng = Engine::new();
+            for (i, &b) in sizes.iter().enumerate() {
+                hier.write_new(&mut eng, i as u64, b, i % 2, TrafficClass::KvCache, |_, _| {});
+            }
+            eng.run();
+            for &(op, r) in ops {
+                match op {
+                    0 => {
+                        hier.demote(&mut eng, r, TrafficClass::Migration, |_, _| {});
+                    }
+                    1 => {
+                        hier.promote(&mut eng, r, TrafficClass::Migration, |_, _| {});
+                    }
+                    2 => {
+                        hier.free(r);
+                        // re-create under the same id exercises reuse of
+                        // freed ranges
+                        let (sz, node) = (sizes[r as usize], (r % 2) as usize);
+                        hier.write_new(&mut eng, r, sz, node, TrafficClass::KvCache, |_, _| {});
+                    }
+                    _ => {}
+                }
+                eng.run();
+                for loc in [None, Some(0), Some(1)] {
+                    let mut ex = hier.extents(loc);
+                    ex.sort_unstable();
+                    for w in ex.windows(2) {
+                        if w[0].0 + w[0].1 > w[1].0 {
+                            return false; // overlapping extents
+                        }
+                    }
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_kv_pages_resident_in_exactly_one_tier() {
+    // per sequence, tier-1 pages + pool pages always equals the page count
+    // implied by its appended tokens (no page lost, none double-resident),
+    // and the cache-wide counters agree with the per-sequence sums.
+    use commtax::mem::KvCache;
+    check(
+        48,
+        |rng| {
+            (0..50)
+                .map(|_| (rng.below(6), 1 + rng.below(64), rng.chance(0.15)))
+                .collect::<Vec<(u64, u64, bool)>>()
+        },
+        |script| {
+            let page_tokens = 16u64;
+            let budget_pages = 8u64;
+            let mut kv = KvCache::new(budget_pages * page_tokens, page_tokens, 1);
+            let mut tokens: std::collections::HashMap<u64, u64> = Default::default();
+            for &(seq, t, release) in script {
+                if release {
+                    kv.release(seq);
+                    tokens.remove(&seq);
+                } else {
+                    kv.append(seq, t);
+                    *tokens.entry(seq).or_insert(0) += t;
+                }
+                let mut local_sum = 0u64;
+                let mut pool_sum = 0u64;
+                for (&s, &tk) in &tokens {
+                    let Some((lp, pp)) = kv.seq_pages(s) else { return false };
+                    if lp + pp != tk.div_ceil(page_tokens) {
+                        return false; // a page vanished or is double-counted
+                    }
+                    local_sum += lp;
+                    pool_sum += pp;
+                }
+                if local_sum != kv.local_pages_used() || pool_sum != kv.pool_pages() {
+                    return false;
+                }
+                if kv.local_pages_used() > budget_pages {
+                    return false;
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
 fn property_supercluster_transfer_total_order() {
     // inter-cluster latency >= intra-cluster latency for the same payload
     use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
