@@ -1,7 +1,12 @@
 //! Bench target regenerating the paper's fig41 result (see DESIGN.md
-//! per-experiment index). Prints the table and times its computation.
+//! per-experiment index), plus the contended supercluster-tax view: the
+//! same fabric shapes priced analytically (idle closed form) and as
+//! flat-vs-hierarchical flows on the contention-aware simulator, so the
+//! perf trajectory captures both substrates.
 
 fn main() {
     let (table, _ns) = commtax::benchkit::time_once("fig41", commtax::experiments::fig41);
     table.print();
+    let (tax, _ns) = commtax::benchkit::time_once("supercluster-tax", commtax::experiments::supercluster_tax);
+    tax.print();
 }

@@ -1,0 +1,9 @@
+//! Bench target for the supercluster-tax experiment: flat vs hierarchical
+//! all-reduce (completion time + measured inter-cluster CXL bytes) and
+//! contended vs relaxed multi-tenant serving on the CXL-over-XLink
+//! supercluster fabric.
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("supercluster-tax", commtax::experiments::supercluster_tax);
+    table.print();
+}

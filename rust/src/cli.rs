@@ -39,9 +39,9 @@ pub fn parse_args(argv: &[String]) -> Args {
 }
 
 /// Experiment ids accepted by `report --exp`.
-pub const EXPERIMENTS: [&str; 19] = [
+pub const EXPERIMENTS: [&str; 20] = [
     "fig21", "fig22", "fig29", "fig31", "fig33", "fig34", "fig35", "fig36", "fig37", "fig41", "table1", "table2",
-    "table3", "sec34", "sec63", "ablations", "pd-disagg", "comm-tax", "mem-tax",
+    "table3", "sec34", "sec63", "ablations", "pd-disagg", "comm-tax", "mem-tax", "supercluster-tax",
 ];
 
 fn experiment_table(id: &str) -> Option<experiments::Table> {
@@ -65,6 +65,7 @@ fn experiment_table(id: &str) -> Option<experiments::Table> {
         "pd-disagg" => experiments::pd_disagg(),
         "comm-tax" => experiments::comm_tax(),
         "mem-tax" => experiments::mem_tax(),
+        "supercluster-tax" => experiments::supercluster_tax(),
         _ => return None,
     })
 }

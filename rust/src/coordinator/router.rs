@@ -1,7 +1,19 @@
 //! Serving request router across accelerator clusters (§6.2's orchestration
 //! software, vLLM-router-style).
+//!
+//! Strategies range from stateless rotation to [`RoutingStrategy::FabricAware`],
+//! which folds *measured* per-cluster fabric utilization (fed by the
+//! dispatcher from the flow ledger via [`Router::observe_utilization`],
+//! e.g. [`crate::datacenter::cluster::SuperclusterSim::bridge_utilization`])
+//! into the choice — session counts alone can't see a cluster whose bridge
+//! uplinks are saturated by another tenant's collective.
 
 use std::collections::HashMap;
+
+/// Weight converting a fabric-utilization fraction into "equivalent queued
+/// requests" for the [`RoutingStrategy::FabricAware`] score: a fully hot
+/// uplink (util 1.0) costs as much as two waiting batches.
+const UTIL_WEIGHT: f64 = 2.0;
 
 /// Cluster selection strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,6 +25,10 @@ pub enum RoutingStrategy {
     /// Stick sessions to the cluster holding their KV cache; fall back to
     /// least-loaded for new sessions (the paper's data-locality argument).
     KvAffinity,
+    /// Least-loaded, biased by measured per-cluster fabric utilization
+    /// (see [`Router::observe_utilization`]): a cluster with idle compute
+    /// but a saturated bridge uplink is deprioritized.
+    FabricAware,
 }
 
 /// Router state.
@@ -21,6 +37,8 @@ pub struct Router {
     strategy: RoutingStrategy,
     clusters: usize,
     in_flight: Vec<usize>,
+    /// Latest measured fabric utilization per cluster, in [0, 1].
+    utilization: Vec<f64>,
     rr_next: usize,
     /// session -> cluster affinity map.
     affinity: HashMap<u64, usize>,
@@ -36,10 +54,20 @@ impl Router {
             strategy,
             clusters,
             in_flight: vec![0; clusters],
+            utilization: vec![0.0; clusters],
             rr_next: 0,
             affinity: HashMap::new(),
             routed: 0,
             affinity_hits: 0,
+        }
+    }
+
+    /// Feed the latest measured per-cluster fabric utilization (the
+    /// [`RoutingStrategy::FabricAware`] signal). Extra entries are ignored,
+    /// missing ones keep their previous value.
+    pub fn observe_utilization(&mut self, util: &[f64]) {
+        for (slot, &u) in self.utilization.iter_mut().zip(util) {
+            *slot = u.clamp(0.0, 1.0);
         }
     }
 
@@ -62,6 +90,7 @@ impl Router {
                     c
                 }
             }
+            RoutingStrategy::FabricAware => self.fabric_aware(),
         };
         self.in_flight[c] += 1;
         self.routed += 1;
@@ -99,6 +128,21 @@ impl Router {
             .map(|(i, _)| i)
             .unwrap()
     }
+
+    /// Min of `in_flight + UTIL_WEIGHT × utilization`; first index wins
+    /// ties (deterministic).
+    fn fabric_aware(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for c in 0..self.clusters {
+            let score = self.in_flight[c] as f64 + UTIL_WEIGHT * self.utilization[c];
+            if score < best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +177,36 @@ mod tests {
         // after session end, affinity is forgotten (may or may not change)
         let _ = r.route(42);
         assert_eq!(r.affinity_hits, 10);
+    }
+
+    #[test]
+    fn fabric_aware_steers_off_the_hot_fabric() {
+        // equal session counts: utilization alone must decide
+        let mut r = Router::new(3, RoutingStrategy::FabricAware);
+        r.observe_utilization(&[0.9, 0.0, 0.6]);
+        assert_eq!(r.route(1), 1, "the idle fabric wins despite equal loads");
+        // scores now: c0 = 1.8, c1 = 1.0 (one in-flight), c2 = 1.2
+        assert_eq!(r.route(2), 1);
+        // scores now: c0 = 1.8, c1 = 2.0, c2 = 1.2 — the queued batches on
+        // c1 outweigh c2's warm uplink
+        assert_eq!(r.route(3), 2);
+    }
+
+    #[test]
+    fn fabric_aware_without_signal_is_least_loaded() {
+        let mut a = Router::new(4, RoutingStrategy::FabricAware);
+        let mut b = Router::new(4, RoutingStrategy::LeastLoaded);
+        let pa: Vec<_> = (0..16).map(|s| a.route(s)).collect();
+        let pb: Vec<_> = (0..16).map(|s| b.route(s)).collect();
+        assert_eq!(pa, pb, "zero utilization everywhere degenerates to least-loaded");
+    }
+
+    #[test]
+    fn observe_utilization_clamps_and_ignores_extras() {
+        let mut r = Router::new(2, RoutingStrategy::FabricAware);
+        r.observe_utilization(&[1.7, -0.3, 0.5]);
+        // cluster 0 clamped to 1.0 (score 2.0), cluster 1 to 0.0
+        assert_eq!(r.route(1), 1);
     }
 
     #[test]

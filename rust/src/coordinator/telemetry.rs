@@ -63,6 +63,15 @@ impl Telemetry {
         }
     }
 
+    /// Fold a supercluster run's ledger plus its measured inter-cluster
+    /// (CXL) byte count — the §6.2 hierarchical-collective headline —
+    /// under `prefix`. Same cumulative-snapshot caveat as
+    /// [`Self::record_fabric`].
+    pub fn record_supercluster(&mut self, prefix: &str, ledger: &CommTaxLedger, inter_cluster_bytes: u64) {
+        self.record_fabric(prefix, ledger);
+        self.incr(&format!("{prefix}.intercluster_bytes"), inter_cluster_bytes);
+    }
+
     /// Fold a hierarchical-memory run's statistics into the registry under
     /// `prefix` (e.g. `"mem.hier"`). Same cumulative-snapshot caveat as
     /// [`Self::record_fabric`]: fold each run once.
@@ -152,6 +161,26 @@ mod tests {
         assert_eq!(t.counter("fabric.payload.kvcache"), 4096);
         assert!(t.gauge_value("fabric.util.peak").unwrap() > 0.0);
         assert!(t.report().contains("fabric.flows"));
+    }
+
+    #[test]
+    fn supercluster_ledger_folds_with_intercluster_bytes() {
+        use crate::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
+        use crate::fabric::flow::TrafficClass;
+        use crate::sim::Engine;
+        let scs = Supercluster::build_sim(
+            &[XLinkCluster::ualink(4), XLinkCluster::ualink(4)],
+            SuperclusterTopology::DragonFly,
+            1,
+        );
+        let mut eng = Engine::new();
+        scs.submit(&mut eng, scs.accel(0, 0), scs.accel(1, 0), 2048, TrafficClass::Collective, |_, _| {});
+        eng.run();
+        let mut t = Telemetry::new();
+        t.record_supercluster("sc.fabric", &scs.ledger(), scs.inter_cluster_payload());
+        assert_eq!(t.counter("sc.fabric.flows"), 1);
+        assert_eq!(t.counter("sc.fabric.intercluster_bytes"), 2048, "one direct bridge hop");
+        assert!(t.report().contains("sc.fabric.intercluster_bytes"));
     }
 
     #[test]

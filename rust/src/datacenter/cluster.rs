@@ -7,12 +7,28 @@
 //! switch fabric, which may itself be shaped as multi-level Clos, 3D-Torus,
 //! or DragonFly (Fig 41). Memory trays attach directly to the CXL fabric as
 //! tier-2 pools.
+//!
+//! Two pricing substrates share one assembly: [`Supercluster`] keeps the
+//! analytic [`Fabric`] (closed-form `transfer_accel`), while
+//! [`Supercluster::into_sim`] lifts the same topology + link-spec table
+//! (built once) onto the flow-level [`FabricSim`] as a
+//! [`SuperclusterSim`]. There, every transfer is a routed, contended flow;
+//! the XLink↔CXL protocol conversion at a bridge is charged per crossing
+//! (reduced by the §6.2 HBM conversion-cache hit ratio) on both the
+//! measured latency and the idle `ideal`, so conversion is cost, never
+//! mistaken for contention. The sim also knows which directed edges belong
+//! to the inter-cluster CXL fabric, making "bytes moved between clusters"
+//! a measured ledger output ([`SuperclusterSim::inter_cluster_payload`]) —
+//! the quantity the hierarchical collectives in
+//! [`crate::workload::collectives`] are designed to shrink.
 
+use crate::fabric::flow::{FabricSim, FlowDone, FlowId, TrafficClass, Transfer};
 use crate::fabric::link::LinkSpec;
 use crate::fabric::routing::RoutingPolicy;
 use crate::fabric::topology::{NodeId, NodeKind, Topology, TopologyKind};
 use crate::fabric::{EdgeId, Fabric};
-use crate::sim::SimTime;
+use crate::sim::{Engine, SimTime};
+use std::rc::Rc;
 
 /// XLink flavor of a cluster.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +112,11 @@ pub struct Supercluster {
     pub bridge_conversion_ns: f64,
     /// Hit ratio of the bridge HBM conversion cache in [0,1).
     pub bridge_cache_hit: f64,
+    /// `true` for directed edges of the inter-cluster CXL fabric (bridge,
+    /// spine and tray links); `false` for intra-cluster XLink edges.
+    is_cxl_edge: Vec<bool>,
+    /// Cluster index per node id (accelerators only; switches/trays `None`).
+    cluster_of: Vec<Option<usize>>,
 }
 
 impl Supercluster {
@@ -198,11 +219,37 @@ impl Supercluster {
         for &e in &cxl_edges {
             edge_spec[e] = Some(cxl.clone());
         }
+        let mut is_cxl_edge = vec![false; topo.edge_count()];
+        for &e in &cxl_edges {
+            is_cxl_edge[e] = true;
+        }
+        let mut cluster_of = vec![None; topo.node_count()];
+        for (c, eps) in accels.iter().enumerate() {
+            for &a in eps {
+                cluster_of[a] = Some(c);
+            }
+        }
+        // the one place the per-edge link-spec table is built; `into_sim`
+        // lifts it (topology included) instead of rebuilding
         let fabric = Fabric::new_with(topo, RoutingPolicy::Pbr, |e, _| {
             edge_spec[e].clone().unwrap_or_else(LinkSpec::cxl3_x16)
         });
 
-        Supercluster { fabric, accels, bridges, mem_trays: trays, bridge_conversion_ns: 120.0, bridge_cache_hit: 0.0 }
+        Supercluster {
+            fabric,
+            accels,
+            bridges,
+            mem_trays: trays,
+            bridge_conversion_ns: 120.0,
+            bridge_cache_hit: 0.0,
+            is_cxl_edge,
+            cluster_of,
+        }
+    }
+
+    /// Build straight onto the flow-level substrate.
+    pub fn build_sim(clusters: &[XLinkCluster], shape: SuperclusterTopology, mem_trays: usize) -> SuperclusterSim {
+        Supercluster::build(clusters, shape, mem_trays).into_sim()
     }
 
     /// Enable the §6.2 HBM-cached bridging interface: `hit` fraction of
@@ -273,6 +320,207 @@ impl Supercluster {
         res.latency += conv;
         Some(res)
     }
+
+    /// Lift onto the flow-level fabric: the analytic `Fabric`'s topology
+    /// and link-spec table move into a [`FabricSim`] (no per-edge rebuild),
+    /// and the directories + bridge parameters ride along.
+    pub fn into_sim(self) -> SuperclusterSim {
+        let Supercluster {
+            fabric,
+            accels,
+            bridges,
+            mem_trays,
+            bridge_conversion_ns,
+            bridge_cache_hit,
+            is_cxl_edge,
+            cluster_of,
+        } = self;
+        let sim: FabricSim = fabric.into();
+        // per-cluster CXL edges touching the bridge, both directions —
+        // inbound congestion (everyone's KV prefetches converging on this
+        // cluster) matters to the dispatcher as much as outbound
+        let mut bridge_cxl: Vec<Vec<EdgeId>> = vec![Vec::new(); bridges.len()];
+        sim.with_topology(|t| {
+            for (e, &cxl) in is_cxl_edge.iter().enumerate() {
+                if !cxl {
+                    continue;
+                }
+                let (src, dst) = t.edge(e);
+                for (c, &b) in bridges.iter().enumerate() {
+                    if b == src || b == dst {
+                        bridge_cxl[c].push(e);
+                    }
+                }
+            }
+        });
+        SuperclusterSim {
+            sim,
+            dir: Rc::new(ScDirectory {
+                accels,
+                bridges,
+                mem_trays,
+                conversion_ns: bridge_conversion_ns,
+                cache_hit: bridge_cache_hit,
+                is_cxl_edge,
+                cluster_of,
+                bridge_cxl,
+            }),
+        }
+    }
+}
+
+/// Directories shared by all clones of a [`SuperclusterSim`].
+#[derive(Debug)]
+struct ScDirectory {
+    accels: Vec<Vec<NodeId>>,
+    bridges: Vec<NodeId>,
+    mem_trays: Vec<NodeId>,
+    conversion_ns: f64,
+    cache_hit: f64,
+    is_cxl_edge: Vec<bool>,
+    cluster_of: Vec<Option<usize>>,
+    /// CXL edges incident to each cluster's bridge (either direction).
+    bridge_cxl: Vec<Vec<EdgeId>>,
+}
+
+/// The supercluster on the contended flow-level fabric. Cheap to clone
+/// (shares the [`FabricSim`] interior and the directory), which is what
+/// event callbacks capture.
+///
+/// Every submission is a real routed flow; when it crosses a cluster
+/// boundary it additionally pays the bridge protocol conversion — `2×` the
+/// one-way unit for accelerator↔accelerator crossings (one conversion at
+/// each bridge), `1×` for accelerator↔tray — scaled down by the HBM
+/// conversion-cache hit ratio, mirroring the analytic
+/// [`Supercluster::transfer_accel`] exactly so the idle-fabric parity
+/// contract extends to the supercluster layer.
+#[derive(Clone, Debug)]
+pub struct SuperclusterSim {
+    sim: FabricSim,
+    dir: Rc<ScDirectory>,
+}
+
+impl SuperclusterSim {
+    /// The underlying flow simulator (routing, ledger, trace).
+    pub fn fabric_sim(&self) -> &FabricSim {
+        &self.sim
+    }
+
+    /// Number of clusters.
+    pub fn cluster_count(&self) -> usize {
+        self.dir.accels.len()
+    }
+
+    /// Accelerator node ids of one cluster.
+    pub fn cluster_ranks(&self, c: usize) -> &[NodeId] {
+        &self.dir.accels[c]
+    }
+
+    /// One accelerator endpoint.
+    pub fn accel(&self, c: usize, i: usize) -> NodeId {
+        self.dir.accels[c][i]
+    }
+
+    /// The cluster's designated gateway rank (accelerator 0) — the rank
+    /// that fronts the hierarchical collectives' inter-cluster exchange.
+    pub fn leader(&self, c: usize) -> NodeId {
+        self.dir.accels[c][0]
+    }
+
+    /// Bridge switch node per cluster.
+    pub fn bridges(&self) -> &[NodeId] {
+        &self.dir.bridges
+    }
+
+    /// Tier-2 memory-tray endpoints.
+    pub fn tray_count(&self) -> usize {
+        self.dir.mem_trays.len()
+    }
+
+    /// One tray endpoint.
+    pub fn tray(&self, i: usize) -> NodeId {
+        self.dir.mem_trays[i]
+    }
+
+    /// Which cluster an accelerator node belongs to (`None` for trays and
+    /// switches).
+    pub fn cluster_of(&self, n: NodeId) -> Option<usize> {
+        self.dir.cluster_of.get(n).copied().flatten()
+    }
+
+    /// Is this directed edge part of the inter-cluster CXL fabric?
+    pub fn is_cxl_edge(&self, e: EdgeId) -> bool {
+        self.dir.is_cxl_edge.get(e).copied().unwrap_or(false)
+    }
+
+    /// Bridge protocol-conversion cost (ns) a flow between these nodes
+    /// pays: two conversions for a cluster-crossing accelerator pair, one
+    /// for an accelerator↔tray hop, zero intra-cluster.
+    pub fn conversion_between(&self, a: NodeId, b: NodeId) -> f64 {
+        let unit = self.dir.conversion_ns * (1.0 - self.dir.cache_hit);
+        match (self.cluster_of(a), self.cluster_of(b)) {
+            (Some(x), Some(y)) if x == y => 0.0,
+            (Some(_), Some(_)) => 2.0 * unit,
+            (Some(_), None) | (None, Some(_)) => unit,
+            (None, None) => 0.0,
+        }
+    }
+
+    /// Submit a transfer; `done` fires once the last byte has cleared the
+    /// fabric *and* the bridge conversion. Both the measured latency and
+    /// the idle `ideal` carry the conversion, so `FlowDone::contention`
+    /// stays a pure queueing figure. Returns `None` when unroutable.
+    pub fn submit(
+        &self,
+        eng: &mut Engine,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        class: TrafficClass,
+        done: impl FnOnce(&mut Engine, FlowDone) + 'static,
+    ) -> Option<FlowId> {
+        let conv = self.conversion_between(src, dst);
+        if conv <= 0.0 {
+            return self.sim.submit_with(eng, Transfer::new(src, dst, bytes, class), done);
+        }
+        self.sim.submit_with(eng, Transfer::new(src, dst, bytes, class), move |e, mut d| {
+            d.arrival += conv;
+            d.latency += conv;
+            d.ideal += conv;
+            e.schedule_in(conv, move |e2| done(e2, d));
+        })
+    }
+
+    /// Idle (closed-form) latency of a transfer, bridge conversion
+    /// included — what [`Self::submit`] reproduces on an empty fabric.
+    pub fn estimate(&self, src: NodeId, dst: NodeId, bytes: u64) -> Option<f64> {
+        Some(self.sim.estimate(src, dst, bytes)? + self.conversion_between(src, dst))
+    }
+
+    /// Payload bytes delivered over inter-cluster (CXL) edges so far — the
+    /// §6.2 "long-distance data transfers" the hierarchical collectives
+    /// reduce, summed at edge granularity from the ledger counters.
+    pub fn inter_cluster_payload(&self) -> u64 {
+        (0..self.dir.is_cxl_edge.len()).filter(|&e| self.dir.is_cxl_edge[e]).map(|e| self.sim.edge_payload(e)).sum()
+    }
+
+    /// Measured utilization of cluster `c`'s bridge links (peak over its
+    /// incident CXL edges, both directions), time-weighted up to `now` —
+    /// the router's fabric-awareness signal. A cumulative average over the
+    /// run so far: idle stretches decay it toward zero.
+    pub fn bridge_utilization(&self, c: usize, now: SimTime) -> f64 {
+        self.dir.bridge_cxl[c].iter().map(|&e| self.sim.edge_utilization(e, now)).fold(0.0, f64::max)
+    }
+
+    /// Snapshot the communication-tax ledger.
+    pub fn ledger(&self) -> crate::fabric::flow::CommTaxLedger {
+        self.sim.ledger()
+    }
+
+    /// Deterministic flow-event trace (same inputs ⇒ byte-identical text).
+    pub fn trace_render(&self) -> String {
+        self.sim.trace_render()
+    }
 }
 
 #[cfg(test)]
@@ -336,6 +584,69 @@ mod tests {
         for c in 0..sc.cluster_count() {
             let r = sc.transfer_to_tray((c, 0), 0, 4096, 0.0).unwrap();
             assert!(r.latency < 2000.0, "tray access from cluster {c}: {}", r.latency);
+        }
+    }
+
+    #[test]
+    fn sim_lift_matches_analytic_closed_form_when_idle() {
+        // the lifted flow-level supercluster reproduces the analytic
+        // transfer latencies (conversion included) on an idle fabric
+        let mut sc = two_cluster_sc(SuperclusterTopology::MultiClos);
+        let bytes = 1u64 << 20;
+        let intra = sc.transfer_accel((0, 0), (0, 1), bytes, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let inter = sc.transfer_accel((0, 0), (1, 0), bytes, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let tray = sc.transfer_to_tray((0, 0), 0, bytes, 0.0).unwrap();
+        sc.fabric_mut().reset();
+        let scs = sc.into_sim();
+        let cases = [
+            (scs.accel(0, 0), scs.accel(0, 1), intra.latency),
+            (scs.accel(0, 0), scs.accel(1, 0), inter.latency),
+            (scs.accel(0, 0), scs.tray(0), tray.latency),
+        ];
+        for (src, dst, analytic) in cases {
+            let est = scs.estimate(src, dst, bytes).unwrap();
+            assert!((est - analytic).abs() < 1e-6, "estimate {est} vs analytic {analytic}");
+            let mut eng = Engine::new();
+            let done: std::rc::Rc<std::cell::RefCell<Option<FlowDone>>> = Default::default();
+            let d2 = done.clone();
+            scs.submit(&mut eng, src, dst, bytes, TrafficClass::Collective, move |_, d| *d2.borrow_mut() = Some(d))
+                .unwrap();
+            eng.run();
+            let d = done.borrow().expect("flow delivered");
+            assert!((d.latency - analytic).abs() / analytic < 1e-6, "flow {} vs analytic {analytic}", d.latency);
+            assert!(d.contention.abs() < 1e-6, "idle flow pays no tax, got {}", d.contention);
+        }
+    }
+
+    #[test]
+    fn sim_conversion_mirrors_crossing_rules() {
+        let mix = [XLinkCluster::nvl72(), XLinkCluster::ualink(64)];
+        let scs = Supercluster::build_sim(&mix, SuperclusterTopology::MultiClos, 2);
+        let unit = 120.0;
+        assert_eq!(scs.conversion_between(scs.accel(0, 0), scs.accel(0, 5)), 0.0);
+        assert_eq!(scs.conversion_between(scs.accel(0, 0), scs.accel(1, 0)), 2.0 * unit);
+        assert_eq!(scs.conversion_between(scs.accel(1, 3), scs.tray(0)), unit);
+        // the §6.2 HBM conversion cache scales the unit down
+        let cached = Supercluster::build(&mix, SuperclusterTopology::MultiClos, 2).with_bridge_cache(0.5).into_sim();
+        assert_eq!(cached.conversion_between(cached.accel(0, 0), cached.accel(1, 0)), unit);
+    }
+
+    #[test]
+    fn sim_ledger_attributes_inter_cluster_bytes() {
+        for shape in [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly] {
+            let scs = Supercluster::build_sim(&[XLinkCluster::ualink(8), XLinkCluster::ualink(8)], shape, 1);
+            let mut eng = Engine::new();
+            // intra flow: no CXL bytes; crossing flow: payload on every CXL hop
+            scs.submit(&mut eng, scs.accel(0, 0), scs.accel(0, 1), 1000, TrafficClass::Collective, |_, _| {});
+            eng.run();
+            assert_eq!(scs.inter_cluster_payload(), 0, "{shape:?}: intra flow touched CXL edges");
+            scs.submit(&mut eng, scs.accel(0, 0), scs.accel(1, 0), 1000, TrafficClass::Collective, |_, _| {});
+            eng.run();
+            let cxl = scs.inter_cluster_payload();
+            assert!(cxl >= 1000, "{shape:?}: crossing flow must land on CXL edges, got {cxl}");
+            assert_eq!(cxl % 1000, 0, "{shape:?}: whole payload per CXL hop");
         }
     }
 

@@ -19,7 +19,7 @@ pub mod rack;
 pub mod tray;
 
 pub use builder::DatacenterSpec;
-pub use cluster::{ClusterKind, Supercluster, SuperclusterTopology, XLinkCluster};
+pub use cluster::{ClusterKind, Supercluster, SuperclusterSim, SuperclusterTopology, XLinkCluster};
 pub use hierarchy::{Building, Floor, HierarchyLevel, RoutedPath, Row};
 pub use node::{AcceleratorSpec, ComputeNode, CpuSpec, Gb200Module};
 pub use rack::{Rack, RackKind};

@@ -1099,6 +1099,121 @@ pub fn mem_tax() -> Table {
     }
 }
 
+/// Supercluster-tax ledger — the §6.2 CXL-over-XLink supercluster priced
+/// on the contended flow fabric: idle-fabric parity for the hierarchical
+/// all-reduce (closed form vs measured), flat vs hierarchical all-reduce
+/// across every Fig 41 fabric shape and two cluster counts (the
+/// "reduce long-distance data transfers" claim as a measured inter-cluster
+/// byte count), and multi-tenant serving whose KV/activation/sync flows
+/// genuinely share bridge and spine links under a fabric-aware router.
+pub fn supercluster_tax() -> Table {
+    use crate::coordinator::telemetry::Telemetry;
+    use crate::serve::supercluster::{simulate_supercluster, SuperServeConfig};
+    use crate::workload::collectives::{
+        flat_allreduce_contended, hierarchical_allreduce_contended, hierarchical_allreduce_ideal,
+    };
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let shapes = [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly];
+    let bytes = 4u64 << 20; // 4 MiB gradient shard
+    let mk = |shape, clusters: usize| {
+        Supercluster::build_sim(&vec![XLinkCluster::ualink(8); clusters], shape, 2)
+    };
+
+    // (a) idle-fabric parity: the event-driven hierarchical all-reduce
+    // reproduces its closed form on an empty supercluster
+    {
+        let scs = mk(SuperclusterTopology::MultiClos, 2);
+        let ideal = hierarchical_allreduce_ideal(&scs, bytes).expect("routable supercluster");
+        let measured = hierarchical_allreduce_contended(&scs, bytes).expect("hierarchical all-reduce completes");
+        rows.push(vec![
+            "hier all-reduce 2×8 MultiClos, idle".into(),
+            fmt_ns(ideal),
+            fmt_ns(measured),
+            format!("{:+.2}% (must be ~0)", 100.0 * (measured / ideal - 1.0)),
+        ]);
+    }
+
+    // (b) flat vs hierarchical: completion time and measured inter-cluster
+    // (CXL) bytes, per shape × cluster count
+    for shape in shapes {
+        for clusters in [2usize, 4] {
+            let flat_sc = mk(shape, clusters);
+            let flat_t = flat_allreduce_contended(&flat_sc, bytes).expect("flat all-reduce completes");
+            let flat_b = flat_sc.inter_cluster_payload();
+            let hier_sc = mk(shape, clusters);
+            let hier_t = hierarchical_allreduce_contended(&hier_sc, bytes).expect("hier all-reduce completes");
+            let hier_b = hier_sc.inter_cluster_payload();
+            rows.push(vec![
+                format!("{shape:?} ×{clusters} clusters, 4 MiB all-reduce"),
+                format!("flat: {} / {}", fmt_ns(flat_t), crate::benchkit::fmt_bytes(flat_b)),
+                format!("hier: {} / {}", fmt_ns(hier_t), crate::benchkit::fmt_bytes(hier_b)),
+                format!("{:.2}x fewer CXL bytes", flat_b as f64 / hier_b.max(1) as f64),
+            ]);
+        }
+    }
+
+    // (c) multi-tenant serving: relaxed vs flooded arrivals on the same
+    // supercluster — the fabric wait and contention are measured outputs
+    let plat = Platform::composable_cxl();
+    let relaxed_cfg = SuperServeConfig { arrival_mean: 20.0e6, ..Default::default() };
+    let flooded_cfg = SuperServeConfig { arrival_mean: 30_000.0, ..Default::default() };
+    let (relaxed, _, _) = simulate_supercluster(&relaxed_cfg, &plat);
+    let (flooded, ledger, _) = simulate_supercluster(&flooded_cfg, &plat);
+    rows.push(vec![
+        "3-tenant serving p99 (96 reqs, fabric-aware router)".into(),
+        format!("relaxed: {}", fmt_ns(relaxed.latency.percentile(99.0))),
+        format!("flooded: {}", fmt_ns(flooded.latency.percentile(99.0))),
+        format!(
+            "fabric wait mean {} vs {}",
+            fmt_ns(relaxed.fabric_wait.mean()),
+            fmt_ns(flooded.fabric_wait.mean())
+        ),
+    ]);
+    rows.push(vec![
+        "flooded serving ledger".into(),
+        format!(
+            "kv {} / act {}",
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::KvCache)),
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::Activation))
+        ),
+        format!(
+            "sync {} ({} inter-cluster)",
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::Collective)),
+            crate::benchkit::fmt_bytes(flooded.inter_cluster_bytes)
+        ),
+        format!("flow contention p99 {}", fmt_ns(ledger.contention.percentile(99.0))),
+    ]);
+    for l in ledger.hottest(2) {
+        rows.push(vec![
+            format!("hot link #{} ({})", l.edge, l.link),
+            format!("{} -> {}", l.src, l.dst),
+            format!("util {:.0}%", 100.0 * l.utilization),
+            format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+        ]);
+    }
+
+    // (d) the coordinator's stable reporting path
+    let mut tel = Telemetry::new();
+    tel.record_supercluster("sc.fabric", &ledger, flooded.inter_cluster_bytes);
+    rows.push(vec![
+        "telemetry registry".into(),
+        format!("sc.fabric.flows {}", tel.counter("sc.fabric.flows")),
+        format!("sc.fabric.intercluster_bytes {}", tel.counter("sc.fabric.intercluster_bytes")),
+        format!(
+            "util peak {:.0}%, contention p99 {}",
+            100.0 * tel.gauge_value("sc.fabric.util.peak").unwrap_or(0.0),
+            fmt_ns(tel.gauge_value("sc.fabric.contention.p99_ns").unwrap_or(0.0))
+        ),
+    ]);
+
+    Table {
+        title: "Supercluster tax — flat vs hierarchical collectives and multi-tenant serving (CXL-over-XLink)".into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
 /// Prefill/decode disaggregation (§4.3's reconfiguration story): TTFT and
 /// inter-token latency under unified vs disaggregated engine pools.
 pub fn pd_disagg() -> Table {
@@ -1143,6 +1258,7 @@ pub fn all_tables() -> Vec<Table> {
         sec63(),
         comm_tax(),
         mem_tax(),
+        supercluster_tax(),
     ]
 }
 
@@ -1232,6 +1348,27 @@ mod tests {
         assert!(t.rows[3][1].starts_with("kvcache"));
         assert!(t.rows[3][2].starts_with("activation"));
         assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
+    }
+
+    #[test]
+    fn supercluster_tax_parity_and_byte_reduction() {
+        let t = supercluster_tax();
+        // idle-fabric parity: measured hierarchical all-reduce within 1%
+        let delta: f64 = t.rows[0][3].split('%').next().unwrap().parse().unwrap();
+        assert!(delta.abs() < 1.0, "idle parity delta={delta}%");
+        // every shape × cluster-count row: hierarchical moves strictly
+        // fewer inter-cluster bytes (reduction factor > 1)
+        let reduction_rows: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[3].ends_with("fewer CXL bytes")).collect();
+        assert_eq!(reduction_rows.len(), 6, "3 shapes × 2 cluster counts");
+        for row in reduction_rows {
+            let f: f64 = row[3].split('x').next().unwrap().parse().unwrap();
+            assert!(f > 1.0, "{}: reduction {f} must exceed 1", row[0]);
+        }
+        // serving + ledger + telemetry rows are present
+        assert!(t.rows.iter().any(|r| r[0].starts_with("3-tenant serving")));
+        assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
+        assert!(t.rows.iter().any(|r| r[0] == "telemetry registry"));
     }
 
     #[test]

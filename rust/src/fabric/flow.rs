@@ -532,6 +532,19 @@ impl std::fmt::Debug for FabricSim {
     }
 }
 
+/// Lifting an analytic [`super::Fabric`] into the flow-level simulator
+/// moves its topology and per-edge link-spec table wholesale — the table
+/// is built exactly once, whichever substrate prices the traffic first.
+/// Heterogeneous assemblies ([`crate::datacenter::cluster::Supercluster`])
+/// construct one `Fabric` and lift it, instead of re-running their
+/// per-edge spec closure against a second constructor.
+impl From<super::Fabric> for FabricSim {
+    fn from(fabric: super::Fabric) -> Self {
+        let super::Fabric { topo, links, policy, .. } = fabric;
+        FabricSim { net: Rc::new(RefCell::new(FlowNet::new(topo, policy, links))) }
+    }
+}
+
 impl FabricSim {
     /// Homogeneous fabric: every edge of `topo` uses `link`.
     pub fn new(topo: Topology, link: LinkSpec, policy: RoutingPolicy) -> Self {
@@ -539,9 +552,10 @@ impl FabricSim {
     }
 
     /// Heterogeneous fabric: per-edge link specs chosen by `link_for`.
+    /// Delegates to the analytic constructor and lifts the result, so the
+    /// two substrates share one spec-table builder.
     pub fn new_with(topo: Topology, policy: RoutingPolicy, link_for: impl Fn(EdgeId, &Topology) -> LinkSpec) -> Self {
-        let links: Vec<LinkSpec> = (0..topo.edge_count()).map(|e| link_for(e, &topo)).collect();
-        FabricSim { net: Rc::new(RefCell::new(FlowNet::new(topo, policy, links))) }
+        super::Fabric::new_with(topo, policy, link_for).into()
     }
 
     /// Endpoint node ids of the owned topology.
@@ -593,6 +607,27 @@ impl FabricSim {
     /// Payload bytes delivered so far.
     pub fn total_payload(&self) -> u64 {
         self.net.borrow().total_payload
+    }
+
+    /// Payload bytes delivered across one directed edge so far.
+    pub fn edge_payload(&self, e: EdgeId) -> u64 {
+        self.net.borrow().edge_payload[e]
+    }
+
+    /// Time-weighted utilization of one directed edge over `[0, now]`
+    /// (0 before anything has flowed). Normalizing over the caller's clock
+    /// — not the last flow event — lets idle stretches decay the figure,
+    /// so a dispatcher sampling it long after a burst sees a cool link.
+    /// Cheaper than snapshotting the whole [`Self::ledger`] when only a
+    /// handful of edges matter per decision.
+    pub fn edge_utilization(&self, e: EdgeId, now: SimTime) -> f64 {
+        let n = self.net.borrow();
+        let span = n.last_t.max(now);
+        if span <= 0.0 {
+            0.0
+        } else {
+            (n.edge_util_ns[e] / span).min(1.0)
+        }
     }
 
     /// Analytic uncontended latency over the route the current policy would

@@ -14,9 +14,15 @@
 //!
 //! The [`pd`] submodule is the event-driven prefill/decode disaggregation
 //! experiment: its KV handoff (prefill engine → pooled tier → decode
-//! engine) is contended fabric traffic too.
+//! engine) is contended fabric traffic too. The [`supercluster`] submodule
+//! scales the same pipeline out to the §6.2 CXL-over-XLink supercluster:
+//! multiple tenants' KV/activation/state-sync flows share bridge and spine
+//! links, and the router consumes measured per-cluster fabric utilization.
 
 pub mod pd;
+pub mod supercluster;
+
+pub use supercluster::{simulate_supercluster, SuperServeConfig, SuperServeReport};
 
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
 use crate::coordinator::router::{Router, RoutingStrategy};

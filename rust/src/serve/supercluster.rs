@@ -1,0 +1,446 @@
+//! Multi-tenant serving on the contended CXL-over-XLink supercluster
+//! (§6.2's orchestration layer, on the flow-level fabric).
+//!
+//! Several tenants' request streams are batched independently and routed
+//! onto the supercluster's accelerator clusters as one discrete-event
+//! simulation. Every dispatched batch puts real flows on the shared
+//! [`SuperclusterSim`] fabric:
+//!
+//! * a **KV prefetch** ([`TrafficClass::KvCache`]) from the tenant's
+//!   tier-2 memory tray into the serving cluster — crossing a bridge and
+//!   paying the §6.2 protocol conversion;
+//! * an **activation writeback** ([`TrafficClass::Activation`]) from the
+//!   cluster back to the tray;
+//! * periodically, an inter-cluster **state-sync**
+//!   ([`TrafficClass::Collective`]) to the tenant's paired cluster —
+//!   gradient/cache exchange traffic that rides the same bridge and spine
+//!   links as everyone's KV traffic.
+//!
+//! Because all tenants' flows genuinely share the bridges and spines,
+//! their queueing shows up in each other's request latencies, and the
+//! per-link/per-class split lands in the [`CommTaxLedger`]. The router can
+//! *see* that contention: [`RoutingStrategy::FabricAware`] consumes the
+//! measured per-cluster bridge utilization
+//! ([`SuperclusterSim::bridge_utilization`]) fed to it before every
+//! decision, instead of session counts alone.
+//!
+//! Dispatch is work-conserving at supercluster scope: new batches launch
+//! while any cluster is idle, but the fabric-aware router may deliberately
+//! queue a second batch on a cluster whose bridge is cool rather than
+//! touch an idle one behind a saturated uplink. Concurrent batches on one
+//! cluster front different accelerators (rotating assignment) and contend
+//! only on the fabric — accelerator compute is priced per batch.
+//!
+//! Determinism contract: same config ⇒ byte-identical event trace, ledger
+//! and report statistics (`tests/supercluster.rs` locks it down, mirroring
+//! `tests/pd_disagg.rs`).
+
+use crate::coordinator::router::{Router, RoutingStrategy};
+use crate::datacenter::cluster::{Supercluster, SuperclusterSim, SuperclusterTopology, XLinkCluster};
+use crate::fabric::flow::{CommTaxLedger, TrafficClass};
+use crate::sim::{Engine, Summary};
+use crate::workload::inference::{decode_step_time, prefill_time, KvPlacement};
+use crate::workload::{ModelSpec, Platform};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Supercluster serving scenario.
+#[derive(Clone, Debug)]
+pub struct SuperServeConfig {
+    /// Independent tenants sharing the supercluster.
+    pub tenants: usize,
+    /// Requests per tenant.
+    pub requests_per_tenant: usize,
+    /// Mean inter-arrival time (ns) of each tenant's Poisson client.
+    pub arrival_mean: f64,
+    /// Dynamic-batcher size cap / deadline (per tenant).
+    pub max_batch: usize,
+    pub max_wait: f64,
+    /// Supercluster shape: `clusters` XLink clusters of
+    /// `accels_per_cluster` accelerators each, joined by `shape`, with
+    /// `mem_trays` tier-2 trays on the CXL fabric.
+    pub clusters: usize,
+    pub accels_per_cluster: usize,
+    pub shape: SuperclusterTopology,
+    pub mem_trays: usize,
+    /// Model being served.
+    pub model: ModelSpec,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    /// Fraction of each batch's KV shard pulled from the pooled trays.
+    pub remote_frac: f64,
+    /// Every `sync_every`-th batch of a tenant pays an inter-cluster
+    /// state-sync of `sync_bytes` to its paired cluster (0 disables).
+    pub sync_every: usize,
+    pub sync_bytes: u64,
+    pub strategy: RoutingStrategy,
+    pub seed: u64,
+}
+
+impl Default for SuperServeConfig {
+    fn default() -> Self {
+        SuperServeConfig {
+            tenants: 3,
+            requests_per_tenant: 32,
+            arrival_mean: 1.5e6,
+            max_batch: 8,
+            max_wait: 4.0e6,
+            clusters: 3,
+            accels_per_cluster: 8,
+            shape: SuperclusterTopology::MultiClos,
+            mem_trays: 2,
+            model: ModelSpec::tiny_100m(),
+            prompt_tokens: 128,
+            gen_tokens: 32,
+            remote_frac: 0.8,
+            sync_every: 4,
+            sync_bytes: 4 << 20,
+            strategy: RoutingStrategy::FabricAware,
+            seed: 42,
+        }
+    }
+}
+
+/// Measured outcome of one supercluster serving run.
+#[derive(Debug)]
+pub struct SuperServeReport {
+    /// Per-request end-to-end latency (ns), all tenants pooled.
+    pub latency: Summary,
+    /// Per-request queueing (arrival → batch dispatch) latency (ns).
+    pub queueing: Summary,
+    /// Per-batch time waiting on fabric flows (KV + activation + sync).
+    pub fabric_wait: Summary,
+    /// Per-tenant end-to-end latency summaries.
+    pub per_tenant_latency: Vec<Summary>,
+    pub throughput_rps: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub makespan: f64,
+    /// Payload bytes the run moved over inter-cluster (CXL) links.
+    pub inter_cluster_bytes: u64,
+}
+
+/// One formed batch, tagged with its tenant.
+struct SBatch {
+    tenant: usize,
+    /// Per-tenant batch ordinal (drives the sync cadence).
+    ordinal: usize,
+    ids: Vec<u64>,
+    formed_at: f64,
+}
+
+/// Fixed inputs of one run.
+struct ScEnv {
+    scs: SuperclusterSim,
+    model: ModelSpec,
+    platform: Platform,
+    prompt: u64,
+    gen: u64,
+    remote_frac: f64,
+    sync_every: usize,
+    sync_bytes: u64,
+    clusters: usize,
+    accels_per_cluster: usize,
+    /// Per-tenant request arrival times.
+    arrivals: Vec<Vec<f64>>,
+    total_requests: usize,
+}
+
+/// Mutable state of one run.
+struct ScRun {
+    batches: Vec<SBatch>,
+    router: Router,
+    waiting: VecDeque<usize>,
+    // per-batch bookkeeping, indexed like `batches`
+    start: Vec<f64>,
+    compute: Vec<f64>,
+    pending_flows: Vec<u8>,
+    fabric_end: Vec<f64>,
+    /// Launches per cluster (rotates the fronting accelerator).
+    launched: Vec<usize>,
+    latency: Summary,
+    queueing: Summary,
+    fabric_wait: Summary,
+    per_tenant: Vec<Summary>,
+    batch_sizes: Summary,
+    last_finish: f64,
+    trace: Vec<String>,
+}
+
+/// Run the multi-tenant supercluster serving simulation. Returns the
+/// report, the fabric's communication-tax ledger, and the deterministic
+/// event trace (scheduler decisions + flow events).
+pub fn simulate_supercluster(cfg: &SuperServeConfig, platform: &Platform) -> (SuperServeReport, CommTaxLedger, String) {
+    assert!(cfg.clusters > 0 && cfg.tenants > 0 && cfg.mem_trays > 0);
+    let scs = Supercluster::build_sim(
+        &vec![XLinkCluster::ualink(cfg.accels_per_cluster); cfg.clusters],
+        cfg.shape,
+        cfg.mem_trays,
+    );
+    // per-tenant arrivals + batches, via the shared serving front-end
+    let mut arrivals = Vec::with_capacity(cfg.tenants);
+    let mut batches: Vec<SBatch> = Vec::new();
+    for t in 0..cfg.tenants {
+        let tenant_cfg = super::ServeConfig {
+            requests: cfg.requests_per_tenant,
+            arrival_mean: cfg.arrival_mean,
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            clusters: cfg.clusters,
+            model: cfg.model,
+            prompt_tokens: cfg.prompt_tokens,
+            gen_tokens: cfg.gen_tokens,
+            kv: KvPlacement::Local,
+            seed: cfg.seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        };
+        let (ar, bs) = super::form_batches(&tenant_cfg);
+        arrivals.push(ar);
+        for (ordinal, b) in bs.into_iter().enumerate() {
+            batches.push(SBatch { tenant: t, ordinal, ids: b.ids, formed_at: b.formed_at });
+        }
+    }
+    // deterministic dispatch order across tenants
+    batches.sort_by(|a, b| {
+        a.formed_at
+            .partial_cmp(&b.formed_at)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.tenant.cmp(&b.tenant))
+            .then(a.ordinal.cmp(&b.ordinal))
+    });
+    let n_batches = batches.len();
+    let env = Rc::new(ScEnv {
+        scs: scs.clone(),
+        model: cfg.model,
+        platform: platform.clone(),
+        prompt: cfg.prompt_tokens,
+        gen: cfg.gen_tokens,
+        remote_frac: cfg.remote_frac.clamp(0.0, 1.0),
+        sync_every: cfg.sync_every,
+        sync_bytes: cfg.sync_bytes,
+        clusters: cfg.clusters,
+        accels_per_cluster: cfg.accels_per_cluster,
+        arrivals,
+        total_requests: cfg.tenants * cfg.requests_per_tenant,
+    });
+    let st = Rc::new(RefCell::new(ScRun {
+        batches,
+        router: Router::new(cfg.clusters, cfg.strategy),
+        waiting: VecDeque::new(),
+        start: vec![0.0; n_batches],
+        compute: vec![0.0; n_batches],
+        pending_flows: vec![0; n_batches],
+        fabric_end: vec![0.0; n_batches],
+        launched: vec![0; cfg.clusters],
+        latency: Summary::new(),
+        queueing: Summary::new(),
+        fabric_wait: Summary::new(),
+        per_tenant: (0..cfg.tenants).map(|_| Summary::new()).collect(),
+        batch_sizes: Summary::new(),
+        last_finish: 0.0,
+        trace: Vec::new(),
+    }));
+    let mut eng = Engine::new();
+    for k in 0..n_batches {
+        let at = st.borrow().batches[k].formed_at;
+        let (st2, env2) = (st.clone(), env.clone());
+        eng.schedule_at(at, move |e| {
+            st2.borrow_mut().waiting.push_back(k);
+            dispatch_waiting(&st2, &env2, e);
+        });
+    }
+    eng.run();
+    let s = st.borrow();
+    let makespan = s.last_finish;
+    let report = SuperServeReport {
+        latency: s.latency.clone(),
+        queueing: s.queueing.clone(),
+        fabric_wait: s.fabric_wait.clone(),
+        per_tenant_latency: s.per_tenant.clone(),
+        throughput_rps: env.total_requests as f64 / (makespan / crate::SEC),
+        batches: s.batch_sizes.count() as u64,
+        mean_batch: s.batch_sizes.mean(),
+        makespan,
+        inter_cluster_bytes: scs.inter_cluster_payload(),
+    };
+    let mut trace = s.trace.join("\n");
+    trace.push_str("\n---- flows ----\n");
+    trace.push_str(&scs.trace_render());
+    (report, scs.ledger(), trace)
+}
+
+/// Start waiting batches on idle clusters (work-conserving), feeding the
+/// router the measured bridge utilization before every decision.
+fn dispatch_waiting(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine) {
+    loop {
+        let launched = {
+            let mut s = st.borrow_mut();
+            if s.waiting.is_empty() || !s.router.load().iter().any(|&l| l == 0) {
+                None
+            } else {
+                let k = s.waiting.pop_front().expect("non-empty waiting queue");
+                let now = eng.now();
+                let utils: Vec<f64> = (0..env.clusters).map(|c| env.scs.bridge_utilization(c, now)).collect();
+                s.router.observe_utilization(&utils);
+                let tenant = s.batches[k].tenant;
+                let c = s.router.route(tenant as u64);
+                s.trace.push(format!(
+                    "{t:.3} dispatch tenant={tenant} batch={ord} cluster={c}",
+                    t = eng.now(),
+                    ord = s.batches[k].ordinal
+                ));
+                Some((k, c))
+            }
+        };
+        match launched {
+            Some((k, c)) => launch_batch(st, env, eng, c, k),
+            None => break,
+        }
+    }
+}
+
+/// Dispatch batch `k` on cluster `c`: price its compute (KV local once
+/// fetched — the flows below charge the remote movement exactly once),
+/// then issue its KV prefetch, activation writeback and, on the sync
+/// cadence, the inter-cluster state exchange as contending flows.
+fn launch_batch(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine, c: usize, k: usize) {
+    let now = eng.now();
+    let (tenant, kv_bytes, act_bytes, sync_bytes, front) = {
+        let mut s = st.borrow_mut();
+        let tenant = s.batches[k].tenant;
+        let b = s.batches[k].ids.len() as u64;
+        let prefill = prefill_time(&env.model, env.prompt * b, &env.platform);
+        let ctx_len = env.prompt + env.gen / 2;
+        let decode = decode_step_time(&env.model, b, ctx_len, KvPlacement::Local, &env.platform) * env.gen as f64;
+        let kv_bytes =
+            ((env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b) as f64 * env.remote_frac) as u64;
+        let act_bytes = env.model.activation_bytes_per_token() * b;
+        let sync_bytes = if env.sync_every > 0 && env.clusters > 1 && s.batches[k].ordinal % env.sync_every == 0 {
+            env.sync_bytes
+        } else {
+            0
+        };
+        let front = env.scs.accel(c, s.launched[c] % env.accels_per_cluster);
+        s.launched[c] += 1;
+        s.start[k] = now;
+        s.compute[k] = prefill + decode;
+        s.fabric_end[k] = now;
+        s.pending_flows[k] = 1 + u8::from(kv_bytes > 0) + u8::from(sync_bytes > 0);
+        (tenant, kv_bytes, act_bytes, sync_bytes, front)
+    };
+    let tray = env.scs.tray(tenant % env.scs.tray_count());
+    let mut submit = |eng: &mut Engine, src, dst, bytes, class| {
+        let (st2, env2) = (st.clone(), env.clone());
+        let ok = env.scs.submit(eng, src, dst, bytes, class, move |e, d| {
+            flow_done(&st2, &env2, e, c, k, d.arrival);
+        });
+        if ok.is_none() {
+            flow_done(st, env, eng, c, k, now);
+        }
+    };
+    if kv_bytes > 0 {
+        submit(eng, tray, front, kv_bytes, TrafficClass::KvCache);
+    }
+    submit(eng, front, tray, act_bytes, TrafficClass::Activation);
+    if sync_bytes > 0 {
+        // tenant's paired cluster (offset in 1..clusters, so it is never
+        // the serving cluster): collective state exchange across bridges
+        let offset = 1 + tenant % (env.clusters - 1);
+        let pair = env.scs.leader((c + offset) % env.clusters);
+        submit(eng, front, pair, sync_bytes, TrafficClass::Collective);
+    }
+}
+
+/// One of batch `k`'s flows delivered. When the last lands, account the
+/// batch and free its cluster once compute also finishes.
+fn flow_done(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine, c: usize, k: usize, arrival: f64) {
+    let finish = {
+        let mut s = st.borrow_mut();
+        if arrival > s.fabric_end[k] {
+            s.fabric_end[k] = arrival;
+        }
+        s.pending_flows[k] -= 1;
+        if s.pending_flows[k] > 0 {
+            return;
+        }
+        let start = s.start[k];
+        let fabric_ns = (s.fabric_end[k] - start).max(0.0);
+        let finish = s.fabric_end[k] + s.compute[k];
+        let tenant = s.batches[k].tenant;
+        let ids = s.batches[k].ids.clone();
+        for &id in &ids {
+            let at = env.arrivals[tenant][id as usize];
+            s.latency.add(finish - at);
+            s.queueing.add(start - at);
+            s.per_tenant[tenant].add(finish - at);
+        }
+        s.batch_sizes.add(ids.len() as f64);
+        s.fabric_wait.add(fabric_ns);
+        if finish > s.last_finish {
+            s.last_finish = finish;
+        }
+        let ord = s.batches[k].ordinal;
+        s.trace.push(format!("{finish:.3} batch-done tenant={tenant} batch={ord} cluster={c}"));
+        finish
+    };
+    let (st2, env2) = (st.clone(), env.clone());
+    eng.schedule_at(finish, move |e| {
+        st2.borrow_mut().router.complete(c);
+        dispatch_waiting(&st2, &env2, e);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tenants_requests_served() {
+        let cfg = SuperServeConfig::default();
+        let (r, ledger, trace) = simulate_supercluster(&cfg, &Platform::composable_cxl());
+        assert_eq!(r.latency.count(), cfg.tenants * cfg.requests_per_tenant);
+        for (t, s) in r.per_tenant_latency.iter().enumerate() {
+            assert_eq!(s.count(), cfg.requests_per_tenant, "tenant {t}");
+        }
+        assert!(r.throughput_rps > 0.0 && r.mean_batch >= 1.0);
+        assert!(ledger.flows > 0);
+        assert!(trace.contains("dispatch tenant=") && trace.contains("batch-done"));
+    }
+
+    #[test]
+    fn tenant_flows_share_bridges_and_are_attributed() {
+        let cfg = SuperServeConfig::default();
+        let (r, ledger, _) = simulate_supercluster(&cfg, &Platform::composable_cxl());
+        // every class of the multi-tenant mix lands on the ledger
+        assert!(ledger.class_bytes(TrafficClass::KvCache) > 0);
+        assert!(ledger.class_bytes(TrafficClass::Activation) > 0);
+        assert!(ledger.class_bytes(TrafficClass::Collective) > 0);
+        // KV prefetches and syncs cross the CXL fabric
+        assert!(r.inter_cluster_bytes > 0, "tray + sync traffic must cross bridges");
+        assert!(r.fabric_wait.count() > 0 && r.fabric_wait.mean() > 0.0);
+    }
+
+    #[test]
+    fn flooded_tenants_pay_measured_contention() {
+        let cfg = SuperServeConfig { arrival_mean: 20_000.0, ..Default::default() };
+        let (_, ledger, _) = simulate_supercluster(&cfg, &Platform::composable_cxl());
+        assert!(
+            ledger.contention.max() > 0.0,
+            "near-simultaneous tenant batches must queue on shared bridge/spine links"
+        );
+    }
+
+    #[test]
+    fn strategies_all_complete() {
+        for strategy in [
+            RoutingStrategy::RoundRobin,
+            RoutingStrategy::LeastLoaded,
+            RoutingStrategy::KvAffinity,
+            RoutingStrategy::FabricAware,
+        ] {
+            let cfg = SuperServeConfig { strategy, requests_per_tenant: 12, ..Default::default() };
+            let (r, _, _) = simulate_supercluster(&cfg, &Platform::composable_cxl());
+            assert_eq!(r.latency.count(), cfg.tenants * 12, "{strategy:?}");
+        }
+    }
+}

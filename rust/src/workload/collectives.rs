@@ -10,17 +10,51 @@
 //!
 //! Two pricing modes share one surface:
 //!
-//! * **analytic** (`ring_allreduce`, `all_to_all`, …) — closed-form step
-//!   counts × per-step path time; fast, idle-fabric assumption;
+//! * **analytic** (`ring_allreduce`, `all_to_all`, `hierarchical_allreduce`,
+//!   …) — closed-form step counts × per-step path time; fast, idle-fabric
+//!   assumption;
 //! * **flow-level** (`ring_allreduce_flows`, `all_to_all_flows`,
-//!   `tree_broadcast_flows`) — every step is a real overlapping flow on a
-//!   [`FabricSim`], so steps of *this* collective, and anything else
-//!   sharing the fabric, contend for link bandwidth. The spread between
-//!   the two modes is the communication tax.
+//!   `tree_broadcast_flows`, `hierarchical_allreduce_flows`) — every step
+//!   is a real overlapping flow on a [`FabricSim`], so steps of *this*
+//!   collective, and anything else sharing the fabric, contend for link
+//!   bandwidth. The spread between the two modes is the communication tax.
+//!
+//! The flow-level machinery is generic over a [`FlowLane`]: a plain
+//! [`FabricSim`], or a [`SuperclusterSim`] whose cluster-crossing flows
+//! additionally pay the §6.2 XLink↔CXL bridge protocol conversion.
+//!
+//! ## Hierarchical collectives (§6.2, Fig 40/41)
+//!
+//! The paper's supercluster argument is that a two-level design "reduces
+//! long-distance data transfers": gradient sums should ride the fat intra-
+//! cluster XLink fabric, with only one exchange stream per cluster crossing
+//! the CXL bridges. [`hierarchical_allreduce_flows`] executes exactly that
+//! as three event-chained phases on the contended supercluster fabric:
+//!
+//! 1. **intra-cluster ring all-reduce** (the reduce-scatter + all-gather
+//!    ring decomposition) over each cluster's XLink Clos, all clusters in
+//!    parallel — after this every rank, the gateway leader included, holds
+//!    its cluster's partial sum;
+//! 2. **inter-cluster exchange**: the `C` cluster leaders run a ring
+//!    all-reduce whose every step crosses two bridges (and pays the
+//!    protocol conversion) — the *only* phase that puts bytes on the CXL
+//!    fabric, `2(C−1)/C × bytes` per bridge link instead of the flat
+//!    ring's `2(n−1)/n × bytes` per crossing;
+//! 3. **intra-cluster binomial re-broadcast** of the global sum from each
+//!    leader, with per-node sequential sends so the idle-fabric completion
+//!    is exactly `⌈log₂ n_c⌉` chained steps.
+//!
+//! [`hierarchical_allreduce`] is the matching closed form (phase A + B + C
+//! with `max` across clusters at the barriers); on an idle supercluster
+//! fabric the flow-level run reproduces it exactly — the same parity
+//! contract PR 1 established for flat collectives and PR 2 for the memory
+//! hierarchy — and [`SuperclusterSim::inter_cluster_payload`] turns the
+//! byte-reduction claim into a measured ledger output.
 
 use super::Platform;
+use crate::datacenter::cluster::SuperclusterSim;
 use crate::datacenter::hierarchy::CommPath;
-use crate::fabric::flow::{FabricSim, TrafficClass, Transfer};
+use crate::fabric::flow::{FabricSim, FlowDone, TrafficClass, Transfer};
 use crate::fabric::topology::NodeId;
 use crate::sim::Engine;
 use std::cell::RefCell;
@@ -174,6 +208,51 @@ pub fn collective_time(op: Collective, n: usize, bytes: u64, path: &impl CommCos
 
 // ----- event-driven collectives on the flow-level fabric -----------------
 
+/// Submission surface the event-driven collectives run over: a plain
+/// [`FabricSim`] (every flow is pure fabric traffic) or a
+/// [`SuperclusterSim`] lane whose cluster-crossing flows also pay the
+/// bridge protocol conversion. Keeping the ring/broadcast machinery
+/// generic means the flat and hierarchical variants price their steps on
+/// the same substrate they contend on.
+pub trait FlowLane: Clone + 'static {
+    /// Submit one collective flow; `done` fires at delivery (conversion
+    /// included, where the lane charges one). `false` when unroutable.
+    fn submit_flow(
+        &self,
+        eng: &mut Engine,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        done: Box<dyn FnOnce(&mut Engine, FlowDone)>,
+    ) -> bool;
+}
+
+impl FlowLane for FabricSim {
+    fn submit_flow(
+        &self,
+        eng: &mut Engine,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        done: Box<dyn FnOnce(&mut Engine, FlowDone)>,
+    ) -> bool {
+        self.submit_with(eng, Transfer::new(src, dst, bytes, TrafficClass::Collective), done).is_some()
+    }
+}
+
+impl FlowLane for SuperclusterSim {
+    fn submit_flow(
+        &self,
+        eng: &mut Engine,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        done: Box<dyn FnOnce(&mut Engine, FlowDone)>,
+    ) -> bool {
+        self.submit(eng, src, dst, bytes, TrafficClass::Collective, done).is_some()
+    }
+}
+
 struct CollectiveProgress {
     /// Flows not yet delivered.
     remaining: u64,
@@ -181,6 +260,9 @@ struct CollectiveProgress {
     finish: f64,
     /// A submission failed to route — the collective cannot complete.
     stalled: bool,
+    /// Fired once when the last flow lands (with the finish time) — the
+    /// hierarchical phases chain through this.
+    on_done: Option<Box<dyn FnOnce(&mut Engine, f64)>>,
 }
 
 /// Progress handle for a collective issued as flows on a [`FabricSim`].
@@ -192,7 +274,8 @@ pub struct CollectiveRun {
 
 impl CollectiveRun {
     fn new(flows: u64, now: f64) -> (CollectiveRun, Rc<RefCell<CollectiveProgress>>) {
-        let prog = Rc::new(RefCell::new(CollectiveProgress { remaining: flows, finish: now, stalled: false }));
+        let prog =
+            Rc::new(RefCell::new(CollectiveProgress { remaining: flows, finish: now, stalled: false, on_done: None }));
         (CollectiveRun { prog: prog.clone() }, prog)
     }
 
@@ -214,11 +297,21 @@ impl CollectiveRun {
     }
 }
 
-fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, arrival: f64) {
-    let mut p = prog.borrow_mut();
-    p.remaining = p.remaining.saturating_sub(1);
-    if arrival > p.finish {
-        p.finish = arrival;
+fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, eng: &mut Engine, arrival: f64) {
+    let cont = {
+        let mut p = prog.borrow_mut();
+        p.remaining = p.remaining.saturating_sub(1);
+        if arrival > p.finish {
+            p.finish = arrival;
+        }
+        if p.remaining == 0 && !p.stalled {
+            p.on_done.take().map(|f| (f, p.finish))
+        } else {
+            None
+        }
+    };
+    if let Some((f, finish)) = cont {
+        f(eng, finish);
     }
 }
 
@@ -226,8 +319,8 @@ fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, arrival: f64) {
 /// `chain` has reached rank `chain + round`; forward it one hop. The next
 /// hop launches from the arrival callback, so ring dependencies are real
 /// events and every in-flight chunk competes for link bandwidth.
-fn ring_chain_step(
-    sim: FabricSim,
+fn ring_chain_step<L: FlowLane>(
+    lane: L,
     eng: &mut Engine,
     ranks: Rc<Vec<NodeId>>,
     chunk: u64,
@@ -239,25 +332,31 @@ fn ring_chain_step(
     let n = ranks.len();
     let src = ranks[(chain + round as usize) % n];
     let dst = ranks[(chain + round as usize + 1) % n];
-    let simc = sim.clone();
+    let lanec = lane.clone();
     let prog_cb = prog.clone();
-    let submitted = sim.submit_with(eng, Transfer::new(src, dst, chunk, TrafficClass::Collective), move |e, d| {
-        note_arrival(&prog_cb, d.arrival);
-        let next = round + 1;
-        if next < total_rounds {
-            ring_chain_step(simc, e, ranks, chunk, chain, next, total_rounds, prog_cb);
-        }
-    });
-    if submitted.is_none() {
+    let submitted = lane.submit_flow(
+        eng,
+        src,
+        dst,
+        chunk,
+        Box::new(move |e, d| {
+            note_arrival(&prog_cb, e, d.arrival);
+            let next = round + 1;
+            if next < total_rounds {
+                ring_chain_step(lanec, e, ranks, chunk, chain, next, total_rounds, prog_cb);
+            }
+        }),
+    );
+    if !submitted {
         prog.borrow_mut().stalled = true;
     }
 }
 
-/// Ring All-Reduce as 2(n-1) rounds of n overlapping flows on the fabric
-/// simulator. All n round-0 chunks depart immediately; each later send is
-/// triggered by the arrival of its predecessor chunk (real ring
+/// Ring All-Reduce as 2(n-1) rounds of n overlapping flows on any
+/// [`FlowLane`]. All n round-0 chunks depart immediately; each later send
+/// is triggered by the arrival of its predecessor chunk (real ring
 /// dependency). Run the engine, then read the handle.
-pub fn ring_allreduce_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+pub fn ring_allreduce_flows_on<L: FlowLane>(lane: &L, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
     let n = ranks.len();
     if n <= 1 {
         let (run, _) = CollectiveRun::new(0, eng.now());
@@ -270,9 +369,15 @@ pub fn ring_allreduce_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId],
     for chain in 0..n {
         // per-chain running count: the remaining counter already tracks all
         // chains, so note_arrival on the shared progress is enough
-        ring_chain_step(sim.clone(), eng, ranks.clone(), chunk, chain, 0, total_rounds, prog.clone());
+        ring_chain_step(lane.clone(), eng, ranks.clone(), chunk, chain, 0, total_rounds, prog.clone());
     }
     run
+}
+
+/// Ring All-Reduce on a plain fabric simulator (see
+/// [`ring_allreduce_flows_on`] for the lane-generic form).
+pub fn ring_allreduce_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+    ring_allreduce_flows_on(sim, eng, ranks, bytes)
 }
 
 /// All-to-All (MoE dispatch) as n(n-1) simultaneous flows of `bytes/n`.
@@ -295,7 +400,7 @@ pub fn all_to_all_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], byt
             let submitted = sim.submit_with(
                 eng,
                 Transfer::new(ranks[i], ranks[j], chunk, TrafficClass::Collective),
-                move |_, d| note_arrival(&p, d.arrival),
+                move |e, d| note_arrival(&p, e, d.arrival),
             );
             if submitted.is_none() {
                 prog.borrow_mut().stalled = true;
@@ -328,7 +433,7 @@ fn bcast_span(
         eng,
         Transfer::new(ranks[lo], ranks[mid], bytes, TrafficClass::Collective),
         move |e, d| {
-            note_arrival(&prog_cb, d.arrival);
+            note_arrival(&prog_cb, e, d.arrival);
             bcast_span(simc, e, ranks_cb, bytes, mid, hi, prog_cb);
         },
     );
@@ -348,6 +453,296 @@ pub fn tree_broadcast_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId],
     let (run, prog) = CollectiveRun::new((n - 1) as u64, eng.now());
     bcast_span(sim.clone(), eng, Rc::new(ranks.to_vec()), bytes, 0, n, prog);
     run
+}
+
+// ----- hierarchical collectives on the supercluster (§6.2) ---------------
+
+/// A resolved inter-cluster route plus the per-crossing XLink↔CXL bridge
+/// protocol-conversion overhead (§6.2, HBM conversion cache applied) — the
+/// closed-form cost of one hierarchical-exchange step, usable anywhere a
+/// [`CommCost`] is.
+#[derive(Clone, Debug)]
+pub struct BridgedCost {
+    /// Analytic per-hop route (XLink hops + CXL bridge/spine hops).
+    pub path: CommPath,
+    /// Total conversion overhead the step pays (ns).
+    pub conversion: f64,
+}
+
+impl BridgedCost {
+    /// Resolve the route between two accelerators of a supercluster and
+    /// attach the conversion charge its flows would pay.
+    pub fn resolve(scs: &SuperclusterSim, src: NodeId, dst: NodeId) -> Option<BridgedCost> {
+        let rp = crate::datacenter::hierarchy::RoutedPath::resolve_sim(
+            scs.fabric_sim(),
+            src,
+            dst,
+            crate::fabric::netstack::SoftwareStack::hw_mediated(),
+        )?;
+        Some(BridgedCost { path: rp.path, conversion: scs.conversion_between(src, dst) })
+    }
+}
+
+impl CommCost for BridgedCost {
+    fn time(&self, bytes: u64) -> f64 {
+        self.path.time(bytes) + self.conversion
+    }
+    fn base_latency(&self) -> f64 {
+        self.path.base_latency() + self.conversion
+    }
+}
+
+/// Closed-form hierarchical All-Reduce over `cluster_sizes` clusters:
+/// intra-cluster ring all-reduce (the reduce-scatter + all-gather ring
+/// decomposition, slowest cluster gates the barrier), a leaders' ring
+/// exchange across the bridges, then a binomial re-broadcast inside each
+/// cluster. `intra` prices one intra-cluster hop pair, `inter` one
+/// bridge-crossing leader step (use [`BridgedCost`] so the conversion is
+/// included).
+pub fn hierarchical_allreduce(
+    cluster_sizes: &[usize],
+    bytes: u64,
+    intra: &impl CommCost,
+    inter: &impl CommCost,
+) -> f64 {
+    let clusters = cluster_sizes.len();
+    if clusters == 0 {
+        return 0.0;
+    }
+    if clusters == 1 {
+        return ring_allreduce(cluster_sizes[0], bytes, intra);
+    }
+    let reduce = cluster_sizes.iter().map(|&n| ring_allreduce(n, bytes, intra)).fold(0.0, f64::max);
+    let exchange = ring_allreduce(clusters, bytes, inter);
+    let bcast = cluster_sizes.iter().map(|&n| tree_broadcast(n, bytes, intra)).fold(0.0, f64::max);
+    reduce + exchange + bcast
+}
+
+/// Binomial broadcast with per-node *sequential* sends: the holder ships
+/// the buffer to its span's midpoint, and only continues into its own half
+/// once that send has delivered (a node never has two sends in flight), so
+/// the idle-fabric completion is exactly `⌈log₂ n⌉` chained steps — the
+/// [`tree_broadcast`] closed form. The receiver's half fans out
+/// concurrently, as in the real algorithm.
+fn bcast_chain<L: FlowLane>(
+    lane: L,
+    eng: &mut Engine,
+    ranks: Rc<Vec<NodeId>>,
+    bytes: u64,
+    lo: usize,
+    hi: usize,
+    prog: Rc<RefCell<CollectiveProgress>>,
+) {
+    let len = hi - lo;
+    if len <= 1 {
+        return;
+    }
+    let mid = lo + len.div_ceil(2);
+    let lanec = lane.clone();
+    let ranks_cb = ranks.clone();
+    let prog_cb = prog.clone();
+    let submitted = lane.submit_flow(
+        eng,
+        ranks[lo],
+        ranks[mid],
+        bytes,
+        Box::new(move |e, d| {
+            note_arrival(&prog_cb, e, d.arrival);
+            bcast_chain(lanec.clone(), e, ranks_cb.clone(), bytes, mid, hi, prog_cb.clone());
+            bcast_chain(lanec, e, ranks_cb, bytes, lo, mid, prog_cb);
+        }),
+    );
+    if !submitted {
+        prog.borrow_mut().stalled = true;
+    }
+}
+
+fn phase_progress(
+    flows: u64,
+    now: f64,
+    on_done: impl FnOnce(&mut Engine, f64) + 'static,
+) -> Rc<RefCell<CollectiveProgress>> {
+    Rc::new(RefCell::new(CollectiveProgress {
+        remaining: flows,
+        finish: now,
+        stalled: false,
+        on_done: Some(Box::new(on_done)),
+    }))
+}
+
+/// Shared context of one hierarchical all-reduce run.
+struct HierCtx {
+    scs: SuperclusterSim,
+    bytes: u64,
+    /// Outer progress: one logical unit, closed when phase C's barrier
+    /// clears (or left open forever on a stall, like any other run).
+    oprog: Rc<RefCell<CollectiveProgress>>,
+}
+
+/// Phase B: the cluster leaders' ring all-reduce across the bridges.
+fn hier_phase_exchange(ctx: Rc<HierCtx>, eng: &mut Engine) {
+    let clusters = ctx.scs.cluster_count();
+    if clusters <= 1 {
+        // degenerate supercluster: the intra all-reduce already left every
+        // rank with the global sum — no exchange, no re-broadcast
+        let now = eng.now();
+        note_arrival(&ctx.oprog, eng, now);
+        return;
+    }
+    let leaders: Vec<NodeId> = (0..clusters).map(|c| ctx.scs.leader(c)).collect();
+    let chunk = ctx.bytes.div_ceil(clusters as u64);
+    let rounds = (2 * (clusters - 1)) as u32;
+    let ctx2 = ctx.clone();
+    let prog = phase_progress(clusters as u64 * rounds as u64, eng.now(), move |e, _| hier_phase_broadcast(ctx2, e));
+    let ranks = Rc::new(leaders);
+    for chain in 0..clusters {
+        ring_chain_step(ctx.scs.clone(), eng, ranks.clone(), chunk, chain, 0, rounds, prog.clone());
+    }
+}
+
+/// Phase C: each leader re-broadcasts the global sum inside its cluster.
+fn hier_phase_broadcast(ctx: Rc<HierCtx>, eng: &mut Engine) {
+    let clusters = ctx.scs.cluster_count();
+    let total: u64 = (0..clusters).map(|c| (ctx.scs.cluster_ranks(c).len() as u64).saturating_sub(1)).sum();
+    if total == 0 {
+        let now = eng.now();
+        note_arrival(&ctx.oprog, eng, now);
+        return;
+    }
+    let ctx2 = ctx.clone();
+    let prog = phase_progress(total, eng.now(), move |e, finish| note_arrival(&ctx2.oprog, e, finish));
+    for c in 0..clusters {
+        let ranks = Rc::new(ctx.scs.cluster_ranks(c).to_vec());
+        let n = ranks.len();
+        if n <= 1 {
+            continue;
+        }
+        bcast_chain(ctx.scs.clone(), eng, ranks, ctx.bytes, 0, n, prog.clone());
+    }
+}
+
+/// Event-driven hierarchical All-Reduce over every accelerator of a
+/// supercluster (module docs describe the three phases). Phase barriers
+/// are real events: the leaders' exchange departs when the slowest
+/// cluster's intra all-reduce lands, broadcasts when the exchange lands.
+/// Run the engine, then read the handle; on an idle fabric the finish time
+/// equals [`hierarchical_allreduce`] priced over the resolved routes.
+pub fn hierarchical_allreduce_flows(scs: &SuperclusterSim, eng: &mut Engine, bytes: u64) -> CollectiveRun {
+    let clusters = scs.cluster_count();
+    let now = eng.now();
+    if clusters == 0 {
+        let (run, _) = CollectiveRun::new(0, now);
+        return run;
+    }
+    let (run, oprog) = CollectiveRun::new(1, now);
+    let ctx = Rc::new(HierCtx { scs: scs.clone(), bytes, oprog });
+    // Phase A: per-cluster intra ring all-reduce, barrier into phase B.
+    let barrier = Rc::new(RefCell::new(clusters));
+    for c in 0..clusters {
+        let ranks = Rc::new(scs.cluster_ranks(c).to_vec());
+        let n = ranks.len();
+        if n <= 1 {
+            *barrier.borrow_mut() -= 1;
+            continue;
+        }
+        let chunk = bytes.div_ceil(n as u64);
+        let rounds = (2 * (n - 1)) as u32;
+        let (b2, ctx2) = (barrier.clone(), ctx.clone());
+        let prog = phase_progress(n as u64 * rounds as u64, now, move |e, _| {
+            let all_done = {
+                let mut b = b2.borrow_mut();
+                *b -= 1;
+                *b == 0
+            };
+            if all_done {
+                hier_phase_exchange(ctx2, e);
+            }
+        });
+        for chain in 0..n {
+            ring_chain_step(scs.clone(), eng, ranks.clone(), chunk, chain, 0, rounds, prog.clone());
+        }
+    }
+    // all clusters degenerate (single-rank): straight to the exchange
+    if *barrier.borrow() == 0 {
+        hier_phase_exchange(ctx, eng);
+    }
+    run
+}
+
+/// The flat baseline on the same substrate: one ring All-Reduce over every
+/// accelerator in cluster order, each cluster-boundary step crossing the
+/// bridges (and paying conversion). The contrast with
+/// [`hierarchical_allreduce_flows`] — completion time and, via
+/// [`SuperclusterSim::inter_cluster_payload`], CXL bytes — is the §6.2
+/// supercluster-tax measurement.
+pub fn flat_allreduce_flows(scs: &SuperclusterSim, eng: &mut Engine, bytes: u64) -> CollectiveRun {
+    let ranks: Vec<NodeId> =
+        (0..scs.cluster_count()).flat_map(|c| scs.cluster_ranks(c).to_vec()).collect();
+    ring_allreduce_flows_on(scs, eng, &ranks, bytes)
+}
+
+/// Run one hierarchical All-Reduce to completion on a fresh engine.
+pub fn hierarchical_allreduce_contended(scs: &SuperclusterSim, bytes: u64) -> Option<f64> {
+    let mut eng = Engine::new();
+    let run = hierarchical_allreduce_flows(scs, &mut eng, bytes);
+    eng.run();
+    run.finish_time()
+}
+
+/// Run one flat (single-ring) All-Reduce to completion on a fresh engine.
+pub fn flat_allreduce_contended(scs: &SuperclusterSim, bytes: u64) -> Option<f64> {
+    let mut eng = Engine::new();
+    let run = flat_allreduce_flows(scs, &mut eng, bytes);
+    eng.run();
+    run.finish_time()
+}
+
+/// The hierarchical closed form priced over the supercluster's *resolved*
+/// routes (idle estimates + conversion), phase by phase with per-chain
+/// sums in the exchange — exactly what the flow-level run reproduces on an
+/// idle, shape-symmetric fabric. `None` when any step is unroutable.
+pub fn hierarchical_allreduce_ideal(scs: &SuperclusterSim, bytes: u64) -> Option<f64> {
+    let clusters = scs.cluster_count();
+    if clusters == 0 {
+        return Some(0.0);
+    }
+    // Phase A: slowest cluster's intra ring all-reduce.
+    let mut reduce: f64 = 0.0;
+    for c in 0..clusters {
+        let n = scs.cluster_ranks(c).len();
+        if n <= 1 {
+            continue;
+        }
+        let step = scs.estimate(scs.accel(c, 0), scs.accel(c, 1), bytes.div_ceil(n as u64))?;
+        reduce = reduce.max(2.0 * (n - 1) as f64 * step);
+    }
+    if clusters == 1 {
+        return Some(reduce);
+    }
+    // Phase B: leaders' ring — per-chain sums over the consecutive-pair
+    // step costs (equal for symmetric shapes; max chain otherwise).
+    let mut exchange: f64 = 0.0;
+    let chunk = bytes.div_ceil(clusters as u64);
+    let mut step = Vec::with_capacity(clusters);
+    for c in 0..clusters {
+        step.push(scs.estimate(scs.leader(c), scs.leader((c + 1) % clusters), chunk)?);
+    }
+    let rounds = 2 * (clusters - 1);
+    for chain in 0..clusters {
+        let total: f64 = (0..rounds).map(|k| step[(chain + k) % clusters]).sum();
+        exchange = exchange.max(total);
+    }
+    // Phase C: slowest cluster's binomial re-broadcast.
+    let mut bcast: f64 = 0.0;
+    for c in 0..clusters {
+        let n = scs.cluster_ranks(c).len();
+        if n <= 1 {
+            continue;
+        }
+        let step = scs.estimate(scs.accel(c, 0), scs.accel(c, 1), bytes)?;
+        bcast = bcast.max((n as f64).log2().ceil() * step);
+    }
+    Some(reduce + exchange + bcast)
 }
 
 /// Convenience: run one ring All-Reduce to completion on a fresh engine.
@@ -595,6 +990,71 @@ mod tests {
         assert!(t > 0.0);
         let equivalent = CommPath { links: rp.path.links.clone(), stack: rp.path.stack.clone() };
         assert_eq!(t, ring_allreduce(8, 1 << 24, &equivalent));
+    }
+
+    fn small_sc(
+        clusters: usize,
+        per: usize,
+        shape: crate::datacenter::cluster::SuperclusterTopology,
+    ) -> SuperclusterSim {
+        use crate::datacenter::cluster::{Supercluster, XLinkCluster};
+        Supercluster::build_sim(&vec![XLinkCluster::ualink(per); clusters], shape, 1)
+    }
+
+    #[test]
+    fn hierarchical_matches_closed_form_on_idle_supercluster() {
+        use crate::datacenter::cluster::SuperclusterTopology;
+        // shape-symmetric supercluster: the flow-level hierarchical
+        // all-reduce must reproduce the closed form (idle-parity contract)
+        let scs = small_sc(2, 8, SuperclusterTopology::MultiClos);
+        let bytes = 1u64 << 22;
+        let ideal = hierarchical_allreduce_ideal(&scs, bytes).expect("routable");
+        let measured = hierarchical_allreduce_contended(&scs, bytes).expect("completes");
+        let rel = (measured - ideal).abs() / ideal;
+        assert!(rel < 1e-3, "measured={measured} ideal={ideal} rel={rel}");
+        // and the generic CommCost form agrees with the route-resolved one
+        let intra = BridgedCost::resolve(&scs, scs.accel(0, 0), scs.accel(0, 1)).unwrap();
+        let inter = BridgedCost::resolve(&scs, scs.leader(0), scs.leader(1)).unwrap();
+        let analytic = hierarchical_allreduce(&[8, 8], bytes, &intra, &inter);
+        let rel2 = (analytic - ideal).abs() / ideal;
+        assert!(rel2 < 1e-6, "analytic={analytic} ideal={ideal}");
+    }
+
+    #[test]
+    fn hierarchical_moves_fewer_inter_cluster_bytes_than_flat() {
+        use crate::datacenter::cluster::SuperclusterTopology;
+        let bytes = 1u64 << 20;
+        for shape in [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly] {
+            let flat_sc = small_sc(2, 8, shape);
+            flat_allreduce_contended(&flat_sc, bytes).expect("flat completes");
+            let hier_sc = small_sc(2, 8, shape);
+            hierarchical_allreduce_contended(&hier_sc, bytes).expect("hier completes");
+            let (fb, hb) = (flat_sc.inter_cluster_payload(), hier_sc.inter_cluster_payload());
+            assert!(hb < fb, "{shape:?}: hier {hb} must move strictly fewer CXL bytes than flat {fb}");
+            assert!(hb > 0, "{shape:?}: the exchange phase must cross the bridges");
+        }
+    }
+
+    #[test]
+    fn hierarchical_single_cluster_degenerates_to_ring() {
+        use crate::datacenter::cluster::SuperclusterTopology;
+        let scs = small_sc(1, 8, SuperclusterTopology::MultiClos);
+        let bytes = 1u64 << 20;
+        let t = hierarchical_allreduce_contended(&scs, bytes).expect("completes");
+        let ideal = hierarchical_allreduce_ideal(&scs, bytes).unwrap();
+        assert!((t - ideal).abs() / ideal < 1e-3, "t={t} ideal={ideal}");
+        assert_eq!(scs.inter_cluster_payload(), 0, "single cluster never crosses a bridge");
+    }
+
+    #[test]
+    fn bridged_cost_includes_conversion() {
+        use crate::datacenter::cluster::SuperclusterTopology;
+        let scs = small_sc(2, 4, SuperclusterTopology::DragonFly);
+        let inter = BridgedCost::resolve(&scs, scs.leader(0), scs.leader(1)).unwrap();
+        assert_eq!(inter.conversion, 240.0, "two uncached conversions at 120 ns each");
+        assert!((inter.time(4096) - scs.estimate(scs.leader(0), scs.leader(1), 4096).unwrap()).abs() < 1e-9);
+        let intra = BridgedCost::resolve(&scs, scs.accel(0, 0), scs.accel(0, 1)).unwrap();
+        assert_eq!(intra.conversion, 0.0);
     }
 
     #[test]

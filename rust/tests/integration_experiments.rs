@@ -3,7 +3,7 @@
 //!
 //! TRIAGE (seed-failure audit): the tests here fall in two groups.
 //! * **Structural** (`table1_matches_spec_counts`, `table2_latency_cliff_present`,
-//!   `all_seventeen_experiments_run`) — assert spec constants and that every
+//!   `all_eighteen_experiments_run`) — assert spec constants and that every
 //!   driver produces rows; deterministic, kept active.
 //! * **Calibration bands** (`fig31_all_ratios_in_band`,
 //!   `fig33_fig34_fig35_phase_ratios`, `fig36_fig37_mpi_ratios`) — pin
@@ -86,9 +86,9 @@ fn table2_latency_cliff_present() {
 }
 
 #[test]
-fn all_seventeen_experiments_run() {
+fn all_eighteen_experiments_run() {
     let tables = experiments::all_tables();
-    assert_eq!(tables.len(), 17);
+    assert_eq!(tables.len(), 18);
     for t in &tables {
         assert!(!t.rows.is_empty(), "{}", t.title);
     }

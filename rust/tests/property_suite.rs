@@ -338,6 +338,108 @@ fn property_kv_pages_resident_in_exactly_one_tier() {
 }
 
 #[test]
+fn property_supercluster_bridge_byte_conservation() {
+    // For any mix of intra-cluster, cluster-crossing and tray transfers on
+    // the flow-level supercluster:
+    // (a) the ledger's delivered payload equals the submitted bytes;
+    // (b) every bridge is a pure transit node — payload in == payload out;
+    // (c) for a crossing-only workload (cluster 0 → cluster 1), the bytes
+    //     entering the source bridge from the XLink side equal the bytes
+    //     leaving it on the CXL side, and symmetrically at the destination
+    //     bridge — the XLink↔CXL conversion loses nothing.
+    use commtax::datacenter::cluster::{Supercluster, SuperclusterSim, SuperclusterTopology, XLinkCluster};
+    use commtax::fabric::TrafficClass;
+    use commtax::sim::Engine;
+
+    // per-bridge (xlink_in, cxl_in, xlink_out, cxl_out) payload totals
+    fn bridge_io(scs: &SuperclusterSim) -> Vec<(u64, u64, u64, u64)> {
+        let ledger = scs.ledger();
+        let mut io = vec![(0u64, 0u64, 0u64, 0u64); scs.bridges().len()];
+        for l in &ledger.per_link {
+            let cxl = scs.is_cxl_edge(l.edge);
+            if let Some(b) = scs.bridges().iter().position(|&n| n == l.dst) {
+                if cxl {
+                    io[b].1 += l.payload;
+                } else {
+                    io[b].0 += l.payload;
+                }
+            }
+            if let Some(b) = scs.bridges().iter().position(|&n| n == l.src) {
+                if cxl {
+                    io[b].3 += l.payload;
+                } else {
+                    io[b].2 += l.payload;
+                }
+            }
+        }
+        io
+    }
+
+    check(
+        24,
+        |rng| {
+            let shape_i = rng.index(3);
+            let clusters = 2 + rng.index(2); // 2..=3
+            let per = 4 + rng.index(5); // 4..=8 accels per cluster
+            let transfers: Vec<(usize, usize, usize, usize, u64, bool)> = (0..14)
+                .map(|_| {
+                    let (sc, si) = (rng.index(clusters), rng.index(per));
+                    let (dc, di) = (rng.index(clusters), rng.index(per));
+                    (sc, si, dc, di, 1 + rng.below(1 << 16), rng.chance(0.25))
+                })
+                .collect();
+            (shape_i, clusters, per, transfers)
+        },
+        |(shape_i, clusters, per, transfers)| {
+            let shape =
+                [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly]
+                    [*shape_i];
+            let build = || Supercluster::build_sim(&vec![XLinkCluster::ualink(*per); *clusters], shape, 1);
+
+            // (a) + (b): mixed workload
+            let scs = build();
+            let mut eng = Engine::new();
+            let mut submitted = 0u64;
+            for &(sc, si, dc, di, bytes, to_tray) in transfers {
+                let src = scs.accel(sc, si);
+                let dst = if to_tray { scs.tray(0) } else { scs.accel(dc, di) };
+                if src == dst {
+                    continue;
+                }
+                if scs.submit(&mut eng, src, dst, bytes, TrafficClass::KvCache, |_, _| {}).is_none() {
+                    return false; // connected supercluster must route everything
+                }
+                submitted += bytes;
+            }
+            eng.run();
+            if scs.ledger().total_payload != submitted {
+                return false;
+            }
+            for (xi, ci, xo, co) in bridge_io(&scs) {
+                if xi + ci != xo + co {
+                    return false; // a bridge sourced or sank bytes
+                }
+            }
+
+            // (c): crossing-only workload, cluster 0 -> cluster 1
+            let scs = build();
+            let mut eng = Engine::new();
+            let mut crossing = 0u64;
+            for &(_, si, _, di, bytes, _) in transfers {
+                scs.submit(&mut eng, scs.accel(0, si), scs.accel(1, di), bytes, TrafficClass::Collective, |_, _| {});
+                crossing += bytes;
+            }
+            eng.run();
+            let io = bridge_io(&scs);
+            let (xi0, _, _, co0) = io[0];
+            let (_, ci1, xo1, _) = io[1];
+            xi0 == crossing && co0 == crossing && ci1 == crossing && xo1 == crossing
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
 fn property_supercluster_transfer_total_order() {
     // inter-cluster latency >= intra-cluster latency for the same payload
     use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};

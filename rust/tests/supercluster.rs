@@ -1,0 +1,102 @@
+//! Integration: the CXL-over-XLink supercluster on the contended flow
+//! fabric — mirroring the contracts of `tests/flow_fabric.rs` and
+//! `tests/pd_disagg.rs`:
+//!
+//! * **golden trace** — same config ⇒ byte-identical scheduler + flow
+//!   trace, ledger and report statistics for the multi-tenant serving sim;
+//! * **parity** — the hierarchical all-reduce reproduces its closed form
+//!   exactly on an idle supercluster fabric;
+//! * **byte reduction** — under contention, the ledger shows the
+//!   hierarchical all-reduce moving strictly fewer inter-cluster (CXL)
+//!   bytes than the flat ring, for two cluster counts and all three Fig 41
+//!   fabric shapes.
+
+use commtax::datacenter::cluster::{Supercluster, SuperclusterSim, SuperclusterTopology, XLinkCluster};
+use commtax::fabric::TrafficClass;
+use commtax::serve::supercluster::{simulate_supercluster, SuperServeConfig};
+use commtax::workload::collectives::{
+    flat_allreduce_contended, hierarchical_allreduce_contended, hierarchical_allreduce_ideal,
+};
+use commtax::workload::Platform;
+
+const SHAPES: [SuperclusterTopology; 3] =
+    [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly];
+
+fn sc(shape: SuperclusterTopology, clusters: usize, per: usize) -> SuperclusterSim {
+    Supercluster::build_sim(&vec![XLinkCluster::ualink(per); clusters], shape, 1)
+}
+
+#[test]
+fn serving_golden_trace_same_seed_byte_identical() {
+    let cfg = SuperServeConfig { requests_per_tenant: 16, ..Default::default() };
+    let p = Platform::composable_cxl();
+    let (ra, la, ta) = simulate_supercluster(&cfg, &p);
+    let (rb, lb, tb) = simulate_supercluster(&cfg, &p);
+    assert_eq!(ta, tb, "trace must be byte-identical");
+    assert!(!ta.is_empty());
+    assert_eq!(la.total_payload, lb.total_payload);
+    assert_eq!(la.flows, lb.flows);
+    assert_eq!(ra.latency.sum().to_bits(), rb.latency.sum().to_bits(), "latency must be bit-identical");
+    assert_eq!(ra.queueing.sum().to_bits(), rb.queueing.sum().to_bits());
+    assert_eq!(ra.fabric_wait.sum().to_bits(), rb.fabric_wait.sum().to_bits());
+    assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+    assert_eq!(ra.inter_cluster_bytes, rb.inter_cluster_bytes);
+    assert_eq!(ra.batches, rb.batches);
+}
+
+#[test]
+fn serving_different_seeds_produce_different_traces() {
+    let p = Platform::composable_cxl();
+    let a = simulate_supercluster(&SuperServeConfig { requests_per_tenant: 12, seed: 7, ..Default::default() }, &p).2;
+    let b = simulate_supercluster(&SuperServeConfig { requests_per_tenant: 12, seed: 8, ..Default::default() }, &p).2;
+    assert_ne!(a, b);
+}
+
+#[test]
+fn hierarchical_idle_parity_all_shapes() {
+    // closed-form parity on an idle, shape-symmetric supercluster
+    for shape in SHAPES {
+        let scs = sc(shape, 2, 8);
+        let bytes = 4u64 << 20;
+        let ideal = hierarchical_allreduce_ideal(&scs, bytes).expect("routable");
+        let measured = hierarchical_allreduce_contended(&scs, bytes).expect("completes");
+        let rel = (measured - ideal).abs() / ideal;
+        assert!(rel < 1e-3, "{shape:?}: measured={measured} ideal={ideal} rel={rel}");
+    }
+}
+
+#[test]
+fn hierarchical_moves_strictly_fewer_cxl_bytes_all_shapes_and_counts() {
+    // the acceptance contract: for ≥2 cluster counts and all 3 shapes,
+    // the ledger-measured inter-cluster byte count is strictly smaller
+    // hierarchically, while both variants complete under contention
+    let bytes = 1u64 << 20;
+    for shape in SHAPES {
+        for clusters in [2usize, 4] {
+            let flat_sc = sc(shape, clusters, 8);
+            let flat_t = flat_allreduce_contended(&flat_sc, bytes).expect("flat completes");
+            let flat_b = flat_sc.inter_cluster_payload();
+            let hier_sc = sc(shape, clusters, 8);
+            let hier_t = hierarchical_allreduce_contended(&hier_sc, bytes).expect("hier completes");
+            let hier_b = hier_sc.inter_cluster_payload();
+            assert!(flat_t > 0.0 && hier_t > 0.0);
+            assert!(
+                hier_b < flat_b,
+                "{shape:?} ×{clusters}: hier {hier_b} must be strictly below flat {flat_b}"
+            );
+            assert!(hier_b > 0, "{shape:?} ×{clusters}: the exchange phase must cross bridges");
+        }
+    }
+}
+
+#[test]
+fn serving_sync_traffic_lands_on_cxl_ledger() {
+    let cfg = SuperServeConfig { requests_per_tenant: 16, ..Default::default() };
+    let p = Platform::composable_cxl();
+    let (r, ledger, trace) = simulate_supercluster(&cfg, &p);
+    assert_eq!(r.latency.count(), cfg.tenants * cfg.requests_per_tenant);
+    assert!(ledger.class_bytes(TrafficClass::KvCache) > 0);
+    assert!(ledger.class_bytes(TrafficClass::Collective) > 0, "state syncs must appear");
+    assert!(r.inter_cluster_bytes > 0);
+    assert!(trace.contains("---- flows ----"));
+}
