@@ -122,4 +122,51 @@ fn main() {
             l.peak_flows
         );
     }
+
+    // ----- the whole step as events: analytic vs measured vs colocated ---
+    // Above, only the DP all-reduce was flow-level. Below, the *entire*
+    // 3D-parallel step runs event-driven on a CXL-over-XLink supercluster
+    // (TP rings inside each cluster's XLink Clos, 1F1B stage handoffs as
+    // p2p flows, DP reduce-scatter/all-gather across the CXL bridges):
+    // on an idle fabric it reproduces the closed form (<0.1%); colocated
+    // with serving tenants, the measured comm fraction is the step's true
+    // communication tax — and the tenants pay too.
+    use commtax::datacenter::cluster::SuperclusterTopology;
+    use commtax::serve::colocate::{simulate_colocate, ColocateConfig};
+    use commtax::workload::training::{simulate_step_flows, FlowTrainOptions, TrainMapping, TrainingConfig};
+    println!("\n--- event-driven hybrid 2x2x2 step (tiny-100m) on the supercluster ---");
+    let plan = ParallelismPlan { dp: 2, tp: 2, pp: 2, ep: 1, microbatches: 4 };
+    let cfg = TrainingConfig {
+        model: ModelSpec::tiny_100m(),
+        plan,
+        global_batch_tokens: 8192,
+        compute_efficiency: 0.55,
+    };
+    let map = TrainMapping::build(plan, SuperclusterTopology::MultiClos, 1);
+    let ideal = map.ideal_step(&cfg, &accel).expect("routable mapping");
+    let parity = simulate_step_flows(&map, &cfg, &accel, FlowTrainOptions::parity()).expect("step completes");
+    println!(
+        "analytic step {} (comm {:.1}%)  measured idle {} ({:+.3}% — the parity contract)",
+        commtax::benchkit::fmt_ns(ideal.total()),
+        100.0 * ideal.comm_fraction(),
+        commtax::benchkit::fmt_ns(parity.step.total()),
+        100.0 * (parity.step.total() / ideal.total() - 1.0),
+    );
+    let coloc = simulate_colocate(&ColocateConfig { train: cfg, accel: accel.clone(), ..Default::default() },
+        &commtax::workload::Platform::composable_cxl())
+    .expect("plan fits the serving fabric");
+    let first = &coloc.train_colocated[0];
+    println!(
+        "alone: step {}   colocated with 2 serving tenants: step {} ({:.2}x), comm {:.1}% -> {:.1}%",
+        commtax::benchkit::fmt_ns(coloc.train_alone.makespan),
+        commtax::benchkit::fmt_ns(first.makespan),
+        coloc.step_inflation(),
+        100.0 * coloc.train_alone.step.comm_fraction(),
+        100.0 * first.step.comm_fraction(),
+    );
+    println!(
+        "serving pays back: p99 {} alone -> {} colocated",
+        commtax::benchkit::fmt_ns(coloc.serve_alone.latency.percentile(99.0)),
+        commtax::benchkit::fmt_ns(coloc.serve_colocated.latency.percentile(99.0)),
+    );
 }

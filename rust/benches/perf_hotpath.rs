@@ -115,7 +115,9 @@ fn main() {
     });
     println!("  -> {:.2} M requests/s", 100_000.0 / (r.median() / 1e9) / 1e6);
 
-    // 4. full experiment-suite regeneration cost
-    let (_t, ns) = commtax::benchkit::time_once("all 18 experiment tables", commtax::experiments::all_tables);
+    // 4. full experiment-suite regeneration cost (count derived from the
+    // registry so this label can never go stale)
+    let label = format!("all {} experiment tables", commtax::experiments::registry().len());
+    let (_t, ns) = commtax::benchkit::time_once(&label, commtax::experiments::all_tables);
     println!("  -> full paper regeneration in {}", fmt_ns(ns));
 }

@@ -44,4 +44,40 @@ fn main() {
         format!("{:.0}%", 100.0 * ledger.peak_utilization),
         fmt_ns(ledger.contention.percentile(99.0)),
     ]);
+
+    // contended view: the same §3.4 mixes as full event-driven steps on
+    // the supercluster — analytic comm fraction vs measured, idle and
+    // colocated with flooded serving tenants (the train-tax tentpole)
+    contended_view();
+}
+
+fn contended_view() {
+    use commtax::datacenter::cluster::SuperclusterTopology;
+    use commtax::datacenter::node::AcceleratorSpec;
+    use commtax::serve::colocate::{simulate_colocate, ColocateConfig};
+    use commtax::workload::training::{sec34_flow_mixes, simulate_step_flows, FlowTrainOptions, TrainMapping};
+    use commtax::workload::Platform;
+
+    let accel = AcceleratorSpec::b200();
+    let plat = Platform::composable_cxl();
+    let mixes = sec34_flow_mixes();
+    table_header(
+        "sec34 contended view — event-driven steps on the supercluster",
+        &["mix", "analytic comm", "measured idle", "measured colocated", "step inflation"],
+    );
+    for (name, train, clusters, accels) in mixes {
+        let map = TrainMapping::build(train.plan, SuperclusterTopology::MultiClos, 1);
+        let analytic = map.ideal_step(&train, &accel).expect("routable");
+        let idle = simulate_step_flows(&map, &train, &accel, FlowTrainOptions::full()).expect("completes");
+        let cfg = ColocateConfig::flooded(train, clusters, accels);
+        let r = simulate_colocate(&cfg, &plat).expect("plan fits");
+        let first = &r.train_colocated[0];
+        table_row(&[
+            name.to_string(),
+            format!("{:.1}%", 100.0 * analytic.comm_fraction()),
+            format!("{:.1}%", 100.0 * idle.step.comm_fraction()),
+            format!("{:.1}%", 100.0 * first.step.comm_fraction()),
+            format!("{:.2}x", r.step_inflation()),
+        ]);
+    }
 }

@@ -1,0 +1,13 @@
+//! Bench target for the train-tax experiment: the event-driven
+//! 3D-parallel step on the contended supercluster — idle parity, DP-ring
+//! self-contention, backward overlap, and the three §3.4 mixes trained
+//! alone vs colocated with serving tenants (see the experiment driver for
+//! the full row set), plus a timing row for the whole driver.
+
+use commtax::benchkit::time_once;
+
+fn main() {
+    let (table, ns) = time_once("train-tax", commtax::experiments::train_tax);
+    table.print();
+    println!("\ndriver wall time: {}", commtax::benchkit::fmt_ns(ns));
+}

@@ -38,36 +38,11 @@ pub fn parse_args(argv: &[String]) -> Args {
     Args { cmd, flags }
 }
 
-/// Experiment ids accepted by `report --exp`.
-pub const EXPERIMENTS: [&str; 20] = [
-    "fig21", "fig22", "fig29", "fig31", "fig33", "fig34", "fig35", "fig36", "fig37", "fig41", "table1", "table2",
-    "table3", "sec34", "sec63", "ablations", "pd-disagg", "comm-tax", "mem-tax", "supercluster-tax",
-];
-
-fn experiment_table(id: &str) -> Option<experiments::Table> {
-    Some(match id {
-        "fig21" => experiments::fig21(),
-        "fig22" => experiments::fig22(),
-        "fig29" => experiments::fig29(),
-        "fig31" => experiments::fig31(),
-        "fig33" => experiments::fig33(),
-        "fig34" => experiments::fig34(),
-        "fig35" => experiments::fig35(),
-        "fig36" => experiments::fig36(),
-        "fig37" => experiments::fig37(),
-        "fig41" => experiments::fig41(),
-        "table1" => experiments::table1(),
-        "table2" => experiments::table2(),
-        "table3" => experiments::table3(),
-        "sec34" => experiments::sec34(),
-        "sec63" => experiments::sec63(),
-        "ablations" => experiments::ablations(),
-        "pd-disagg" => experiments::pd_disagg(),
-        "comm-tax" => experiments::comm_tax(),
-        "mem-tax" => experiments::mem_tax(),
-        "supercluster-tax" => experiments::supercluster_tax(),
-        _ => return None,
-    })
+/// Experiment ids accepted by `report --exp`, derived from the experiment
+/// registry — the CLI can never drift from `experiments::all_tables()`
+/// because both read [`experiments::registry`].
+pub fn experiment_ids() -> Vec<&'static str> {
+    experiments::registry().into_iter().map(|(id, _)| id).collect()
 }
 
 fn run_simulate(flags: &HashMap<String, String>) -> i32 {
@@ -205,7 +180,7 @@ pub fn run(argv: &[String]) -> i32 {
         "report" => {
             let md = args.flags.get("format").map(String::as_str) == Some("md");
             if let Some(id) = args.flags.get("exp") {
-                match experiment_table(id) {
+                match experiments::by_id(id) {
                     Some(t) => {
                         if md {
                             println!("{}", t.markdown());
@@ -215,7 +190,7 @@ pub fn run(argv: &[String]) -> i32 {
                         0
                     }
                     None => {
-                        eprintln!("unknown experiment '{id}'; try: {}", EXPERIMENTS.join(", "));
+                        eprintln!("unknown experiment '{id}'; try: {}", experiment_ids().join(", "));
                         2
                     }
                 }
@@ -234,7 +209,7 @@ pub fn run(argv: &[String]) -> i32 {
         "topo" => run_topo(&args.flags),
         "serve" => run_serve(&args.flags),
         "list" => {
-            for e in EXPERIMENTS {
+            for e in experiment_ids() {
                 println!("{e}");
             }
             0
@@ -289,6 +264,17 @@ mod tests {
     #[test]
     fn unknown_experiment_nonzero() {
         assert_eq!(run(&argv("report --exp fig99")), 2);
+    }
+
+    #[test]
+    fn experiment_ids_derive_from_registry() {
+        // both views read experiments::registry(), so they cannot desync;
+        // resolvability of every id is covered by the integration suite's
+        // consistency test (which runs each driver exactly once)
+        let ids = experiment_ids();
+        assert_eq!(ids.len(), crate::experiments::registry().len());
+        assert!(ids.contains(&"train-tax"));
+        assert!(ids.contains(&"comm-tax"));
     }
 
     #[test]

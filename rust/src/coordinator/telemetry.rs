@@ -7,6 +7,7 @@
 
 use crate::fabric::flow::{CommTaxLedger, TrafficClass};
 use crate::mem::hierarchy::HierStats;
+use crate::workload::training::{FlowStepReport, TrainAxis};
 use std::collections::BTreeMap;
 
 /// Counters and gauges, keyed by name. BTreeMap keeps report output stable.
@@ -86,6 +87,27 @@ impl Telemetry {
         self.incr(&format!("{prefix}.fetch_bytes"), stats.fetch_bytes);
         self.gauge(&format!("{prefix}.contention.mean_ns"), stats.contention.mean());
         self.gauge_max(&format!("{prefix}.contention.p99_ns"), stats.contention.percentile(99.0));
+    }
+
+    /// Fold one event-driven training step into the registry under
+    /// `prefix` (e.g. `"train"`): per-axis (DP/TP/PP/EP) fabric payload as
+    /// counters — the byte attribution the `train-tax` table reports —
+    /// plus the measured step decomposition as gauges. Counters accumulate
+    /// across steps; peak gauges keep their high-water mark.
+    pub fn record_training(&mut self, prefix: &str, report: &FlowStepReport) {
+        self.incr(&format!("{prefix}.steps"), 1);
+        for axis in TrainAxis::ALL {
+            let bytes = report.axis_bytes(axis);
+            if bytes > 0 {
+                self.incr(&format!("{prefix}.payload.{}", axis.name()), bytes);
+            }
+        }
+        self.gauge(&format!("{prefix}.step.makespan_ns"), report.makespan);
+        self.gauge_max(&format!("{prefix}.step.makespan_peak_ns"), report.makespan);
+        self.gauge(&format!("{prefix}.step.comm_fraction"), report.step.comm_fraction());
+        self.gauge_max(&format!("{prefix}.step.comm_fraction_peak"), report.step.comm_fraction());
+        self.gauge(&format!("{prefix}.step.bubble_fraction"), report.step.bubble / report.step.total());
+        self.gauge(&format!("{prefix}.step.overlap_saved_ns"), report.overlap_saved);
     }
 
     /// Read a counter (0 when absent).
@@ -200,6 +222,39 @@ mod tests {
         assert_eq!(t.counter("mem.hier.fetches"), 1);
         assert_eq!(t.counter("mem.hier.spill_bytes"), 4096);
         assert!(t.report().contains("mem.hier.spills"));
+    }
+
+    #[test]
+    fn training_step_folds_into_registry() {
+        use crate::datacenter::cluster::SuperclusterTopology;
+        use crate::datacenter::node::AcceleratorSpec;
+        use crate::workload::training::{
+            simulate_step_flows, FlowTrainOptions, ParallelismPlan, TrainMapping, TrainingConfig,
+        };
+        use crate::workload::ModelSpec;
+        let plan = ParallelismPlan { dp: 2, tp: 2, pp: 2, ep: 1, microbatches: 2 };
+        let cfg = TrainingConfig {
+            model: ModelSpec::tiny_100m(),
+            plan,
+            global_batch_tokens: 4096,
+            compute_efficiency: 0.55,
+        };
+        let map = TrainMapping::build(plan, SuperclusterTopology::MultiClos, 1);
+        let r = simulate_step_flows(&map, &cfg, &AcceleratorSpec::b200(), FlowTrainOptions::full())
+            .expect("step completes");
+        let mut t = Telemetry::new();
+        t.record_training("train", &r);
+        assert_eq!(t.counter("train.steps"), 1);
+        assert_eq!(t.counter("train.payload.dp"), r.axis_bytes(TrainAxis::Dp));
+        assert_eq!(t.counter("train.payload.tp"), r.axis_bytes(TrainAxis::Tp));
+        assert_eq!(t.counter("train.payload.pp"), r.axis_bytes(TrainAxis::Pp));
+        assert_eq!(t.counter("train.payload.ep"), 0, "dense model moves no EP bytes");
+        assert!(t.gauge_value("train.step.comm_fraction").unwrap() > 0.0);
+        // a second, slower step accumulates counters and raises the peak
+        t.record_training("train", &r);
+        assert_eq!(t.counter("train.steps"), 2);
+        assert_eq!(t.counter("train.payload.dp"), 2 * r.axis_bytes(TrainAxis::Dp));
+        assert!(t.report().contains("train.step.makespan_peak_ns"));
     }
 
     #[test]

@@ -1238,28 +1238,198 @@ pub fn pd_disagg() -> Table {
     }
 }
 
-/// All tables in paper order.
-pub fn all_tables() -> Vec<Table> {
+/// Train-tax ledger — the §3.4 parallelism tax as a *measured* output of
+/// the event-driven 3D-parallel trainer on the contended supercluster:
+/// idle-fabric parity against the analytic `simulate_step` closed form,
+/// DP-ring self-contention and backward-overlap ablations, the three §3.4
+/// parallelism mixes trained alone vs colocated with serving tenants
+/// (step-time and comm-fraction inflation), the serving side's p99
+/// inflation, and the per-axis byte attribution through telemetry.
+pub fn train_tax() -> Table {
+    use crate::coordinator::telemetry::Telemetry;
+    use crate::serve::colocate::{simulate_colocate, ColocateConfig};
+    use crate::workload::training::{
+        hybrid_flow_mix, sec34_flow_mixes, simulate_step_flows, FlowTrainOptions, TrainAxis, TrainMapping,
+    };
+
+    let accel = AcceleratorSpec::b200();
+    let plat = Platform::composable_cxl();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    let mixes = sec34_flow_mixes();
+    let hybrid_cfg = hybrid_flow_mix().1;
+    let hybrid = hybrid_cfg.plan;
+    let shape = crate::datacenter::cluster::SuperclusterTopology::MultiClos;
+
+    // (a) idle-fabric parity: the event-driven step reproduces the closed
+    // form (same StepReport) on an empty supercluster
+    {
+        let map = TrainMapping::build(hybrid, shape, 1);
+        let ideal = map.ideal_step(&hybrid_cfg, &accel).expect("routable mapping");
+        let rep = simulate_step_flows(&map, &hybrid_cfg, &accel, FlowTrainOptions::parity()).expect("step completes");
+        rows.push(vec![
+            "hybrid 2x2x2 step, idle fabric".into(),
+            fmt_ns(ideal.total()),
+            fmt_ns(rep.step.total()),
+            format!("{:+.2}% (must be ~0)", 100.0 * (rep.step.total() / ideal.total() - 1.0)),
+        ]);
+
+        // (b) what the closed form cannot see even alone: every (stage,
+        // tp-rank) position runs its own DP ring, and the rings queue on
+        // the shared bridges (the parity run doubles as the 1-ring
+        // reference — the sim is deterministic)
+        let map2 = TrainMapping::build(hybrid, shape, 1);
+        let full = simulate_step_flows(&map2, &hybrid_cfg, &accel, FlowTrainOptions::full()).expect("completes");
+        rows.push(vec![
+            "DP gradient sync: 1 ring (closed form) vs 4 rings".into(),
+            format!("1 ring: {}", fmt_ns(rep.step.dp_comm)),
+            format!("4 rings: {}", fmt_ns(full.step.dp_comm)),
+            format!("{:.2}x bridge self-contention", full.step.dp_comm / rep.step.dp_comm),
+        ]);
+        // (c) overlapping the sync with the pipeline drain claws time back
+        let map3 = TrainMapping::build(hybrid, shape, 1);
+        let over = simulate_step_flows(&map3, &hybrid_cfg, &accel, FlowTrainOptions::overlapped()).expect("completes");
+        rows.push(vec![
+            "DP sync overlap (on_done continuations)".into(),
+            format!("serial: {}", fmt_ns(full.makespan)),
+            format!("overlapped: {}", fmt_ns(over.makespan)),
+            format!(
+                "{} hidden under drain ({:.0}% of sync)",
+                fmt_ns(over.overlap_saved),
+                100.0 * over.overlap_efficiency()
+            ),
+        ]);
+    }
+
+    // (d) the three §3.4 parallelism mixes, trained alone vs colocated
+    // with two flooded serving tenants on the same bridges and spines
+    let mut hybrid_report = None;
+    for (name, train, clusters, accels_per_cluster) in mixes {
+        let cfg = ColocateConfig::flooded(train, clusters, accels_per_cluster);
+        let r = simulate_colocate(&cfg, &plat).expect("plan fits the serving fabric");
+        let scs = crate::serve::supercluster::build_scs(&cfg.serve);
+        let analytic = TrainMapping::onto(&scs, cfg.train.plan)
+            .and_then(|m| m.ideal_step(&cfg.train, &accel))
+            .expect("routable mapping");
+        let first = &r.train_colocated[0];
+        rows.push(vec![
+            format!("{name} ({} GPUs)", cfg.train.plan.gpus()),
+            format!("analytic: {} / comm {:.1}%", fmt_ns(analytic.total()), 100.0 * analytic.comm_fraction()),
+            format!(
+                "colocated: {} / comm {:.1}%",
+                fmt_ns(first.makespan),
+                100.0 * first.step.comm_fraction()
+            ),
+            format!("{:.2}x step inflation vs alone", r.step_inflation()),
+        ]);
+        if name.starts_with("hybrid") {
+            hybrid_report = Some(r);
+        }
+    }
+
+    // (e) the serving side of the same hybrid colocation, plus ledger +
+    // telemetry attribution
+    if let Some(r) = hybrid_report {
+        rows.push(vec![
+            "serving tenants during the hybrid job".into(),
+            format!("alone p99: {}", fmt_ns(r.serve_alone.latency.percentile(99.0))),
+            format!("colocated p99: {}", fmt_ns(r.serve_colocated.latency.percentile(99.0))),
+            format!(
+                "{:.2}x latency inflation",
+                r.serve_colocated.latency.percentile(99.0) / r.serve_alone.latency.percentile(99.0)
+            ),
+        ]);
+        let first = &r.train_colocated[0];
+        rows.push(vec![
+            "per-axis training payload (ledger)".into(),
+            format!(
+                "dp {} / tp {}",
+                crate::benchkit::fmt_bytes(first.axis_bytes(TrainAxis::Dp)),
+                crate::benchkit::fmt_bytes(first.axis_bytes(TrainAxis::Tp))
+            ),
+            format!(
+                "pp {} / ep {}",
+                crate::benchkit::fmt_bytes(first.axis_bytes(TrainAxis::Pp)),
+                crate::benchkit::fmt_bytes(first.axis_bytes(TrainAxis::Ep))
+            ),
+            format!(
+                "tenants: kv {}",
+                crate::benchkit::fmt_bytes(r.ledger.class_bytes(crate::fabric::TrafficClass::KvCache))
+            ),
+        ]);
+        for l in r.ledger.hottest(2) {
+            rows.push(vec![
+                format!("hot link #{} ({})", l.edge, l.link),
+                format!("{} -> {}", l.src, l.dst),
+                format!("util {:.0}%", 100.0 * l.utilization),
+                format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+            ]);
+        }
+        let mut tel = Telemetry::new();
+        for step in &r.train_colocated {
+            tel.record_training("train", step);
+        }
+        rows.push(vec![
+            "telemetry registry".into(),
+            format!("train.steps {}", tel.counter("train.steps")),
+            format!("train.payload.dp {}", tel.counter("train.payload.dp")),
+            format!(
+                "comm frac peak {:.1}%, bubble {:.1}%",
+                100.0 * tel.gauge_value("train.step.comm_fraction_peak").unwrap_or(0.0),
+                100.0 * tel.gauge_value("train.step.bubble_fraction").unwrap_or(0.0)
+            ),
+        ]);
+    }
+
+    Table {
+        title: "Train tax — event-driven 3D-parallel training: analytic vs measured, alone vs colocated with serving"
+            .into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
+/// Experiment driver function type (one per paper table/figure).
+pub type TableFn = fn() -> Table;
+
+/// The single source of truth binding experiment ids to drivers, in paper
+/// order. [`all_tables`] and the CLI (`report --exp`, `list`) both derive
+/// from this, so adding a table can never silently desync them (the
+/// consistency test in `tests/integration_experiments.rs` locks it down).
+pub fn registry() -> Vec<(&'static str, TableFn)> {
     vec![
-        fig21(),
-        fig22(),
-        table1(),
-        table2(),
-        fig29(),
-        fig31(),
-        fig33(),
-        fig34(),
-        fig35(),
-        fig36(),
-        fig37(),
-        table3(),
-        fig41(),
-        sec34(),
-        sec63(),
-        comm_tax(),
-        mem_tax(),
-        supercluster_tax(),
+        ("fig21", fig21 as TableFn),
+        ("fig22", fig22),
+        ("table1", table1),
+        ("table2", table2),
+        ("fig29", fig29),
+        ("fig31", fig31),
+        ("fig33", fig33),
+        ("fig34", fig34),
+        ("fig35", fig35),
+        ("fig36", fig36),
+        ("fig37", fig37),
+        ("table3", table3),
+        ("fig41", fig41),
+        ("sec34", sec34),
+        ("sec63", sec63),
+        ("ablations", ablations),
+        ("pd-disagg", pd_disagg),
+        ("comm-tax", comm_tax),
+        ("mem-tax", mem_tax),
+        ("supercluster-tax", supercluster_tax),
+        ("train-tax", train_tax),
     ]
+}
+
+/// Run one experiment by its CLI id.
+pub fn by_id(id: &str) -> Option<Table> {
+    registry().into_iter().find(|(name, _)| *name == id).map(|(_, f)| f())
+}
+
+/// All tables, in registry (paper) order.
+pub fn all_tables() -> Vec<Table> {
+    registry().into_iter().map(|(_, f)| f()).collect()
 }
 
 #[cfg(test)]
@@ -1367,6 +1537,42 @@ mod tests {
         }
         // serving + ledger + telemetry rows are present
         assert!(t.rows.iter().any(|r| r[0].starts_with("3-tenant serving")));
+        assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
+        assert!(t.rows.iter().any(|r| r[0] == "telemetry registry"));
+    }
+
+    #[test]
+    fn registry_ids_unique_and_resolvable() {
+        let reg = registry();
+        let mut ids: Vec<_> = reg.iter().map(|(n, _)| *n).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), reg.len(), "duplicate experiment ids");
+        assert!(by_id("train-tax").is_some());
+        assert!(by_id("fig21").is_some());
+        assert!(by_id("nope").is_none());
+    }
+
+    #[test]
+    fn train_tax_parity_and_colocation_inflation() {
+        let t = train_tax();
+        // idle-fabric parity: the event-driven step within 0.1% of the
+        // analytic closed form (the acceptance threshold)
+        let delta: f64 = t.rows[0][3].split('%').next().unwrap().parse().unwrap();
+        assert!(delta.abs() < 0.1, "idle parity delta={delta}%");
+        // concurrent DP rings self-contend on the bridges
+        let selfc: f64 = t.rows[1][3].split('x').next().unwrap().parse().unwrap();
+        assert!(selfc > 1.0, "self-contention={selfc}");
+        // all three §3.4 mixes: colocation inflates the step
+        let mix_rows: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[3].ends_with("step inflation vs alone")).collect();
+        assert_eq!(mix_rows.len(), 3, "3 parallelism mixes");
+        for row in mix_rows {
+            let f: f64 = row[3].split('x').next().unwrap().parse().unwrap();
+            assert!(f > 1.0, "{}: inflation {f} must exceed 1", row[0]);
+        }
+        // serving-side inflation + telemetry rows are present
+        assert!(t.rows.iter().any(|r| r[0].starts_with("serving tenants")));
         assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
         assert!(t.rows.iter().any(|r| r[0] == "telemetry registry"));
     }

@@ -1,0 +1,210 @@
+//! Train/serve colocation on one contended CXL-over-XLink supercluster —
+//! the scenario the ROADMAP's north star and the paper's §1 motivation
+//! point at: the 35–70 % training communication tax is quoted for a fabric
+//! the job *owns*, yet production fleets co-schedule training with
+//! latency-sensitive serving ("AI and Memory Wall" motivates the
+//! bandwidth-bound regime; FengHuang motivates orchestrating shared
+//! memory/fabric between jobs).
+//!
+//! [`simulate_colocate`] runs three deterministic simulations on fabrics
+//! of identical shape:
+//!
+//! 1. **serving alone** — the multi-tenant
+//!    [`super::supercluster::simulate_supercluster`] pipeline;
+//! 2. **training alone** — [`simulate_step_flows`]'s event-driven
+//!    3D-parallel step, DP replicas mapped onto the first `dp` clusters;
+//! 3. **colocated** — both launched on *one* supercluster and one engine:
+//!    the training job's DP reduce-scatter/all-gather rounds and pipeline
+//!    handoffs share bridges and spines with the tenants' KV-prefetch /
+//!    activation-writeback / state-sync flows, `steps` training steps
+//!    chained back-to-back so the job spans the serving burst.
+//!
+//! The report puts step-time inflation (training's view) next to
+//! p99-latency inflation (serving's view) over the shared ledger — the
+//! colocation tax from both sides, with one byte-attributed source of
+//! truth. Same config ⇒ byte-identical trace (`tests/train_flows.rs`
+//! locks the golden-trace contract down).
+
+use super::supercluster::{build_scs, launch_supercluster, SuperServeConfig, SuperServeReport};
+use crate::datacenter::node::AcceleratorSpec;
+use crate::fabric::flow::CommTaxLedger;
+use crate::sim::Engine;
+use crate::workload::training::{
+    launch_step_flows, simulate_step_flows, FlowStepReport, FlowTrainOptions, TrainMapping, TrainingConfig,
+};
+use crate::workload::Platform;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One colocation scenario.
+#[derive(Clone, Debug)]
+pub struct ColocateConfig {
+    /// The serving tenants (also defines the supercluster shape; the
+    /// training plan must fit it: `dp ≤ clusters`,
+    /// `tp × pp ≤ accels_per_cluster`).
+    pub serve: SuperServeConfig,
+    /// The training job sharing the fabric.
+    pub train: TrainingConfig,
+    /// Accelerator silicon pricing the training compute.
+    pub accel: AcceleratorSpec,
+    /// Event-driven trainer knobs (all-groups DP, overlap).
+    pub opts: FlowTrainOptions,
+    /// Training steps chained back-to-back during the serving run.
+    pub steps: usize,
+}
+
+impl ColocateConfig {
+    /// The canonical flooded colocation scenario: two serving tenants
+    /// bursting 12 requests each at a 60 µs mean inter-arrival while the
+    /// training job runs full-traffic DP rings for 2 chained steps. One
+    /// definition shared by the `train-tax` experiment driver, the sec34
+    /// bench's contended view, and the acceptance tests in
+    /// `tests/train_flows.rs`, so they all measure the same scenario.
+    pub fn flooded(train: TrainingConfig, clusters: usize, accels_per_cluster: usize) -> ColocateConfig {
+        let serve = SuperServeConfig {
+            tenants: 2,
+            requests_per_tenant: 12,
+            arrival_mean: 60_000.0, // flooded: tenants burst while the step runs
+            clusters,
+            accels_per_cluster,
+            ..Default::default()
+        };
+        ColocateConfig { serve, train, accel: AcceleratorSpec::b200(), opts: FlowTrainOptions::full(), steps: 2 }
+    }
+}
+
+impl Default for ColocateConfig {
+    fn default() -> Self {
+        // the hybrid 2×2×2 §3.4 mix on its canonical 2-cluster fabric
+        let (_, train, clusters, accels) = crate::workload::training::hybrid_flow_mix();
+        Self::flooded(train, clusters, accels)
+    }
+}
+
+/// Measured outcome of one colocation scenario.
+#[derive(Debug)]
+pub struct ColocateReport {
+    /// Serving with the fabric to itself.
+    pub serve_alone: SuperServeReport,
+    /// Serving while the training job shares bridges and spines.
+    pub serve_colocated: SuperServeReport,
+    /// One training step with the fabric to itself.
+    pub train_alone: FlowStepReport,
+    /// The chained colocated steps, in execution order.
+    pub train_colocated: Vec<FlowStepReport>,
+    /// The colocated fabric's communication-tax ledger (both jobs).
+    pub ledger: CommTaxLedger,
+    /// Inter-cluster (CXL) payload of the colocated run.
+    pub inter_cluster_bytes: u64,
+    /// Deterministic colocated trace (scheduler decisions + flows).
+    pub trace: String,
+}
+
+impl ColocateReport {
+    /// Mean colocated step wall time (ns).
+    pub fn mean_step_ns(&self) -> f64 {
+        if self.train_colocated.is_empty() {
+            return 0.0;
+        }
+        self.train_colocated.iter().map(|s| s.makespan).sum::<f64>() / self.train_colocated.len() as f64
+    }
+
+    /// Colocated step-time inflation over training alone (≥ 1 when the
+    /// serving tenants genuinely contend).
+    pub fn step_inflation(&self) -> f64 {
+        self.mean_step_ns() / self.train_alone.makespan
+    }
+}
+
+/// Run the three-way colocation comparison. `None` when the training plan
+/// does not fit the serving supercluster or a collective is unroutable.
+pub fn simulate_colocate(cfg: &ColocateConfig, platform: &Platform) -> Option<ColocateReport> {
+    assert!(cfg.steps >= 1, "at least one training step");
+    // 1) serving alone on a private fabric of the same shape
+    let serve_alone = {
+        let scs = build_scs(&cfg.serve);
+        let mut eng = Engine::new();
+        let run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+        eng.run();
+        run.finish(&scs).0
+    };
+    // 2) one training step alone on a private fabric of the same shape
+    let train_alone = {
+        let scs = build_scs(&cfg.serve);
+        let mapping = TrainMapping::onto(&scs, cfg.train.plan)?;
+        simulate_step_flows(&mapping, &cfg.train, &cfg.accel, cfg.opts)?
+    };
+    // 3) both on one fabric, one engine
+    let scs = build_scs(&cfg.serve);
+    let mapping = TrainMapping::onto(&scs, cfg.train.plan)?;
+    let mut eng = Engine::new();
+    let serve_run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+    let runs: Rc<RefCell<Vec<crate::workload::training::TrainRun>>> = Rc::new(RefCell::new(Vec::new()));
+    launch_chained_step(&mapping, cfg, &runs, &mut eng, 0);
+    eng.run();
+    let (serve_colocated, ledger, trace) = serve_run.finish(&scs);
+    let mut train_colocated = Vec::with_capacity(cfg.steps);
+    for run in runs.borrow().iter() {
+        train_colocated.push(run.report()?);
+    }
+    Some(ColocateReport {
+        serve_alone,
+        serve_colocated,
+        train_alone,
+        train_colocated,
+        inter_cluster_bytes: scs.inter_cluster_payload(),
+        ledger,
+        trace,
+    })
+}
+
+/// Launch step `i`, chaining step `i+1` from its completion continuation.
+fn launch_chained_step(
+    mapping: &TrainMapping,
+    cfg: &ColocateConfig,
+    runs: &Rc<RefCell<Vec<crate::workload::training::TrainRun>>>,
+    eng: &mut Engine,
+    i: usize,
+) {
+    let run = launch_step_flows(mapping, &cfg.train, &cfg.accel, cfg.opts, eng);
+    if i + 1 < cfg.steps {
+        let (mapping2, cfg2, runs2) = (mapping.clone(), cfg.clone(), runs.clone());
+        run.on_complete(eng, move |e| {
+            launch_chained_step(&mapping2, &cfg2, &runs2, e, i + 1);
+        });
+    }
+    runs.borrow_mut().push(run);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::flow::TrafficClass;
+
+    #[test]
+    fn colocation_inflates_both_sides() {
+        let cfg = ColocateConfig::default();
+        let r = simulate_colocate(&cfg, &Platform::composable_cxl()).expect("plan fits the fabric");
+        assert_eq!(r.train_colocated.len(), cfg.steps);
+        // training pays for the tenants...
+        assert!(r.step_inflation() > 1.0, "inflation={}", r.step_inflation());
+        // ...and the tenants pay for training (p99, strictly)
+        let (alone, shared) =
+            (r.serve_alone.latency.percentile(99.0), r.serve_colocated.latency.percentile(99.0));
+        assert!(shared > alone, "serving p99 alone={alone} colocated={shared}");
+        // both jobs' traffic classes land on one ledger
+        assert!(r.ledger.class_bytes(TrafficClass::Collective) > 0, "DP/TP rounds + tenant syncs");
+        assert!(r.ledger.class_bytes(TrafficClass::KvCache) > 0, "tenant KV prefetches");
+        assert!(r.ledger.class_bytes(TrafficClass::Activation) > 0, "pipeline handoffs + writebacks");
+        assert!(r.inter_cluster_bytes > 0);
+        assert!(!r.trace.is_empty());
+    }
+
+    #[test]
+    fn plan_must_fit_the_serving_fabric() {
+        let mut cfg = ColocateConfig::default();
+        let too_many = cfg.serve.clusters + 1;
+        cfg.train.plan.dp = too_many;
+        assert!(simulate_colocate(&cfg, &Platform::composable_cxl()).is_none());
+    }
+}

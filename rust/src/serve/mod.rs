@@ -18,10 +18,15 @@
 //! scales the same pipeline out to the §6.2 CXL-over-XLink supercluster:
 //! multiple tenants' KV/activation/state-sync flows share bridge and spine
 //! links, and the router consumes measured per-cluster fabric utilization.
+//! The [`colocate`] submodule co-schedules an event-driven 3D-parallel
+//! training job ([`crate::workload::training`]) with those tenants on one
+//! fabric and measures the colocation tax from both sides.
 
+pub mod colocate;
 pub mod pd;
 pub mod supercluster;
 
+pub use colocate::{simulate_colocate, ColocateConfig, ColocateReport};
 pub use supercluster::{simulate_supercluster, SuperServeConfig, SuperServeReport};
 
 use crate::coordinator::batcher::{Batch, DynamicBatcher};

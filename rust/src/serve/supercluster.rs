@@ -168,16 +168,72 @@ struct ScRun {
     trace: Vec<String>,
 }
 
+/// Build the supercluster a [`SuperServeConfig`] describes — shared with
+/// the train/serve colocation driver so both substrates are guaranteed the
+/// same fabric shape.
+pub(crate) fn build_scs(cfg: &SuperServeConfig) -> SuperclusterSim {
+    assert!(cfg.clusters > 0 && cfg.tenants > 0 && cfg.mem_trays > 0);
+    Supercluster::build_sim(
+        &vec![XLinkCluster::ualink(cfg.accels_per_cluster); cfg.clusters],
+        cfg.shape,
+        cfg.mem_trays,
+    )
+}
+
 /// Run the multi-tenant supercluster serving simulation. Returns the
 /// report, the fabric's communication-tax ledger, and the deterministic
 /// event trace (scheduler decisions + flow events).
 pub fn simulate_supercluster(cfg: &SuperServeConfig, platform: &Platform) -> (SuperServeReport, CommTaxLedger, String) {
-    assert!(cfg.clusters > 0 && cfg.tenants > 0 && cfg.mem_trays > 0);
-    let scs = Supercluster::build_sim(
-        &vec![XLinkCluster::ualink(cfg.accels_per_cluster); cfg.clusters],
-        cfg.shape,
-        cfg.mem_trays,
-    );
+    let scs = build_scs(cfg);
+    let mut eng = Engine::new();
+    let run = launch_supercluster(cfg, platform, &scs, &mut eng);
+    eng.run();
+    run.finish(&scs)
+}
+
+/// Progress handle of one launched serving run (batch scheduling is on the
+/// engine; harvest with [`Self::finish`] after the engine drains).
+pub(crate) struct SuperServeRun {
+    st: Rc<RefCell<ScRun>>,
+    env: Rc<ScEnv>,
+}
+
+impl SuperServeRun {
+    /// Assemble the report, ledger snapshot and deterministic trace.
+    pub(crate) fn finish(&self, scs: &SuperclusterSim) -> (SuperServeReport, CommTaxLedger, String) {
+        let s = self.st.borrow();
+        let makespan = s.last_finish;
+        let report = SuperServeReport {
+            latency: s.latency.clone(),
+            queueing: s.queueing.clone(),
+            fabric_wait: s.fabric_wait.clone(),
+            per_tenant_latency: s.per_tenant.clone(),
+            throughput_rps: self.env.total_requests as f64 / (makespan / crate::SEC),
+            batches: s.batch_sizes.count() as u64,
+            mean_batch: s.batch_sizes.mean(),
+            makespan,
+            inter_cluster_bytes: scs.inter_cluster_payload(),
+        };
+        let mut trace = s.trace.join("\n");
+        trace.push_str("\n---- flows ----\n");
+        trace.push_str(&scs.trace_render());
+        (report, scs.ledger(), trace)
+    }
+}
+
+/// Schedule a multi-tenant serving run onto an existing supercluster and
+/// engine — the colocation entry point: a training job launched on the
+/// same pair shares every bridge and spine with these tenants' flows.
+pub(crate) fn launch_supercluster(
+    cfg: &SuperServeConfig,
+    platform: &Platform,
+    scs: &SuperclusterSim,
+    eng: &mut Engine,
+) -> SuperServeRun {
+    assert!(cfg.clusters > 0 && cfg.tenants > 0);
+    assert!(scs.cluster_count() >= cfg.clusters, "serving spans more clusters than the fabric has");
+    assert!(scs.tray_count() >= 1);
+    let scs = scs.clone();
     // per-tenant arrivals + batches, via the shared serving front-end
     let mut arrivals = Vec::with_capacity(cfg.tenants);
     let mut batches: Vec<SBatch> = Vec::new();
@@ -240,7 +296,6 @@ pub fn simulate_supercluster(cfg: &SuperServeConfig, platform: &Platform) -> (Su
         last_finish: 0.0,
         trace: Vec::new(),
     }));
-    let mut eng = Engine::new();
     for k in 0..n_batches {
         let at = st.borrow().batches[k].formed_at;
         let (st2, env2) = (st.clone(), env.clone());
@@ -249,24 +304,7 @@ pub fn simulate_supercluster(cfg: &SuperServeConfig, platform: &Platform) -> (Su
             dispatch_waiting(&st2, &env2, e);
         });
     }
-    eng.run();
-    let s = st.borrow();
-    let makespan = s.last_finish;
-    let report = SuperServeReport {
-        latency: s.latency.clone(),
-        queueing: s.queueing.clone(),
-        fabric_wait: s.fabric_wait.clone(),
-        per_tenant_latency: s.per_tenant.clone(),
-        throughput_rps: env.total_requests as f64 / (makespan / crate::SEC),
-        batches: s.batch_sizes.count() as u64,
-        mean_batch: s.batch_sizes.mean(),
-        makespan,
-        inter_cluster_bytes: scs.inter_cluster_payload(),
-    };
-    let mut trace = s.trace.join("\n");
-    trace.push_str("\n---- flows ----\n");
-    trace.push_str(&scs.trace_render());
-    (report, scs.ledger(), trace)
+    SuperServeRun { st, env }
 }
 
 /// Start waiting batches on idle clusters (work-conserving), feeding the

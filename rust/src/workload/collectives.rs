@@ -13,11 +13,14 @@
 //! * **analytic** (`ring_allreduce`, `all_to_all`, `hierarchical_allreduce`,
 //!   …) — closed-form step counts × per-step path time; fast, idle-fabric
 //!   assumption;
-//! * **flow-level** (`ring_allreduce_flows`, `all_to_all_flows`,
-//!   `tree_broadcast_flows`, `hierarchical_allreduce_flows`) — every step
-//!   is a real overlapping flow on a [`FabricSim`], so steps of *this*
-//!   collective, and anything else sharing the fabric, contend for link
-//!   bandwidth. The spread between the two modes is the communication tax.
+//! * **flow-level** (`ring_allreduce_flows`, `ring_reduce_scatter_flows_on`
+//!   / `ring_allgather_flows_on` — the two composable halves of the ring
+//!   decomposition, chainable via [`CollectiveRun::on_complete`] —
+//!   `all_to_all_flows`, `tree_broadcast_flows`,
+//!   `hierarchical_allreduce_flows`) — every step is a real overlapping
+//!   flow on a [`FabricSim`], so steps of *this* collective, and anything
+//!   else sharing the fabric, contend for link bandwidth. The spread
+//!   between the two modes is the communication tax.
 //!
 //! The flow-level machinery is generic over a [`FlowLane`]: a plain
 //! [`FabricSim`], or a [`SuperclusterSim`] whose cluster-crossing flows
@@ -117,9 +120,21 @@ pub fn ring_allgather(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
     (n - 1) as f64 * path.time(chunk)
 }
 
-/// Reduce-Scatter: (n-1) steps of `bytes/n` chunks.
+/// Ring Reduce-Scatter: (n-1) steps in which every rank forwards a
+/// partially-reduced `bytes/n` chunk to its ring successor; after the last
+/// step each rank holds one fully-reduced shard. The wire pattern is the
+/// mirror image of [`ring_allgather`] (same step count, same chunk size,
+/// reduction folded into each hop), so the two compose into the classic
+/// ring All-Reduce identity: `reduce_scatter + all_gather == all_reduce`
+/// (`2(n-1)` total steps) — locked down by
+/// `reduce_scatter_allgather_composes_to_allreduce` below in both the
+/// analytic and the flow-level form.
 pub fn ring_reduce_scatter(n: usize, bytes: u64, path: &impl CommCost) -> f64 {
-    ring_allgather(n, bytes, path)
+    if n <= 1 {
+        return 0.0;
+    }
+    let chunk = bytes.div_ceil(n as u64);
+    (n - 1) as f64 * path.time(chunk)
 }
 
 /// All-to-All (MoE expert dispatch): each rank sends `bytes/n` to every
@@ -295,6 +310,24 @@ impl CollectiveRun {
             None
         }
     }
+
+    /// Chain a continuation onto this collective: `f(engine, finish_time)`
+    /// fires once when the last constituent flow lands (immediately, via a
+    /// zero-delay event, if the run is already complete). This is how
+    /// dependent phases — reduce-scatter ⇒ all-gather, backward compute ⇒
+    /// DP gradient sync — overlap without polling. A stalled run never
+    /// fires its continuation (mirroring [`Self::finish_time`]).
+    pub fn on_complete(&self, eng: &mut Engine, f: impl FnOnce(&mut Engine, f64) + 'static) {
+        let mut p = self.prog.borrow_mut();
+        if p.remaining == 0 && !p.stalled {
+            let finish = p.finish;
+            drop(p);
+            eng.schedule_in(0.0, move |e| f(e, finish));
+        } else {
+            assert!(p.on_done.is_none(), "one continuation per run");
+            p.on_done = Some(Box::new(f));
+        }
+    }
 }
 
 fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, eng: &mut Engine, arrival: f64) {
@@ -319,6 +352,7 @@ fn note_arrival(prog: &Rc<RefCell<CollectiveProgress>>, eng: &mut Engine, arriva
 /// `chain` has reached rank `chain + round`; forward it one hop. The next
 /// hop launches from the arrival callback, so ring dependencies are real
 /// events and every in-flight chunk competes for link bandwidth.
+#[allow(clippy::too_many_arguments)]
 fn ring_chain_step<L: FlowLane>(
     lane: L,
     eng: &mut Engine,
@@ -352,6 +386,36 @@ fn ring_chain_step<L: FlowLane>(
     }
 }
 
+/// The shared ring executor: `rounds` chained neighbor hops per chain, one
+/// chain per rank, all chains overlapping on the lane. Every ring-shaped
+/// collective — all-reduce (`2(n-1)` rounds), reduce-scatter and
+/// all-gather (`n-1` rounds each), and the flow trainer's fused per-layer
+/// TP sequence (`4·layers·microbatches·2(n-1)` rounds) — is this executor
+/// with a different round count, so they all share one idle-parity proof:
+/// on an idle fabric each chain completes in exactly
+/// `rounds × step_time(chunk)`.
+pub(crate) fn ring_rounds_flows_on<L: FlowLane>(
+    lane: &L,
+    eng: &mut Engine,
+    ranks: &[NodeId],
+    chunk: u64,
+    rounds: u32,
+) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 || rounds == 0 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    let (run, prog) = CollectiveRun::new(n as u64 * rounds as u64, eng.now());
+    let ranks = Rc::new(ranks.to_vec());
+    for chain in 0..n {
+        // per-chain running count: the remaining counter already tracks all
+        // chains, so note_arrival on the shared progress is enough
+        ring_chain_step(lane.clone(), eng, ranks.clone(), chunk, chain, 0, rounds, prog.clone());
+    }
+    run
+}
+
 /// Ring All-Reduce as 2(n-1) rounds of n overlapping flows on any
 /// [`FlowLane`]. All n round-0 chunks depart immediately; each later send
 /// is triggered by the arrival of its predecessor chunk (real ring
@@ -362,22 +426,111 @@ pub fn ring_allreduce_flows_on<L: FlowLane>(lane: &L, eng: &mut Engine, ranks: &
         let (run, _) = CollectiveRun::new(0, eng.now());
         return run;
     }
-    let chunk = bytes.div_ceil(n as u64);
-    let total_rounds = (2 * (n - 1)) as u32;
-    let (run, prog) = CollectiveRun::new(n as u64 * total_rounds as u64, eng.now());
-    let ranks = Rc::new(ranks.to_vec());
-    for chain in 0..n {
-        // per-chain running count: the remaining counter already tracks all
-        // chains, so note_arrival on the shared progress is enough
-        ring_chain_step(lane.clone(), eng, ranks.clone(), chunk, chain, 0, total_rounds, prog.clone());
+    ring_rounds_flows_on(lane, eng, ranks, bytes.div_ceil(n as u64), (2 * (n - 1)) as u32)
+}
+
+/// Ring Reduce-Scatter as (n-1) rounds of n overlapping chains — the first
+/// half of the ring all-reduce decomposition (each hop forwards a
+/// partially-reduced `bytes/n` chunk). Chain an
+/// [`CollectiveRun::on_complete`] continuation into
+/// [`ring_allgather_flows_on`] to reconstitute the full all-reduce — the
+/// shape the data-parallel gradient sync uses so the scatter half can
+/// overlap backward compute.
+pub fn ring_reduce_scatter_flows_on<L: FlowLane>(
+    lane: &L,
+    eng: &mut Engine,
+    ranks: &[NodeId],
+    bytes: u64,
+) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
     }
-    run
+    ring_rounds_flows_on(lane, eng, ranks, bytes.div_ceil(n as u64), (n - 1) as u32)
+}
+
+/// Ring All-Gather as (n-1) rounds of n overlapping chains — the second
+/// half of the ring all-reduce decomposition (each hop forwards one
+/// finished `bytes/n` shard).
+pub fn ring_allgather_flows_on<L: FlowLane>(lane: &L, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    ring_rounds_flows_on(lane, eng, ranks, bytes.div_ceil(n as u64), (n - 1) as u32)
 }
 
 /// Ring All-Reduce on a plain fabric simulator (see
 /// [`ring_allreduce_flows_on`] for the lane-generic form).
 pub fn ring_allreduce_flows(sim: &FabricSim, eng: &mut Engine, ranks: &[NodeId], bytes: u64) -> CollectiveRun {
     ring_allreduce_flows_on(sim, eng, ranks, bytes)
+}
+
+/// One chain step of the pipelined all-to-all: rank `sender` has delivered
+/// `round` of its peer sends; launch the next. Round `k`'s target is the
+/// rank `1 + (k mod (n-1))` positions ahead, so every round is a
+/// permutation (each rank exactly one send and one receive in flight) and
+/// the idle-fabric chain time is exactly `rounds × step_time(chunk)` — the
+/// pipelining the analytic [`all_to_all`] closed form assumes.
+#[allow(clippy::too_many_arguments)]
+fn a2a_chain_step<L: FlowLane>(
+    lane: L,
+    eng: &mut Engine,
+    ranks: Rc<Vec<NodeId>>,
+    chunk: u64,
+    sender: usize,
+    round: u32,
+    total_rounds: u32,
+    prog: Rc<RefCell<CollectiveProgress>>,
+) {
+    let n = ranks.len();
+    let shift = 1 + (round as usize % (n - 1));
+    let src = ranks[sender];
+    let dst = ranks[(sender + shift) % n];
+    let lanec = lane.clone();
+    let prog_cb = prog.clone();
+    let submitted = lane.submit_flow(
+        eng,
+        src,
+        dst,
+        chunk,
+        Box::new(move |e, d| {
+            note_arrival(&prog_cb, e, d.arrival);
+            let next = round + 1;
+            if next < total_rounds {
+                a2a_chain_step(lanec, e, ranks, chunk, sender, next, total_rounds, prog_cb);
+            }
+        }),
+    );
+    if !submitted {
+        prog.borrow_mut().stalled = true;
+    }
+}
+
+/// Pipelined All-to-All as per-sender chained rounds on any [`FlowLane`]:
+/// `rounds` is a multiple of `(n-1)` to express repeated exchanges (the
+/// flow trainer fuses its `4·layers·microbatches` MoE dispatch+combine
+/// calls into one chain per rank this way).
+pub(crate) fn all_to_all_rounds_flows_on<L: FlowLane>(
+    lane: &L,
+    eng: &mut Engine,
+    ranks: &[NodeId],
+    chunk: u64,
+    rounds: u32,
+) -> CollectiveRun {
+    let n = ranks.len();
+    if n <= 1 || rounds == 0 {
+        let (run, _) = CollectiveRun::new(0, eng.now());
+        return run;
+    }
+    let (run, prog) = CollectiveRun::new(n as u64 * rounds as u64, eng.now());
+    let ranks = Rc::new(ranks.to_vec());
+    for sender in 0..n {
+        a2a_chain_step(lane.clone(), eng, ranks.clone(), chunk, sender, 0, rounds, prog.clone());
+    }
+    run
 }
 
 /// All-to-All (MoE dispatch) as n(n-1) simultaneous flows of `bytes/n`.
@@ -798,6 +951,71 @@ mod tests {
         let ar = ring_allreduce(8, 1 << 26, &p);
         let ag = ring_allgather(8, 1 << 26, &p);
         assert!((ar / ag - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn reduce_scatter_allgather_composes_to_allreduce_analytic() {
+        // the ring decomposition identity, exactly, at several rank counts
+        let p = rack_path();
+        for n in [2usize, 3, 8, 17] {
+            for bytes in [1u64 << 10, 1 << 26] {
+                let rs = ring_reduce_scatter(n, bytes, &p);
+                let ag = ring_allgather(n, bytes, &p);
+                let ar = ring_allreduce(n, bytes, &p);
+                assert_eq!(rs + ag, ar, "n={n} bytes={bytes}");
+                assert_eq!(rs, ag, "mirror halves, n={n}");
+            }
+        }
+        assert_eq!(ring_reduce_scatter(1, 1 << 20, &p), 0.0);
+    }
+
+    #[test]
+    fn reduce_scatter_allgather_composes_to_allreduce_flows() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let n = 6;
+        let bytes = 1u64 << 24;
+        let mk = || {
+            let sim = FabricSim::new(Topology::fully_connected(n), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            let ranks = sim.endpoints();
+            (sim, ranks)
+        };
+        // reduce-scatter chained into all-gather via the continuation hook
+        let (sim, ranks) = mk();
+        let mut eng = Engine::new();
+        let rs = ring_reduce_scatter_flows_on(&sim, &mut eng, &ranks, bytes);
+        let composed: Rc<RefCell<Option<f64>>> = Rc::new(RefCell::new(None));
+        let (out, simc, ranksc) = (composed.clone(), sim.clone(), ranks.clone());
+        rs.on_complete(&mut eng, move |e, _| {
+            let ag = ring_allgather_flows_on(&simc, e, &ranksc, bytes);
+            ag.on_complete(e, move |_, t| *out.borrow_mut() = Some(t));
+        });
+        eng.run();
+        let composed = composed.borrow().expect("rs+ag completes");
+        // ...equals one ring all-reduce on a fresh, idle instance
+        let (sim, ranks) = mk();
+        let ar = ring_allreduce_contended(&sim, &ranks, bytes).expect("all-reduce completes");
+        let rel = (composed - ar).abs() / ar;
+        assert!(rel < 1e-3, "composed={composed} allreduce={ar}");
+    }
+
+    #[test]
+    fn on_complete_fires_even_when_already_done() {
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let sim = FabricSim::new(Topology::star(2), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+        let one = vec![sim.endpoints()[0]];
+        let mut eng = Engine::new();
+        // degenerate single-rank run: complete at construction time
+        let run = ring_reduce_scatter_flows_on(&sim, &mut eng, &one, 1 << 20);
+        assert!(run.is_done());
+        let fired: Rc<RefCell<Option<f64>>> = Rc::new(RefCell::new(None));
+        let f = fired.clone();
+        run.on_complete(&mut eng, move |_, t| *f.borrow_mut() = Some(t));
+        eng.run();
+        assert_eq!(*fired.borrow(), Some(0.0));
     }
 
     #[test]

@@ -57,6 +57,13 @@ impl ModelSpec {
         ModelSpec { name: "tiny-100m", layers: 12, hidden: 768, heads: 12, kv_heads: 12, vocab: 32_768, ffn: 3_072, experts: 1, active_experts: 1, dtype_bytes: 2, gated_ffn: false }
     }
 
+    /// Tiny MoE (4 experts, top-2) at the 100M-class scale — the
+    /// expert-parallel counterpart of [`Self::tiny_100m`] for event-driven
+    /// training runs that need an EP axis without GPT-scale step times.
+    pub fn tiny_moe() -> ModelSpec {
+        ModelSpec { name: "tiny-moe", layers: 12, hidden: 768, heads: 12, kv_heads: 12, vocab: 32_768, ffn: 3_072, experts: 4, active_experts: 2, dtype_bytes: 2, gated_ffn: true }
+    }
+
     /// Head dimension.
     pub fn head_dim(&self) -> u64 {
         self.hidden / self.heads
@@ -131,6 +138,37 @@ impl ModelSpec {
     pub fn training_footprint(&self, tokens: u64) -> u64 {
         self.optimizer_state_bytes() + self.activation_bytes_per_token() * tokens
     }
+
+    // ----- per-layer parallelism sizing hooks (§3.4) ---------------------
+    // The analytic `simulate_step` closed form and the event-driven flow
+    // trainer both size their collectives through these, so the two
+    // pricing substrates can never disagree about how many bytes an axis
+    // moves (the idle-fabric parity contract depends on it).
+
+    /// Transformer layers resident on one pipeline stage.
+    pub fn layers_per_stage(&self, pp: usize) -> usize {
+        (self.layers as usize).div_ceil(pp.max(1))
+    }
+
+    /// The activation slab one Megatron-style tensor-parallel all-reduce
+    /// moves: `micro_tokens × hidden × dtype` (4 such all-reduces per layer
+    /// per microbatch: 2 forward + 2 backward).
+    pub fn tp_slab_bytes(&self, micro_tokens: f64) -> u64 {
+        (micro_tokens * self.hidden as f64 * self.dtype_bytes as f64) as u64
+    }
+
+    /// The token slab one MoE all-to-all dispatches (same activation
+    /// arithmetic as the TP slab; 4 all-to-alls per MoE layer per
+    /// microbatch: dispatch + combine, forward and backward).
+    pub fn ep_slab_bytes(&self, micro_tokens: f64) -> u64 {
+        self.tp_slab_bytes(micro_tokens)
+    }
+
+    /// One GPU's bf16 gradient shard under `tp × pp` model sharding — the
+    /// buffer the data-parallel reduce-scatter/all-gather moves.
+    pub fn grad_shard_bytes(&self, tp: usize, pp: usize) -> u64 {
+        self.params() / (tp.max(1) as u64 * pp.max(1) as u64) * 2
+    }
 }
 
 #[cfg(test)]
@@ -189,5 +227,24 @@ mod tests {
         let m = ModelSpec::llama_70b();
         let per_tok = m.kv_bytes_per_token();
         assert_eq!(per_tok, 2 * 80 * 8 * 128 * 2);
+    }
+
+    #[test]
+    fn parallelism_sizing_hooks() {
+        let m = ModelSpec::gpt3_175b();
+        assert_eq!(m.layers_per_stage(8), 12);
+        assert_eq!(m.layers_per_stage(1), 96);
+        assert_eq!(m.tp_slab_bytes(1024.0), 1024 * m.hidden * m.dtype_bytes);
+        assert_eq!(m.ep_slab_bytes(1024.0), m.tp_slab_bytes(1024.0));
+        assert_eq!(m.grad_shard_bytes(8, 8), m.params() / 64 * 2);
+        assert_eq!(m.grad_shard_bytes(1, 1), m.params() * 2);
+    }
+
+    #[test]
+    fn tiny_moe_is_tiny_and_sparse() {
+        let m = ModelSpec::tiny_moe();
+        assert!(m.experts > 1 && m.active_experts < m.experts);
+        assert!(m.params() > m.active_params());
+        assert!((m.params() as f64) < 1e9, "tiny MoE must stay sub-1B");
     }
 }

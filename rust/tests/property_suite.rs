@@ -440,6 +440,148 @@ fn property_supercluster_bridge_byte_conservation() {
 }
 
 #[test]
+fn property_1f1b_schedule_is_legal() {
+    // for random small plans, the executed pipeline schedule satisfies:
+    // every (replica, stage) runs exactly 2·mb compute slots with
+    // occupancy ≤ 1, forwards and backwards each in microbatch order, no
+    // backward before its own forward, and the in-flight forward window
+    // never exceeds the stage's 1F1B warm-up depth.
+    use commtax::datacenter::cluster::SuperclusterTopology;
+    use commtax::datacenter::node::AcceleratorSpec;
+    use commtax::workload::training::{
+        simulate_step_flows, FlowTrainOptions, ParallelismPlan, TrainMapping, TrainingConfig,
+    };
+    use commtax::workload::ModelSpec;
+    check(
+        12,
+        |rng| {
+            let dp = 1 + rng.index(2);
+            let tp = 1 + rng.index(2);
+            let pp = 1 + rng.index(3);
+            let mb = 1 + rng.index(4);
+            let overlap = rng.chance(0.5);
+            (dp, tp, pp, mb, overlap)
+        },
+        |&(dp, tp, pp, mb, overlap)| {
+            let plan = ParallelismPlan { dp, tp, pp, ep: 1, microbatches: mb };
+            let cfg = TrainingConfig {
+                model: ModelSpec::tiny_100m(),
+                plan,
+                global_batch_tokens: 2048,
+                compute_efficiency: 0.55,
+            };
+            let map = TrainMapping::build(plan, SuperclusterTopology::MultiClos, 1);
+            let opts = FlowTrainOptions { overlap_dp: overlap, dp_all_groups: true };
+            let Some(r) = simulate_step_flows(&map, &cfg, &AcceleratorSpec::b200(), opts) else {
+                return false;
+            };
+            if r.schedule.len() != dp * pp * 2 * mb {
+                return false;
+            }
+            for rep in 0..dp {
+                for s in 0..pp {
+                    let mut ops: Vec<_> = r
+                        .schedule
+                        .iter()
+                        .filter(|e| e.replica == rep && e.stage == s)
+                        .collect();
+                    ops.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+                    if ops.len() != 2 * mb {
+                        return false;
+                    }
+                    let (mut next_f, mut next_b) = (0usize, 0usize);
+                    let mut fwd_end = vec![f64::INFINITY; mb];
+                    let mut prev_end = f64::NEG_INFINITY;
+                    for op in ops {
+                        if op.start < prev_end - 1e-6 {
+                            return false; // overlapping occupancy
+                        }
+                        prev_end = op.end;
+                        if op.forward {
+                            if op.microbatch != next_f {
+                                return false;
+                            }
+                            next_f += 1;
+                            fwd_end[op.microbatch] = op.end;
+                        } else {
+                            if op.microbatch != next_b {
+                                return false;
+                            }
+                            next_b += 1;
+                            if op.start < fwd_end[op.microbatch] - 1e-6 {
+                                return false; // backward before its forward
+                            }
+                        }
+                        // 1F1B window: forwards ahead of backwards by at
+                        // most the stage's warm-up depth
+                        if next_f - next_b > (pp - s).min(mb) {
+                            return false;
+                        }
+                    }
+                    if next_f != mb || next_b != mb {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_training_byte_conservation_on_ledger() {
+    // two independent accounting paths — the trainer's per-axis counters
+    // and the fabric ledger's per-class totals — must agree for any plan:
+    // DP+TP+EP == Collective, PP == Activation, and their sum is the
+    // fabric's whole delivered payload.
+    use commtax::datacenter::cluster::SuperclusterTopology;
+    use commtax::datacenter::node::AcceleratorSpec;
+    use commtax::fabric::TrafficClass;
+    use commtax::workload::training::{
+        simulate_step_flows, FlowTrainOptions, ParallelismPlan, TrainAxis, TrainMapping, TrainingConfig,
+    };
+    use commtax::workload::ModelSpec;
+    check(
+        10,
+        |rng| {
+            let dp = 1 + rng.index(3);
+            let tp = 1 + rng.index(2);
+            let pp = 1 + rng.index(2);
+            let ep = if tp > 1 && rng.chance(0.5) { tp } else { 1 };
+            let mb = 1 + rng.index(3);
+            let moe = rng.chance(0.5);
+            let shape_i = rng.index(3);
+            (dp, tp, pp, ep, mb, moe, shape_i)
+        },
+        |&(dp, tp, pp, ep, mb, moe, shape_i)| {
+            let shape = [SuperclusterTopology::MultiClos, SuperclusterTopology::Torus3D, SuperclusterTopology::DragonFly]
+                [shape_i];
+            let plan = ParallelismPlan { dp, tp, pp, ep, microbatches: mb };
+            let cfg = TrainingConfig {
+                model: if moe { ModelSpec::tiny_moe() } else { ModelSpec::tiny_100m() },
+                plan,
+                global_batch_tokens: 2048,
+                compute_efficiency: 0.55,
+            };
+            let map = TrainMapping::build(plan, shape, 1);
+            let Some(r) = simulate_step_flows(&map, &cfg, &AcceleratorSpec::b200(), FlowTrainOptions::full())
+            else {
+                return false;
+            };
+            let ledger = map.scs().ledger();
+            let collective = r.axis_bytes(TrainAxis::Dp) + r.axis_bytes(TrainAxis::Tp) + r.axis_bytes(TrainAxis::Ep);
+            ledger.class_bytes(TrafficClass::Collective) == collective
+                && ledger.class_bytes(TrafficClass::Activation) == r.axis_bytes(TrainAxis::Pp)
+                && ledger.total_payload == collective + r.axis_bytes(TrainAxis::Pp)
+                && (plan.ep > 1 && cfg.model.experts > 1) == (r.axis_bytes(TrainAxis::Ep) > 0)
+                && (plan.dp > 1) == (r.axis_bytes(TrainAxis::Dp) > 0)
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
 fn property_supercluster_transfer_total_order() {
     // inter-cluster latency >= intra-cluster latency for the same payload
     use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};

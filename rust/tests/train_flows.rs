@@ -1,0 +1,181 @@
+//! Integration: the event-driven 3D-parallel trainer on the contended
+//! supercluster, mirroring the contracts of `tests/flow_fabric.rs`,
+//! `tests/pd_disagg.rs` and `tests/supercluster.rs`:
+//!
+//! * **parity** — on an idle fabric the event-driven step reproduces the
+//!   analytic `simulate_step` `StepReport` component by component to
+//!   <0.1 % (the closed form priced over the mapping's resolved routes);
+//! * **contention** — colocated with flooded serving tenants, the
+//!   *measured* comm fraction strictly exceeds the analytic one for all
+//!   three §3.4 parallelism mixes (DP-only, hybrid DP×TP×PP, MoE+EP);
+//! * **golden trace** — same config ⇒ byte-identical flow trace and
+//!   bit-identical reports, for the step alone and for the colocation.
+
+use commtax::datacenter::cluster::SuperclusterTopology;
+use commtax::datacenter::node::AcceleratorSpec;
+use commtax::serve::colocate::{simulate_colocate, ColocateConfig};
+use commtax::sim::Engine;
+use commtax::workload::training::{
+    launch_step_flows, simulate_step_flows, FlowTrainOptions, ParallelismPlan, TrainMapping, TrainingConfig,
+};
+use commtax::workload::{ModelSpec, Platform};
+
+fn hybrid_plan() -> ParallelismPlan {
+    ParallelismPlan { dp: 2, tp: 2, pp: 2, ep: 1, microbatches: 4 }
+}
+
+fn tiny_cfg(plan: ParallelismPlan, batch: u64) -> TrainingConfig {
+    TrainingConfig { model: ModelSpec::tiny_100m(), plan, global_batch_tokens: batch, compute_efficiency: 0.55 }
+}
+
+/// The three §3.4 parallelism mixes, shared with the `train-tax`
+/// experiment driver and the sec34 bench so the acceptance contracts
+/// asserted here are checked on exactly the shipped configurations.
+fn sec34_mixes() -> Vec<(&'static str, TrainingConfig, usize, usize)> {
+    commtax::workload::training::sec34_flow_mixes()
+}
+
+fn colocate_cfg(train: TrainingConfig, clusters: usize, accels_per_cluster: usize) -> ColocateConfig {
+    ColocateConfig::flooded(train, clusters, accels_per_cluster)
+}
+
+#[test]
+fn idle_parity_every_component_under_point1_pct() {
+    // the acceptance contract: every non-zero StepReport component of the
+    // event-driven run matches the closed form to <0.1% on an idle fabric
+    for shape in [SuperclusterTopology::MultiClos, SuperclusterTopology::DragonFly] {
+        for (name, cfg, _, _) in sec34_mixes() {
+            let map = TrainMapping::build(cfg.plan, shape, 1);
+            let accel = AcceleratorSpec::b200();
+            let ideal = map.ideal_step(&cfg, &accel).expect("routable mapping");
+            let got = simulate_step_flows(&map, &cfg, &accel, FlowTrainOptions::parity()).expect("step completes");
+            let m = got.step;
+            let check = |label: &str, measured: f64, analytic: f64| {
+                if analytic == 0.0 {
+                    assert!(measured.abs() < 1e-6, "{shape:?}/{name}/{label}: {measured} vs 0");
+                } else {
+                    let rel = (measured - analytic).abs() / analytic;
+                    assert!(rel < 1e-3, "{shape:?}/{name}/{label}: measured={measured} analytic={analytic} rel={rel}");
+                }
+            };
+            check("compute", m.compute, ideal.compute);
+            check("tp_comm", m.tp_comm, ideal.tp_comm);
+            check("pp_comm", m.pp_comm, ideal.pp_comm);
+            check("bubble", m.bubble, ideal.bubble);
+            check("dp_comm", m.dp_comm, ideal.dp_comm);
+            check("ep_comm", m.ep_comm, ideal.ep_comm);
+            check("total", m.total(), ideal.total());
+            assert_eq!(m.bytes_moved, ideal.bytes_moved, "{shape:?}/{name}");
+        }
+    }
+}
+
+#[test]
+fn colocation_comm_fraction_strictly_exceeds_analytic_all_mixes() {
+    // the acceptance contract: under colocation the measured comm
+    // fraction strictly exceeds the analytic one for all three mixes
+    let plat = Platform::composable_cxl();
+    for (name, train, clusters, accels) in sec34_mixes() {
+        let cfg = colocate_cfg(train, clusters, accels);
+        let r = simulate_colocate(&cfg, &plat).expect("plan fits");
+        // same-shape private fabric for the analytic reference
+        let map = TrainMapping::build(cfg.train.plan, cfg.serve.shape, cfg.serve.mem_trays);
+        let analytic = map.ideal_step(&cfg.train, &cfg.accel).expect("routable");
+        let first = &r.train_colocated[0];
+        assert!(
+            first.step.comm_fraction() > analytic.comm_fraction(),
+            "{name}: measured {} must strictly exceed analytic {}",
+            first.step.comm_fraction(),
+            analytic.comm_fraction()
+        );
+        assert!(first.makespan > r.train_alone.makespan, "{name}: colocated step must be slower than alone");
+        assert!(
+            r.serve_colocated.latency.percentile(99.0) > r.serve_alone.latency.percentile(99.0),
+            "{name}: serving p99 must inflate under the training job"
+        );
+    }
+}
+
+#[test]
+fn step_golden_trace_same_config_byte_identical() {
+    let cfg = tiny_cfg(hybrid_plan(), 8192);
+    let accel = AcceleratorSpec::b200();
+    let run = || {
+        let map = TrainMapping::build(cfg.plan, SuperclusterTopology::MultiClos, 1);
+        let mut eng = Engine::new();
+        let run = launch_step_flows(&map, &cfg, &accel, FlowTrainOptions::overlapped(), &mut eng);
+        eng.run();
+        let report = run.report().expect("completes");
+        (map.scs().trace_render(), report, map.scs().ledger())
+    };
+    let (ta, ra, la) = run();
+    let (tb, rb, lb) = run();
+    assert_eq!(ta, tb, "flow trace must be byte-identical");
+    assert!(!ta.is_empty());
+    assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+    assert_eq!(ra.step.total().to_bits(), rb.step.total().to_bits());
+    assert_eq!(ra.overlap_saved.to_bits(), rb.overlap_saved.to_bits());
+    assert_eq!(ra.axis_payload, rb.axis_payload);
+    assert_eq!(la.total_payload, lb.total_payload);
+    assert_eq!(la.flows, lb.flows);
+    // and the schedule replays identically
+    assert_eq!(ra.schedule.len(), rb.schedule.len());
+    for (a, b) in ra.schedule.iter().zip(rb.schedule.iter()) {
+        assert_eq!(a.start.to_bits(), b.start.to_bits());
+        assert_eq!((a.replica, a.stage, a.microbatch, a.forward), (b.replica, b.stage, b.microbatch, b.forward));
+    }
+}
+
+#[test]
+fn colocation_golden_trace_same_config_byte_identical() {
+    let cfg = colocate_cfg(tiny_cfg(hybrid_plan(), 8192), 2, 4);
+    let plat = Platform::composable_cxl();
+    let a = simulate_colocate(&cfg, &plat).expect("fits");
+    let b = simulate_colocate(&cfg, &plat).expect("fits");
+    assert_eq!(a.trace, b.trace, "colocated trace must be byte-identical");
+    assert_eq!(a.ledger.total_payload, b.ledger.total_payload);
+    assert_eq!(a.inter_cluster_bytes, b.inter_cluster_bytes);
+    assert_eq!(a.mean_step_ns().to_bits(), b.mean_step_ns().to_bits());
+    assert_eq!(
+        a.serve_colocated.latency.sum().to_bits(),
+        b.serve_colocated.latency.sum().to_bits(),
+        "serving latencies must be bit-identical"
+    );
+}
+
+#[test]
+fn training_flows_land_on_the_shared_ledger() {
+    // training alone: the fabric's class totals decompose into exactly the
+    // trainer's per-axis counters (cross-checked accounting paths)
+    use commtax::fabric::TrafficClass;
+    use commtax::workload::training::TrainAxis;
+    let cfg = tiny_cfg(hybrid_plan(), 8192);
+    let map = TrainMapping::build(cfg.plan, SuperclusterTopology::MultiClos, 1);
+    let r = simulate_step_flows(&map, &cfg, &AcceleratorSpec::b200(), FlowTrainOptions::full()).expect("completes");
+    let ledger = map.scs().ledger();
+    let collective =
+        r.axis_bytes(TrainAxis::Dp) + r.axis_bytes(TrainAxis::Tp) + r.axis_bytes(TrainAxis::Ep);
+    assert_eq!(ledger.class_bytes(TrafficClass::Collective), collective);
+    assert_eq!(ledger.class_bytes(TrafficClass::Activation), r.axis_bytes(TrainAxis::Pp));
+    assert_eq!(ledger.total_payload, collective + r.axis_bytes(TrainAxis::Pp));
+    // expected closed-form byte counts per axis
+    let plan = cfg.plan;
+    let micro_tokens = cfg.global_batch_tokens as f64 / plan.dp as f64 / plan.microbatches as f64;
+    let act = cfg.model.tp_slab_bytes(micro_tokens);
+    let layers = cfg.model.layers_per_stage(plan.pp);
+    let tp_rounds = 4 * layers * plan.microbatches * 2 * (plan.tp - 1);
+    assert_eq!(
+        r.axis_bytes(TrainAxis::Tp),
+        (plan.dp * plan.pp * plan.tp * tp_rounds) as u64 * act.div_ceil(plan.tp as u64)
+    );
+    assert_eq!(
+        r.axis_bytes(TrainAxis::Pp),
+        (plan.dp * 2 * plan.microbatches * (plan.pp - 1)) as u64 * act
+    );
+    let grad_chunk = cfg.model.grad_shard_bytes(plan.tp, plan.pp).div_ceil(plan.dp as u64);
+    // all-groups mode: pp×tp rings, each dp chains × 2(dp-1) rounds
+    assert_eq!(
+        r.axis_bytes(TrainAxis::Dp),
+        (plan.pp * plan.tp * plan.dp * 2 * (plan.dp - 1)) as u64 * grad_chunk
+    );
+}
