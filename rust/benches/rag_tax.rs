@@ -1,0 +1,9 @@
+//! Bench target for the rag-tax experiment: the Fig 33/34 retrieval
+//! pipeline priced by the analytic closed forms vs measured as dependent
+//! routed flows on the contended fabric (idle parity, CXL-direct vs
+//! software-copy movement, hot-node promotion, RAG/serving colocation).
+
+fn main() {
+    let (table, _ns) = commtax::benchkit::time_once("rag-tax", commtax::experiments::rag_tax);
+    table.print();
+}

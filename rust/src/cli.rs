@@ -275,6 +275,7 @@ mod tests {
         assert_eq!(ids.len(), crate::experiments::registry().len());
         assert!(ids.contains(&"train-tax"));
         assert!(ids.contains(&"comm-tax"));
+        assert!(ids.contains(&"rag-tax"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use crate::fabric::flow::{CommTaxLedger, TrafficClass};
 use crate::mem::hierarchy::HierStats;
+use crate::workload::rag::RagFlowReport;
 use crate::workload::training::{FlowStepReport, TrainAxis};
 use std::collections::BTreeMap;
 
@@ -108,6 +109,29 @@ impl Telemetry {
         self.gauge_max(&format!("{prefix}.step.comm_fraction_peak"), report.step.comm_fraction());
         self.gauge(&format!("{prefix}.step.bubble_fraction"), report.step.bubble / report.step.total());
         self.gauge(&format!("{prefix}.step.overlap_saved_ns"), report.overlap_saved);
+    }
+
+    /// Fold one event-driven RAG run into the registry under `prefix`
+    /// (e.g. `"rag"`): per-phase flow/byte counters (the retrieval-tax
+    /// attribution the `rag-tax` table reports) plus elapsed/inflation
+    /// gauges. Counters accumulate across runs; peak gauges keep their
+    /// high-water mark.
+    pub fn record_rag(&mut self, prefix: &str, report: &RagFlowReport) {
+        self.incr(&format!("{prefix}.search.flows"), report.search.flows);
+        self.incr(&format!("{prefix}.search.pool_bytes"), report.pool_hop_bytes);
+        self.incr(&format!("{prefix}.search.local_bytes"), report.local_hop_bytes);
+        self.incr(&format!("{prefix}.generation.flows"), report.generation.flows);
+        self.incr(&format!("{prefix}.generation.pool_bytes"), report.generation.bytes);
+        self.incr(&format!("{prefix}.promotions"), report.promotions);
+        self.gauge(&format!("{prefix}.search.elapsed_ns"), report.search.elapsed);
+        self.gauge(&format!("{prefix}.generation.elapsed_ns"), report.generation.elapsed);
+        self.gauge_max(&format!("{prefix}.search.inflation_peak"), report.search.inflation());
+        self.gauge_max(&format!("{prefix}.generation.inflation_peak"), report.generation.inflation());
+        self.gauge_max(&format!("{prefix}.search.contention.p99_ns"), report.search.contention.percentile(99.0));
+        self.gauge_max(
+            &format!("{prefix}.generation.contention.p99_ns"),
+            report.generation.contention.percentile(99.0),
+        );
     }
 
     /// Read a counter (0 when absent).
@@ -255,6 +279,26 @@ mod tests {
         assert_eq!(t.counter("train.steps"), 2);
         assert_eq!(t.counter("train.payload.dp"), 2 * r.axis_bytes(TrainAxis::Dp));
         assert!(t.report().contains("train.step.makespan_peak_ns"));
+    }
+
+    #[test]
+    fn rag_run_folds_into_registry() {
+        use crate::workload::rag::{simulate_rag_flows, RagConfig, RagFlowOptions};
+        use crate::workload::Platform;
+        let cfg = RagConfig { hops: 16, queries: 1, gen_tokens: 4, ..RagConfig::flow_demo() };
+        let r = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &Platform::composable_cxl());
+        let mut t = Telemetry::new();
+        t.record_rag("rag", &r);
+        assert_eq!(t.counter("rag.search.flows"), r.search.flows);
+        assert_eq!(t.counter("rag.search.pool_bytes"), cfg.queries * cfg.hops * cfg.hop_bytes());
+        assert_eq!(t.counter("rag.generation.flows"), r.generation.flows);
+        assert!(t.gauge_value("rag.search.elapsed_ns").unwrap() > 0.0);
+        // idle run: the inflation peak sits at 1
+        assert!((t.gauge_value("rag.search.inflation_peak").unwrap() - 1.0).abs() < 1e-6);
+        // a second run accumulates the counters
+        t.record_rag("rag", &r);
+        assert_eq!(t.counter("rag.search.flows"), 2 * r.search.flows);
+        assert!(t.report().contains("rag.search.pool_bytes"));
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!   onto concrete cluster routes) and the paper's workloads ([`workload`]:
 //!   LLM training/inference, RAG, Graph-RAG, DLRM, MPI PIC/CFD, collective
 //!   communication — analytic *and* event-driven collectives behind the
-//!   [`workload::collectives::CommCost`] surface).
+//!   [`workload::collectives::CommCost`] surface, and a dual
+//!   analytic/flow RAG pipeline whose ANN hops are dependent routed flows
+//!   over a [`mem::hierarchy::HierarchicalMemory`] corpus).
 //! * **System** — the composable-resource coordinator ([`coordinator`]:
 //!   orchestrator, router, batcher, scheduler, placement, telemetry with
 //!   fabric-ledger folding), the optional PJRT runtime that executes

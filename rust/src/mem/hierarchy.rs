@@ -144,6 +144,14 @@ pub struct HierarchicalMemory {
     fabric: FabricSim,
     nodes: Rc<Vec<NodeId>>,
     pool_node: NodeId,
+    /// Fixed protocol-conversion cost (ns) every fabric-borne operation
+    /// pays on top of its route — charged on latency AND ideal so
+    /// contention stays pure queueing. Zero on private fabrics; hierarchies
+    /// attached to a supercluster set it to the bridge conversion unit so
+    /// their flows price exactly like
+    /// [`crate::datacenter::cluster::SuperclusterSim::submit`] traffic on
+    /// the same route.
+    conversion_ns: f64,
     st: Rc<RefCell<HierState>>,
 }
 
@@ -161,14 +169,69 @@ impl std::fmt::Debug for HierarchicalMemory {
 }
 
 impl HierarchicalMemory {
-    /// Build a hierarchy over its own star fabric: `accels` accelerator
-    /// endpoints plus one pool tray behind a mid-of-rack switch, every edge
-    /// carrying the hierarchy's tier-2 pool link spec — the 2-hop route
-    /// then prices exactly like `tiers.pool.links` (closed-form parity for
-    /// the [`TieredMemory::proposed`] hierarchy).
+    /// Build a hierarchy over its own private fabric: `accels` accelerator
+    /// endpoints plus one pool tray behind a switch chain whose shape
+    /// mirrors the analytic pool path — the accel→tray route crosses
+    /// exactly `tiers.pool.links.len()` edges (1-link paths attach the
+    /// accelerators straight to the tray), and edge *i* along the route
+    /// carries `tiers.pool.links[i]`'s spec, so the route prices exactly
+    /// like the analytic path even for heterogeneous link lists
+    /// (closed-form parity for any hierarchy with at least one pool link,
+    /// including the 3-link RDMA baseline — not just the 2-link
+    /// [`TieredMemory::proposed`] shape the old single-switch star
+    /// matched).
     pub fn new(accels: usize, local_capacity: u64, tiers: TieredMemory) -> Self {
-        let link = tiers.pool.links.first().cloned().unwrap_or_else(LinkSpec::cxl_lightweight_mem);
-        let fabric = FabricSim::new(Topology::star(accels + 1), link, RoutingPolicy::Hbr);
+        let links: Vec<LinkSpec> = if tiers.pool.links.is_empty() {
+            vec![LinkSpec::cxl_lightweight_mem()]
+        } else {
+            tiers.pool.links.clone()
+        };
+        let hops = links.len();
+        let n_switch = hops - 1;
+        let mut topo = Topology::empty(crate::fabric::topology::TopologyKind::Custom);
+        let switches: Vec<NodeId> =
+            (0..n_switch).map(|_| topo.add_node(crate::fabric::topology::NodeKind::Switch)).collect();
+        for w in switches.windows(2) {
+            topo.add_link(w[0], w[1]);
+        }
+        let mut accel_ids = Vec::with_capacity(accels);
+        for _ in 0..accels {
+            accel_ids.push(topo.add_node(crate::fabric::topology::NodeKind::Endpoint));
+        }
+        let tray = topo.add_node(crate::fabric::topology::NodeKind::Endpoint);
+        match (switches.first(), switches.last()) {
+            (Some(&first), Some(&last)) => {
+                for &e in &accel_ids {
+                    topo.add_link(e, first);
+                }
+                topo.add_link(tray, last);
+            }
+            _ => {
+                for &e in &accel_ids {
+                    topo.add_link(e, tray);
+                }
+            }
+        }
+        // Node-id layout: switches are 0..n_switch, then accels, then the
+        // tray — so an edge's route position (and its link spec) can be
+        // recovered from its endpoints' ids alone.
+        let fabric = FabricSim::new_with(topo, RoutingPolicy::Hbr, move |e, t| {
+            let (a, b) = t.edge(e);
+            let (lo, hi) = (a.min(b), a.max(b));
+            if hi < n_switch {
+                // switch(lo) ↔ switch(lo+1): route edge lo+1
+                links[lo + 1].clone()
+            } else if lo >= n_switch && hi == n_switch + accels {
+                // accel straight to the tray (single-link path)
+                links[0].clone()
+            } else if hi == n_switch + accels {
+                // tray off the last switch: the path's final link
+                links[hops - 1].clone()
+            } else {
+                // accel off the first switch: the path's first link
+                links[0].clone()
+            }
+        });
         let eps = fabric.endpoints();
         let nodes = eps[..accels].to_vec();
         let pool_node = eps[accels];
@@ -194,7 +257,17 @@ impl HierarchicalMemory {
             regions: BTreeMap::new(),
             stats: HierStats::new(),
         };
-        HierarchicalMemory { fabric, nodes: Rc::new(nodes), pool_node, st: Rc::new(RefCell::new(st)) }
+        let (nodes, st) = (Rc::new(nodes), Rc::new(RefCell::new(st)));
+        HierarchicalMemory { fabric, nodes, pool_node, conversion_ns: 0.0, st }
+    }
+
+    /// Charge every fabric-borne operation a fixed `ns` protocol-conversion
+    /// surcharge (on latency *and* ideal) — the bridge conversion unit when
+    /// the hierarchy is attached to a supercluster fabric, so its flows
+    /// price like tenant traffic crossing the same bridge.
+    pub fn with_conversion(mut self, ns: f64) -> Self {
+        self.conversion_ns = ns;
+        self
     }
 
     /// The fabric the hierarchy's flows ride (shared handle).
@@ -601,6 +674,10 @@ impl HierarchicalMemory {
         done: impl FnOnce(&mut Engine, MemDone) + 'static,
     ) {
         let start = eng.now();
+        // the fixed conversion surcharge rides with the source-side delay:
+        // it lands in both `latency` and `ideal`, so contention stays pure
+        // queueing exactly as it does for supercluster submissions
+        let pre = pre + self.conversion_ns;
         let st = self.st.clone();
         if !self.fabric.reachable(src, dst) {
             // unroutable fabric (disconnected custom topology): charge the
@@ -755,6 +832,50 @@ mod tests {
             fetch.latency
         );
         assert!(fetch.latency - fetch.ideal < analytic_r * 0.01, "idle op must pay no tax");
+    }
+
+    #[test]
+    fn conversion_surcharge_lands_in_latency_and_ideal() {
+        // supercluster-attached hierarchies pay the bridge conversion on
+        // every fabric op — in both latency and ideal, never as contention
+        let tiers = proposed(GIB, 4 * GIB);
+        let base = HierarchicalMemory::new(1, 0, tiers.clone());
+        let charged = HierarchicalMemory::new(1, 0, tiers).with_conversion(500.0);
+        let bytes = 1u64 << 20;
+        let mut eng = Engine::new();
+        assert!(base.write_new(&mut eng, 1, bytes, 0, TrafficClass::KvCache, |_, _| {}));
+        eng.run();
+        let a = base.read_sync(&mut eng, 1, TrafficClass::KvCache).expect("base fetch");
+        let mut eng2 = Engine::new();
+        assert!(charged.write_new(&mut eng2, 1, bytes, 0, TrafficClass::KvCache, |_, _| {}));
+        eng2.run();
+        let b = charged.read_sync(&mut eng2, 1, TrafficClass::KvCache).expect("charged fetch");
+        assert!((b.latency - a.latency - 500.0).abs() < 1e-6, "latency carries the surcharge");
+        assert!((b.ideal - a.ideal - 500.0).abs() < 1e-6, "ideal carries it too");
+        assert!(b.latency - b.ideal < 1e-6, "the surcharge is not contention");
+    }
+
+    #[test]
+    fn idle_parity_holds_for_three_link_rdma_pool_path() {
+        // the conventional baseline's pool path crosses 3 IB links; the
+        // private fabric must route accel→tray over exactly 3 edges or the
+        // flow model under-counts one hop latency (PR 5 regression)
+        let tiers = TieredMemory::conventional(GIB);
+        let mut tiers_with_pool = tiers.clone();
+        tiers_with_pool.pool.capacity = 4 * GIB; // baseline pool has 0 cap
+        assert_eq!(tiers_with_pool.pool.links.len(), 3);
+        let hier = HierarchicalMemory::new(2, 0, tiers_with_pool.clone());
+        let bytes = 2u64 << 20;
+        let mut eng = Engine::new();
+        assert!(hier.write_new(&mut eng, 1, bytes, 0, TrafficClass::KvCache, |_, _| {}));
+        eng.run();
+        let fetch = hier.read_sync(&mut eng, 1, TrafficClass::KvCache).expect("fetch done");
+        let analytic = tiers_with_pool.read(Tier::Pool, bytes);
+        assert!(
+            (fetch.latency - analytic).abs() / analytic < 0.001,
+            "3-link fetch {} vs analytic {analytic}",
+            fetch.latency
+        );
     }
 
     #[test]

@@ -20,13 +20,17 @@
 //! links, and the router consumes measured per-cluster fabric utilization.
 //! The [`colocate`] submodule co-schedules an event-driven 3D-parallel
 //! training job ([`crate::workload::training`]) with those tenants on one
-//! fabric and measures the colocation tax from both sides.
+//! fabric and measures the colocation tax from both sides; [`rag_colocate`]
+//! does the same for the event-driven RAG pipeline
+//! ([`crate::workload::rag::launch_rag_flows`]) — the retrieval tax.
 
 pub mod colocate;
 pub mod pd;
+pub mod rag_colocate;
 pub mod supercluster;
 
 pub use colocate::{simulate_colocate, ColocateConfig, ColocateReport};
+pub use rag_colocate::{simulate_rag_colocate, RagColocateConfig, RagColocateReport};
 pub use supercluster::{simulate_supercluster, SuperServeConfig, SuperServeReport};
 
 use crate::coordinator::batcher::{Batch, DynamicBatcher};
@@ -36,7 +40,7 @@ use crate::fabric::link::LinkSpec;
 use crate::fabric::routing::RoutingPolicy;
 use crate::fabric::topology::Topology;
 use crate::sim::{Engine, Rng, Summary};
-use crate::workload::inference::{decode_step_time, prefill_time, KvPlacement};
+use crate::workload::inference::{decode_step_time, prefill_time, remote_share, KvPlacement};
 use crate::workload::{ModelSpec, Platform};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -212,7 +216,7 @@ pub fn simulate_serving(cfg: &ServeConfig, platform: &Platform) -> ServeReport {
     let platform = platform.clone();
     let mut exec = move |batch: usize| {
         let b = batch as u64;
-        let prefill = prefill_time(&model, prompt * b, &platform);
+        let prefill = prefill_time(&model, prompt * b, kv, &platform);
         let decode = decode_step_time(&model, b, prompt + gen / 2, kv, &platform) * gen as f64;
         prefill + decode
     };
@@ -256,7 +260,9 @@ struct ContendedRun {
 /// onto idle clusters, each dispatched batch prefetches its remote KV
 /// shard from a pooled tier-2 tray and writes activations back as real
 /// flows on a shared single-hop Clos ([`FabricSim`]), and a cluster is
-/// busy until its batch's flows *and* compute finish. Batches running
+/// busy until its batch's flows *and* compute finish (the flows: remote-KV
+/// prefetch, the prompt KV's pooled share written back at prefill, and the
+/// activation writeback). Batches running
 /// concurrently on different clusters share the pool's links, so their
 /// transfer times — and the request latencies built on them — include
 /// genuine fabric queueing, and the router's least-loaded choice sees live
@@ -347,8 +353,9 @@ fn dispatch_waiting(st: &Rc<RefCell<ContendedRun>>, sim: &FabricSim, eng: &mut E
 }
 
 /// Dispatch batch `k` on cluster `c` at the engine's current time: price
-/// its compute, then issue the KV prefetch and activation writeback as
-/// flows competing with everything else in flight.
+/// its compute, then issue the KV prefetch, the prefill KV pool-write and
+/// the activation writeback as flows competing with everything else in
+/// flight.
 fn launch_batch(
     st: &Rc<RefCell<ContendedRun>>,
     sim: &FabricSim,
@@ -358,21 +365,27 @@ fn launch_batch(
     k: usize,
 ) {
     let now = eng.now();
-    let (kv_bytes, act_bytes) = {
+    let (kv_bytes, prefill_kv_bytes, act_bytes) = {
         let mut s = st.borrow_mut();
         let b = s.batches[k].ids.len() as u64;
-        let prefill = prefill_time(&env.model, env.prompt * b, &env.platform);
-        // KV is local during decode: the remote fraction is moved by the
-        // fabric flow below, not by the tier model (no double charge).
+        // KV is local in the tier model: the remote fraction is moved by
+        // the fabric flows below, not by the tier math (no double charge).
+        let prefill = prefill_time(&env.model, env.prompt * b, KvPlacement::Local, &env.platform);
         let decode =
             decode_step_time(&env.model, b, env.prompt + env.gen / 2, KvPlacement::Local, &env.platform) * env.gen as f64;
-        let kv_bytes = ((env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b) as f64 * env.remote_frac) as u64;
+        let (_, kv_bytes) =
+            remote_share(env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b, env.remote_frac);
+        // the prompt KV's pooled share is *produced* at prefill and must
+        // land on the tray — the write-path twin of the prefetch read
+        // (exactly the cost the analytic prefill_time charges under
+        // KvPlacement::Remote)
+        let (_, prefill_kv_bytes) = remote_share(env.model.kv_bytes_per_token() * env.prompt * b, env.remote_frac);
         let act_bytes = env.model.activation_bytes_per_token() * b;
         s.start[k] = now;
         s.compute[k] = prefill + decode;
         s.fabric_end[k] = now;
-        s.pending_flows[k] = if kv_bytes > 0 { 2 } else { 1 };
-        (kv_bytes, act_bytes)
+        s.pending_flows[k] = 1 + u8::from(kv_bytes > 0) + u8::from(prefill_kv_bytes > 0);
+        (kv_bytes, prefill_kv_bytes, act_bytes)
     };
     let front = env.fronts[c];
     if kv_bytes > 0 {
@@ -381,6 +394,16 @@ fn launch_batch(
             flow_done(&st2, &sim2, e, &env2, c, k, d.arrival);
         });
         if kv.is_none() {
+            flow_done(st, sim, eng, env, c, k, now);
+        }
+    }
+    if prefill_kv_bytes > 0 {
+        let (st2, sim2, env2) = (st.clone(), sim.clone(), env.clone());
+        let tr = Transfer::new(front, env.pool, prefill_kv_bytes, TrafficClass::KvCache);
+        let w = sim.submit_with(eng, tr, move |e, d| {
+            flow_done(&st2, &sim2, e, &env2, c, k, d.arrival);
+        });
+        if w.is_none() {
             flow_done(st, sim, eng, env, c, k, now);
         }
     }
@@ -507,7 +530,11 @@ mod tests {
             compute_only.latency.mean()
         );
         // the ledger attributes traffic per class and per link
-        assert_eq!(ledger.flows, 2 * contended.batches, "KV prefetch + activation writeback per batch");
+        assert_eq!(
+            ledger.flows,
+            3 * contended.batches,
+            "KV prefetch + prefill KV pool-write + activation writeback per batch"
+        );
         assert!(!ledger.per_link.is_empty());
         assert!(ledger.class_bytes(crate::fabric::TrafficClass::KvCache) > 0);
         assert!(ledger.class_bytes(crate::fabric::TrafficClass::Activation) > 0);

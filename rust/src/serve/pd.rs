@@ -159,7 +159,9 @@ pub fn simulate_pd_fabric(
         prompt: cfg.prompt_tokens,
         gen: cfg.gen_tokens,
         disagg: disaggregated,
-        prefill_cost: prefill_time(&cfg.model, cfg.prompt_tokens, platform),
+        // the KV handoff to the pool is the two routed flows below, so the
+        // prefill engine itself writes tier-1 only
+        prefill_cost: prefill_time(&cfg.model, cfg.prompt_tokens, KvPlacement::Local, platform),
         handoff_bytes,
         hier,
         arrivals: arrivals.clone(),

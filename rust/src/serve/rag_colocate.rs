@@ -1,0 +1,190 @@
+//! RAG / serving colocation on one contended CXL-over-XLink supercluster —
+//! the retrieval-side counterpart of [`super::colocate`]: the paper
+//! measures its largest CXL wins on RAG (Fig 33d/34d) against a fabric the
+//! retrieval job *owns*, yet a production pool tray serves ANN pointer
+//! chases and multi-tenant KV prefetches at once (FengHuang's
+//! memory-orchestration framing; the Photonic Fabric pooled-memory serving
+//! argument — PAPERS.md).
+//!
+//! [`simulate_rag_colocate`] runs three deterministic simulations on
+//! fabrics of identical shape:
+//!
+//! 1. **RAG alone** — the event-driven pipeline of
+//!    [`crate::workload::rag::launch_rag_flows`], its corpus hierarchy
+//!    attached to a private supercluster's fabric (accel ↔ tier-2 tray
+//!    across a bridge);
+//! 2. **serving alone** — the multi-tenant
+//!    [`super::supercluster::simulate_supercluster`] pipeline;
+//! 3. **colocated** — both on *one* supercluster and one engine: every
+//!    dependent ANN hop and every generation KV flow shares bridge, spine
+//!    and tray links with the tenants' KV-prefetch / activation-writeback /
+//!    state-sync flows.
+//!
+//! The report puts search/generation-phase inflation (retrieval's view)
+//! next to p99-latency inflation (serving's view) over one byte-attributed
+//! ledger: RAG's hops are [`TrafficClass::Parameter`], its KV movement
+//! [`TrafficClass::KvCache`], the tenants' traffic its usual classes.
+//! Same config ⇒ byte-identical trace (`tests/rag_flows.rs` locks the
+//! golden-trace contract down).
+
+use super::supercluster::{build_scs, launch_supercluster, SuperServeConfig, SuperServeReport};
+use crate::datacenter::cluster::SuperclusterSim;
+use crate::fabric::flow::CommTaxLedger;
+#[allow(unused_imports)] // doc link
+use crate::fabric::flow::TrafficClass;
+use crate::mem::hierarchy::HierarchicalMemory;
+use crate::sim::Engine;
+use crate::workload::rag::{launch_rag_flows, RagConfig, RagFlowOptions, RagFlowReport};
+use crate::workload::Platform;
+
+/// One RAG/serving colocation scenario.
+#[derive(Clone, Debug)]
+pub struct RagColocateConfig {
+    /// The serving tenants (also defines the supercluster shape).
+    pub serve: SuperServeConfig,
+    /// The retrieval pipeline sharing the fabric.
+    pub rag: RagConfig,
+    /// Event-driven RAG knobs (corpus segmentation, promotion, seed).
+    pub opts: RagFlowOptions,
+}
+
+impl RagColocateConfig {
+    /// The canonical flooded scenario: three serving tenants bursting 24
+    /// requests each at a 30 µs mean inter-arrival while the
+    /// [`RagConfig::flow_demo`] pipeline chases pointers through the same
+    /// tray. One definition shared by the `rag-tax` experiment driver, the
+    /// bench, and the acceptance tests in `tests/rag_flows.rs`.
+    pub fn flooded() -> RagColocateConfig {
+        let serve = SuperServeConfig { arrival_mean: 30_000.0, requests_per_tenant: 24, ..Default::default() };
+        RagColocateConfig { serve, rag: RagConfig::flow_demo(), opts: RagFlowOptions::parity() }
+    }
+}
+
+impl Default for RagColocateConfig {
+    fn default() -> Self {
+        Self::flooded()
+    }
+}
+
+/// Measured outcome of one RAG/serving colocation scenario.
+#[derive(Debug)]
+pub struct RagColocateReport {
+    /// Retrieval with the fabric to itself.
+    pub rag_alone: RagFlowReport,
+    /// Retrieval while the tenants share bridges, spines and trays.
+    pub rag_colocated: RagFlowReport,
+    /// Serving with the fabric to itself.
+    pub serve_alone: SuperServeReport,
+    /// Serving while the retrieval pipeline shares the fabric.
+    pub serve_colocated: SuperServeReport,
+    /// The colocated fabric's communication-tax ledger (both jobs).
+    pub ledger: CommTaxLedger,
+    /// Deterministic colocated trace (scheduler decisions + all flows).
+    pub trace: String,
+}
+
+impl RagColocateReport {
+    /// Search-phase wall-time inflation over RAG alone (> 1 when the
+    /// tenants genuinely contend — the acceptance contract).
+    pub fn search_inflation(&self) -> f64 {
+        self.rag_colocated.search.elapsed / self.rag_alone.search.elapsed
+    }
+
+    /// Generation-phase wall-time inflation over RAG alone.
+    pub fn generation_inflation(&self) -> f64 {
+        self.rag_colocated.generation.elapsed / self.rag_alone.generation.elapsed
+    }
+
+    /// Serving p99 latency inflation while colocated with retrieval.
+    pub fn serving_p99_inflation(&self) -> f64 {
+        self.serve_colocated.latency.percentile(99.0) / self.serve_alone.latency.percentile(99.0)
+    }
+}
+
+/// Attach a RAG corpus hierarchy to a supercluster's fabric: the retrieval
+/// accelerator is the last accel of the last serving cluster, its pool the
+/// last tier-2 tray, so hops cross a bridge exactly like tenant KV
+/// prefetches do — including the bridge protocol-conversion surcharge
+/// ([`HierarchicalMemory::with_conversion`] set to the same
+/// `conversion_between` unit `SuperclusterSim::submit` charges). Corpus
+/// sizing comes from the shared [`crate::workload::rag::corpus_tiers`]
+/// rule.
+fn attach_rag_hier(
+    scs: &SuperclusterSim,
+    cfg: &RagColocateConfig,
+    platform: &Platform,
+) -> HierarchicalMemory {
+    let tiers = crate::workload::rag::corpus_tiers(&cfg.rag, &cfg.opts, platform);
+    let accel = scs.accel(cfg.serve.clusters - 1, cfg.serve.accels_per_cluster - 1);
+    let tray = scs.tray(scs.tray_count() - 1);
+    HierarchicalMemory::with_fabric(scs.fabric_sim().clone(), vec![accel], tray, cfg.opts.local_budget, tiers)
+        .with_conversion(scs.conversion_between(accel, tray))
+}
+
+/// Run the three-way RAG/serving colocation comparison.
+pub fn simulate_rag_colocate(cfg: &RagColocateConfig, platform: &Platform) -> RagColocateReport {
+    // 1) RAG alone on a private fabric of the same shape
+    let rag_alone = {
+        let scs = build_scs(&cfg.serve);
+        let hier = attach_rag_hier(&scs, cfg, platform);
+        let mut eng = Engine::new();
+        let run = launch_rag_flows(&cfg.rag, cfg.opts, platform, &hier, 0, &mut eng);
+        eng.run();
+        run.report().expect("rag-alone run completes")
+    };
+    // 2) serving alone on a private fabric of the same shape
+    let serve_alone = {
+        let scs = build_scs(&cfg.serve);
+        let mut eng = Engine::new();
+        let run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+        eng.run();
+        run.finish(&scs).0
+    };
+    // 3) both on one fabric, one engine
+    let scs = build_scs(&cfg.serve);
+    let hier = attach_rag_hier(&scs, cfg, platform);
+    let mut eng = Engine::new();
+    let serve_run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+    let rag_run = launch_rag_flows(&cfg.rag, cfg.opts, platform, &hier, 0, &mut eng);
+    eng.run();
+    let (serve_colocated, ledger, trace) = serve_run.finish(&scs);
+    let rag_colocated = rag_run.report().expect("colocated rag run completes");
+    RagColocateReport { rag_alone, rag_colocated, serve_alone, serve_colocated, ledger, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::flow::TrafficClass;
+
+    #[test]
+    fn colocation_taxes_both_sides() {
+        let cfg = RagColocateConfig::flooded();
+        let r = simulate_rag_colocate(&cfg, &Platform::composable_cxl());
+        // retrieval pays for the tenants: strictly positive search-phase
+        // inflation, visible per-op in the contention ledger
+        assert!(r.search_inflation() > 1.0, "search inflation={}", r.search_inflation());
+        assert!(r.rag_colocated.search.contention.max() > 0.0, "hops must queue behind tenant flows");
+        // and the tenants pay for retrieval (p99, strictly)
+        assert!(r.serving_p99_inflation() > 1.0, "serving p99 inflation={}", r.serving_p99_inflation());
+        // one ledger attributes both jobs' traffic
+        assert!(r.ledger.class_bytes(TrafficClass::Parameter) > 0, "ANN hops + corpus placement");
+        assert!(r.ledger.class_bytes(TrafficClass::KvCache) > 0, "tenant prefetches + RAG context KV");
+        assert!(r.ledger.class_bytes(TrafficClass::Activation) > 0, "tenant writebacks");
+        assert!(!r.trace.is_empty());
+    }
+
+    #[test]
+    fn alone_baseline_is_idle_per_op() {
+        let cfg = RagColocateConfig::flooded();
+        let scs = build_scs(&cfg.serve);
+        let hier = attach_rag_hier(&scs, &cfg, &Platform::composable_cxl());
+        let mut eng = Engine::new();
+        let run = launch_rag_flows(&cfg.rag, cfg.opts, &Platform::composable_cxl(), &hier, 0, &mut eng);
+        eng.run();
+        let r = run.report().expect("completes");
+        // nothing else on the fabric: every hop pays exactly its route
+        assert!(r.search.contention.max() <= 1e-6);
+        assert!((r.search.inflation() - 1.0).abs() < 1e-6);
+    }
+}

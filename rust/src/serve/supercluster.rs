@@ -9,6 +9,10 @@
 //! * a **KV prefetch** ([`TrafficClass::KvCache`]) from the tenant's
 //!   tier-2 memory tray into the serving cluster — crossing a bridge and
 //!   paying the §6.2 protocol conversion;
+//! * a **prefill KV pool-write** ([`TrafficClass::KvCache`]) carrying the
+//!   prompt KV's pooled share back to the tray (the write-path twin of the
+//!   prefetch, matching the analytic `prefill_time` under remote
+//!   placement);
 //! * an **activation writeback** ([`TrafficClass::Activation`]) from the
 //!   cluster back to the tray;
 //! * periodically, an inter-cluster **state-sync**
@@ -39,7 +43,7 @@ use crate::coordinator::router::{Router, RoutingStrategy};
 use crate::datacenter::cluster::{Supercluster, SuperclusterSim, SuperclusterTopology, XLinkCluster};
 use crate::fabric::flow::{CommTaxLedger, TrafficClass};
 use crate::sim::{Engine, Summary};
-use crate::workload::inference::{decode_step_time, prefill_time, KvPlacement};
+use crate::workload::inference::{decode_step_time, prefill_time, remote_share, KvPlacement};
 use crate::workload::{ModelSpec, Platform};
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -339,19 +343,25 @@ fn dispatch_waiting(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine) 
 
 /// Dispatch batch `k` on cluster `c`: price its compute (KV local once
 /// fetched — the flows below charge the remote movement exactly once),
-/// then issue its KV prefetch, activation writeback and, on the sync
-/// cadence, the inter-cluster state exchange as contending flows.
+/// then issue its KV prefetch, prefill KV pool-write, activation writeback
+/// and, on the sync cadence, the inter-cluster state exchange as
+/// contending flows.
 fn launch_batch(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine, c: usize, k: usize) {
     let now = eng.now();
-    let (tenant, kv_bytes, act_bytes, sync_bytes, front) = {
+    let (tenant, kv_bytes, prefill_kv_bytes, act_bytes, sync_bytes, front) = {
         let mut s = st.borrow_mut();
         let tenant = s.batches[k].tenant;
         let b = s.batches[k].ids.len() as u64;
-        let prefill = prefill_time(&env.model, env.prompt * b, &env.platform);
+        // KV local in the tier model: the remote share moves as the KV
+        // prefetch flow below, not through the analytic pool path.
+        let prefill = prefill_time(&env.model, env.prompt * b, KvPlacement::Local, &env.platform);
         let ctx_len = env.prompt + env.gen / 2;
         let decode = decode_step_time(&env.model, b, ctx_len, KvPlacement::Local, &env.platform) * env.gen as f64;
-        let kv_bytes =
-            ((env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b) as f64 * env.remote_frac) as u64;
+        let (_, kv_bytes) =
+            remote_share(env.model.kv_bytes_per_token() * (env.prompt + env.gen / 2) * b, env.remote_frac);
+        // the prompt KV's pooled share is produced at prefill and must
+        // land on the tray — the write-path twin of the prefetch read
+        let (_, prefill_kv_bytes) = remote_share(env.model.kv_bytes_per_token() * env.prompt * b, env.remote_frac);
         let act_bytes = env.model.activation_bytes_per_token() * b;
         let sync_bytes = if env.sync_every > 0 && env.clusters > 1 && s.batches[k].ordinal % env.sync_every == 0 {
             env.sync_bytes
@@ -363,8 +373,9 @@ fn launch_batch(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine, c: u
         s.start[k] = now;
         s.compute[k] = prefill + decode;
         s.fabric_end[k] = now;
-        s.pending_flows[k] = 1 + u8::from(kv_bytes > 0) + u8::from(sync_bytes > 0);
-        (tenant, kv_bytes, act_bytes, sync_bytes, front)
+        s.pending_flows[k] =
+            1 + u8::from(kv_bytes > 0) + u8::from(prefill_kv_bytes > 0) + u8::from(sync_bytes > 0);
+        (tenant, kv_bytes, prefill_kv_bytes, act_bytes, sync_bytes, front)
     };
     let tray = env.scs.tray(tenant % env.scs.tray_count());
     let mut submit = |eng: &mut Engine, src, dst, bytes, class| {
@@ -378,6 +389,9 @@ fn launch_batch(st: &Rc<RefCell<ScRun>>, env: &Rc<ScEnv>, eng: &mut Engine, c: u
     };
     if kv_bytes > 0 {
         submit(eng, tray, front, kv_bytes, TrafficClass::KvCache);
+    }
+    if prefill_kv_bytes > 0 {
+        submit(eng, front, tray, prefill_kv_bytes, TrafficClass::KvCache);
     }
     submit(eng, front, tray, act_bytes, TrafficClass::Activation);
     if sync_bytes > 0 {

@@ -1,5 +1,15 @@
 //! LLM inference phases (§2.3, §4.1): compute-bound prefill and
 //! memory/latency-bound auto-regressive decode with KV-cache traffic.
+//!
+//! Each phase is exposed two ways: the closed-form total
+//! ([`prefill_time`], [`decode_step_time`]) and a *parts* decomposition
+//! ([`prefill_parts`], [`decode_step_parts`]) that splits the fixed
+//! compute/local-memory share from the remote (tier-2 pool) byte count.
+//! The event-driven substrates (`serve`, `workload::rag`) price the fixed
+//! share as a deterministic delay and the remote bytes as routed flows on
+//! the contended fabric; because both views are built from the same
+//! arithmetic, `fixed + analytic_pool_path(remote)` reproduces the closed
+//! form exactly — the idle-fabric parity contract.
 
 use super::llm::ModelSpec;
 use super::Platform;
@@ -17,22 +27,84 @@ pub enum KvPlacement {
     },
 }
 
-/// Prefill a prompt of `tokens` for one request (compute-bound).
-pub fn prefill_time(model: &ModelSpec, tokens: u64, platform: &Platform) -> f64 {
+/// Split `bytes` into (local, remote) by a remote fraction in [0, 1] —
+/// *the* rounding rule for KV residency. [`KvPlacement::split`] and the
+/// serving substrates' fraction-configured flow sizing all delegate here,
+/// so the analytic closed forms and the routed flows can never disagree
+/// about a byte's residency.
+pub fn remote_share(bytes: u64, frac: f64) -> (u64, u64) {
+    let remote = (bytes as f64 * frac.clamp(0.0, 1.0)) as u64;
+    (bytes - remote, remote)
+}
+
+impl KvPlacement {
+    /// Split `bytes` into (local, remote) shares via [`remote_share`].
+    pub fn split(self, bytes: u64) -> (u64, u64) {
+        match self {
+            KvPlacement::Local => (bytes, 0),
+            KvPlacement::Remote { remote_frac_pct } => {
+                remote_share(bytes, remote_frac_pct.min(100) as f64 / 100.0)
+            }
+        }
+    }
+}
+
+/// Fixed share of a prefill plus the remote KV bytes it writes: compute +
+/// the tier-1 write of the locally-placed KV, and the byte count whose
+/// pool write the caller prices (analytically in [`prefill_time`], as a
+/// routed flow in the event-driven substrates).
+pub fn prefill_parts(model: &ModelSpec, tokens: u64, placement: KvPlacement, platform: &Platform) -> (f64, u64) {
     let flops = model.infer_flops_per_token() * tokens as f64;
     let compute = platform.compute(flops);
-    // write the prompt KV to its tier
     let kv_bytes = model.kv_bytes_per_token() * tokens;
-    let kv_write = platform.tiers.write(Tier::Local, kv_bytes);
-    compute + kv_write
+    let (local, remote) = placement.split(kv_bytes);
+    (compute + platform.tiers.write(Tier::Local, local), remote)
+}
+
+/// Prefill a prompt of `tokens` for one request (compute-bound). The
+/// prompt KV is written to its *placement*: the remote share pays the
+/// tier-2 pool write path on prefill exactly as decode pays the pool read
+/// path — pooled context is not free to produce.
+pub fn prefill_time(model: &ModelSpec, tokens: u64, placement: KvPlacement, platform: &Platform) -> f64 {
+    let (fixed, remote) = prefill_parts(model, tokens, placement, platform);
+    if remote > 0 {
+        fixed + platform.tiers.write(Tier::Pool, remote)
+    } else {
+        fixed
+    }
+}
+
+/// Fixed share of one decode step plus the remote KV bytes it reads:
+/// compute overlapped with weight streaming, then the tier-1 share of the
+/// KV read. The weight stream is [`ModelSpec::decode_stream_bytes`] —
+/// dense weights in full, expert FFN scaled by `active/experts` — not the
+/// whole `weight_bytes()` scaled, which wrongly shrank the non-expert
+/// (attention/embedding) share for MoE models.
+pub fn decode_step_parts(
+    model: &ModelSpec,
+    batch: u64,
+    context: u64,
+    placement: KvPlacement,
+    platform: &Platform,
+) -> (f64, u64) {
+    let flops = model.infer_flops_per_token() * batch as f64;
+    let compute = platform.compute(flops);
+    // weight streaming from local HBM, once per step (batched)
+    let weight_read = platform.tiers.read(Tier::Local, model.decode_stream_bytes());
+    // KV read for attention over the full context, per sequence
+    let kv_bytes = model.kv_bytes_per_token() * context * batch;
+    let (local, remote) = placement.split(kv_bytes);
+    // compute overlaps weight streaming; KV read serializes after.
+    (compute.max(weight_read) + platform.tiers.read(Tier::Local, local), remote)
 }
 
 /// One decode step for a batch of `batch` sequences at `context` tokens.
 ///
-/// Decode is bound by memory traffic: every step re-reads the weights
-/// (streamed from HBM, amortized over the batch) and the KV cache of every
-/// sequence. Remote-resident KV pays the platform's remote path — this is
-/// the delta the paper's decode-latency argument (§4.1) rests on.
+/// Decode is bound by memory traffic: every step re-reads the streamed
+/// weights (dense + active-expert share, amortized over the batch) and the
+/// KV cache of every sequence. Remote-resident KV pays the platform's
+/// remote path — this is the delta the paper's decode-latency argument
+/// (§4.1) rests on.
 pub fn decode_step_time(
     model: &ModelSpec,
     batch: u64,
@@ -40,23 +112,18 @@ pub fn decode_step_time(
     placement: KvPlacement,
     platform: &Platform,
 ) -> f64 {
-    let flops = model.infer_flops_per_token() * batch as f64;
-    let compute = platform.compute(flops);
-    // weight streaming from local HBM, once per step (batched)
-    let weight_read = platform.tiers.read(Tier::Local, model.weight_bytes() / model.experts * model.active_experts);
-    // KV read for attention over the full context, per sequence
-    let kv_bytes = model.kv_bytes_per_token() * context * batch;
-    let kv_read = match placement {
-        KvPlacement::Local => platform.tiers.read(Tier::Local, kv_bytes),
-        KvPlacement::Remote { remote_frac_pct } => {
-            let f = remote_frac_pct.min(100) as f64 / 100.0;
-            let remote = (kv_bytes as f64 * f) as u64;
-            let local = kv_bytes - remote;
-            platform.tiers.read(Tier::Local, local) + platform.tiers.read(Tier::Pool, remote)
-        }
-    };
-    // compute overlaps weight streaming; KV read serializes after.
-    compute.max(weight_read) + kv_read
+    let (fixed, remote) = decode_step_parts(model, batch, context, placement, platform);
+    if remote > 0 {
+        fixed + platform.tiers.read(Tier::Pool, remote)
+    } else {
+        fixed
+    }
+}
+
+/// The decode loop's coarse sampling stride (shared with the flow
+/// substrate so both walk the identical context schedule).
+pub(crate) fn decode_stride(gen_tokens: u64) -> u64 {
+    (gen_tokens / 64).max(1)
 }
 
 /// Generate `gen_tokens` after a prompt of `prompt_tokens`; returns
@@ -69,10 +136,10 @@ pub fn generate_time(
     placement: KvPlacement,
     platform: &Platform,
 ) -> (f64, f64) {
-    let prefill = prefill_time(model, prompt_tokens * batch, platform);
+    let prefill = prefill_time(model, prompt_tokens * batch, placement, platform);
     let mut decode = 0.0;
     // sample the decode loop at a coarse stride for speed; context grows
-    let stride = (gen_tokens / 64).max(1);
+    let stride = decode_stride(gen_tokens);
     let mut t = 0;
     while t < gen_tokens {
         let ctx = prompt_tokens + t;
@@ -90,9 +157,30 @@ mod tests {
     fn prefill_scales_with_tokens() {
         let m = ModelSpec::llama_70b();
         let p = Platform::composable_cxl();
-        let a = prefill_time(&m, 1024, &p);
-        let b = prefill_time(&m, 2048, &p);
+        let a = prefill_time(&m, 1024, KvPlacement::Local, &p);
+        let b = prefill_time(&m, 2048, KvPlacement::Local, &p);
         assert!(b > 1.9 * a && b < 2.1 * a);
+    }
+
+    #[test]
+    fn remote_placement_inflates_prefill() {
+        // Regression (PR 5): prefill used to write the whole prompt KV to
+        // tier-1 even under `KvPlacement::Remote`, so pooled context was
+        // free to produce. The remote share must pay the pool write path.
+        let m = ModelSpec::llama_70b();
+        let p = Platform::composable_cxl();
+        let local = prefill_time(&m, 4096, KvPlacement::Local, &p);
+        let remote = prefill_time(&m, 4096, KvPlacement::Remote { remote_frac_pct: 80 }, &p);
+        assert!(remote > local, "remote={remote} local={local}");
+        // and the inflation is exactly the pool-vs-local write delta of
+        // the remote share (the parts decomposition is the closed form)
+        let (fixed, rb) = prefill_parts(&m, 4096, KvPlacement::Remote { remote_frac_pct: 80 }, &p);
+        let kv_total = m.kv_bytes_per_token() * 4096;
+        assert!((rb as f64 / kv_total as f64 - 0.8).abs() < 1e-9, "remote share is 80%");
+        assert!((fixed + p.tiers.write(crate::mem::tier::Tier::Pool, rb) - remote).abs() < 1e-9);
+        // a costlier remote path (RDMA) pays more for the same placement
+        let rdma = prefill_time(&m, 4096, KvPlacement::Remote { remote_frac_pct: 80 }, &Platform::conventional_rdma());
+        assert!(rdma > remote);
     }
 
     #[test]
@@ -125,6 +213,38 @@ mod tests {
         let short = decode_step_time(&m, 1, 512, KvPlacement::Local, &p);
         let long = decode_step_time(&m, 1, 65_536, KvPlacement::Local, &p);
         assert!(long > short);
+    }
+
+    #[test]
+    fn moe_decode_streams_dense_weights_in_full() {
+        // Regression (PR 5): the step used to scale *all* weight bytes by
+        // active/experts, letting MoE models skip most of their attention
+        // and embedding streaming. tiny_moe (4 experts, top-2) locks the
+        // corrected stream size in.
+        let m = ModelSpec::tiny_moe();
+        let p = Platform::composable_cxl();
+        let step = decode_step_time(&m, 1, 128, KvPlacement::Local, &p);
+        // rebuild the step from the corrected stream bytes
+        let compute = p.compute(m.infer_flops_per_token());
+        let weight = p.tiers.read(crate::mem::tier::Tier::Local, m.decode_stream_bytes());
+        let kv = p.tiers.read(crate::mem::tier::Tier::Local, m.kv_bytes_per_token() * 128);
+        assert!((step - (compute.max(weight) + kv)).abs() < 1e-9);
+        // the buggy formula streamed strictly fewer bytes
+        let buggy_weight = p.tiers.read(crate::mem::tier::Tier::Local, m.weight_bytes() / m.experts * m.active_experts);
+        assert!(
+            compute.max(weight) > compute.max(buggy_weight),
+            "dense share must not shrink with expert routing"
+        );
+    }
+
+    #[test]
+    fn kv_split_is_exhaustive_and_monotone() {
+        let pl = KvPlacement::Remote { remote_frac_pct: 60 };
+        let (l, r) = pl.split(1000);
+        assert_eq!(l + r, 1000);
+        assert_eq!(r, 600);
+        assert_eq!(KvPlacement::Local.split(1000), (1000, 0));
+        assert_eq!(KvPlacement::Remote { remote_frac_pct: 200 }.split(10), (0, 10), "pct clamps at 100");
     }
 
     #[test]

@@ -115,6 +115,32 @@ impl ModelSpec {
         self.params() * self.dtype_bytes
     }
 
+    // ----- decode weight-streaming split (§4.1) --------------------------
+    // A decode step re-reads every *dense* weight (attention, embeddings)
+    // but only the routed experts' FFN weights. The split lives on the
+    // model spec so the analytic decode closed form and the event-driven
+    // serving/RAG substrates size the stream identically.
+
+    /// Expert-conditional weight bytes: the FFN matrices of *all* experts.
+    /// For a dense model (`experts == 1`) this is simply the FFN share.
+    pub fn expert_weight_bytes(&self) -> u64 {
+        self.layers * self.ffn_mats() * self.hidden * self.ffn * self.experts * self.dtype_bytes
+    }
+
+    /// Weight bytes every token touches regardless of routing: attention
+    /// projections + embeddings — everything that is not expert FFN.
+    pub fn dense_weight_bytes(&self) -> u64 {
+        self.weight_bytes() - self.expert_weight_bytes()
+    }
+
+    /// Bytes streamed from HBM by one decode step: all dense weights plus
+    /// the active experts' FFN share. Scaling only the expert share (not
+    /// `weight_bytes()` wholesale) is what keeps MoE attention/embedding
+    /// traffic from being wrongly shrunk by `active/experts`.
+    pub fn decode_stream_bytes(&self) -> u64 {
+        self.dense_weight_bytes() + self.expert_weight_bytes() / self.experts * self.active_experts
+    }
+
     /// Mixed-precision Adam training state per parameter: bf16 weight+grad
     /// (4) + fp32 master weight, momentum, variance (12) = 16 bytes.
     pub fn optimizer_state_bytes(&self) -> u64 {
@@ -238,6 +264,24 @@ mod tests {
         assert_eq!(m.ep_slab_bytes(1024.0), m.tp_slab_bytes(1024.0));
         assert_eq!(m.grad_shard_bytes(8, 8), m.params() / 64 * 2);
         assert_eq!(m.grad_shard_bytes(1, 1), m.params() * 2);
+    }
+
+    #[test]
+    fn weight_split_conserves_and_scales_experts_only() {
+        // dense model: one "expert" = the FFN itself, so a decode step
+        // streams every weight byte
+        let d = ModelSpec::dense_7b();
+        assert_eq!(d.dense_weight_bytes() + d.expert_weight_bytes(), d.weight_bytes());
+        assert_eq!(d.decode_stream_bytes(), d.weight_bytes());
+        // MoE: the step streams all dense bytes + active/experts of the FFN
+        let m = ModelSpec::tiny_moe();
+        assert_eq!(m.dense_weight_bytes() + m.expert_weight_bytes(), m.weight_bytes());
+        let expect = m.dense_weight_bytes() + m.expert_weight_bytes() / 4 * 2;
+        assert_eq!(m.decode_stream_bytes(), expect);
+        // the old formula (weight_bytes × active/experts) wrongly shrank
+        // the attention/embedding share; the fix must stream strictly more
+        assert!(m.decode_stream_bytes() > m.weight_bytes() / m.experts * m.active_experts);
+        assert!(m.decode_stream_bytes() < m.weight_bytes());
     }
 
     #[test]

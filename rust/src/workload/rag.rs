@@ -1,4 +1,5 @@
-//! RAG and Graph-RAG pipelines (§2.3, §5.2, Fig 33/34).
+//! RAG and Graph-RAG pipelines (§2.3, §5.2, Fig 33/34) on **two pricing
+//! substrates**.
 //!
 //! The pipeline: embed the query → ANN vector search over a corpus living
 //! in *external* memory (tier-2 CXL pool vs RDMA/SSD-backed retrieval
@@ -9,10 +10,45 @@
 //! is `hops × (remote-read latency + distance compute)`. This is exactly
 //! the access pattern where the paper measures its largest CXL wins
 //! (Fig 33d: 14× search; Fig 34d: 8.05× end-to-end Graph-RAG).
+//!
+//! # The two substrates
+//!
+//! * **Analytic** ([`vector_search`], [`generation`], [`run_rag`]) — the
+//!   closed forms above, priced against an implicitly *idle* fabric
+//!   through [`Platform`]'s tier math. Fast, and what the Fig 31/33/34
+//!   tables report.
+//! * **Event-driven** ([`launch_rag_flows`], [`simulate_rag_flows`]) — the
+//!   same pipeline as *dependent routed flows* on a contended fabric: the
+//!   corpus lives in [`HierarchicalMemory`] regions, every ANN hop is a
+//!   pool fetch that must deliver before the next hop launches (chained
+//!   completion continuations on [`Engine`]), hot graph nodes are promoted
+//!   into tier-1 as [`TrafficClass::Migration`] flows (genuinely changing
+//!   later hop latency), and generation reuses the serving cost path
+//!   ([`prefill_parts`]/[`decode_step_parts`]): its fixed compute/local
+//!   share is a deterministic delay while the remote-KV share moves as
+//!   [`TrafficClass::KvCache`] flows. On an idle fabric the run reproduces
+//!   the analytic [`RagReport`] per phase to <0.1% (the parity contract);
+//!   when the fabric is shared — e.g. with the multi-tenant serving mix in
+//!   [`crate::serve::rag_colocate`] — the spread between `elapsed` and
+//!   `ideal` is the retrieval communication tax, measured per op in
+//!   [`RagPhaseFlow::contention`] and attributed per link/class in the
+//!   fabric's [`crate::fabric::flow::CommTaxLedger`].
+//!
+//! Traffic-class attribution: ANN hop fetches and corpus placement are
+//! [`TrafficClass::Parameter`] (read-mostly corpus data, distinguishable
+//! from serving tenants' traffic on a shared ledger), promotions/demotions
+//! are [`TrafficClass::Migration`], and generation KV movement is
+//! [`TrafficClass::KvCache`].
 
-use super::inference::{generate_time, KvPlacement};
+use super::inference::{decode_step_parts, decode_stride, generate_time, prefill_parts, KvPlacement};
 use super::llm::ModelSpec;
 use super::{PhaseTime, Platform};
+use crate::fabric::flow::TrafficClass;
+use crate::mem::hierarchy::{HierarchicalMemory, MemOp};
+use crate::mem::tier::{Tier, TieredMemory};
+use crate::sim::{Engine, Rng, Summary};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// RAG workload shape.
 #[derive(Clone, Debug)]
@@ -81,9 +117,33 @@ impl RagConfig {
         }
     }
 
+    /// [`Self::recipe_demo`] at event-driven scale: same per-hop and
+    /// per-token arithmetic (so CXL-vs-baseline *ratios* carry over — the
+    /// search ratio is per-hop and hop-count-invariant), but few enough
+    /// dependent flows that a discrete-event run stays cheap.
+    pub fn flow_demo() -> RagConfig {
+        RagConfig { hops: 256, queries: 4, ..Self::recipe_demo() }
+    }
+
+    /// [`Self::graph_rag`] at event-driven scale (deeper walk, longer
+    /// context than [`Self::flow_demo`], fewer queries).
+    pub fn graph_flow_demo() -> RagConfig {
+        RagConfig { hops: 512, queries: 2, ..Self::graph_rag() }
+    }
+
     /// Bytes fetched per ANN hop.
     pub fn hop_bytes(&self) -> u64 {
         self.width * self.dim * self.elem_bytes
+    }
+
+    /// Per-hop host-side cost (ns): distance compute over the fetched
+    /// vectors plus ANN bookkeeping. One definition shared by the analytic
+    /// [`vector_search`] closed form and the event-driven hop chain, so
+    /// the two substrates cannot drift (the search-phase twin of
+    /// [`prefill_parts`]/[`decode_step_parts`]).
+    pub fn hop_compute_ns(&self, platform: &Platform) -> f64 {
+        let dist_flops = (self.width * self.dim * 2) as f64;
+        platform.compute(dist_flops) + self.ann_cpu_ns
     }
 
     /// "Data movement" accounting for the search phase (Fig 31's 21.1×):
@@ -127,28 +187,23 @@ impl RagReport {
 }
 
 /// Vector-search phase: `queries × hops` dependent remote reads.
+///
+/// Queries are independent, identically-priced serial chains, so the
+/// aggregate this returns is `queries ×` the per-query serial critical
+/// path — callers wanting the critical path divide `total()` by
+/// `cfg.queries`. (An earlier revision computed that per-query figure into
+/// a local the report never used; it is now *deliberately* not part of the
+/// return value, and `search_critical_path_is_total_over_queries` locks
+/// the identity in.)
 pub fn vector_search(cfg: &RagConfig, platform: &Platform) -> PhaseTime {
     let hop_bytes = cfg.hop_bytes();
     let fetch = platform.remote_read(hop_bytes);
-    let dist_flops = (cfg.width * cfg.dim * 2) as f64;
-    let compute_per_hop = platform.compute(dist_flops) + cfg.ann_cpu_ns;
-    let per_query = cfg.hops as f64 * (fetch + compute_per_hop);
+    let compute_per_hop = cfg.hop_compute_ns(platform);
     PhaseTime {
         compute: cfg.queries as f64 * cfg.hops as f64 * compute_per_hop,
         comm: cfg.queries as f64 * cfg.hops as f64 * fetch,
         sync: 0.0,
         bytes: cfg.queries * cfg.hops * hop_bytes,
-    }
-    .tap_total(per_query * cfg.queries as f64)
-}
-
-// PhaseTime is a plain struct; `tap_total` is a no-op hook kept for clarity.
-trait TapTotal {
-    fn tap_total(self, _t: f64) -> Self;
-}
-impl TapTotal for PhaseTime {
-    fn tap_total(self, _t: f64) -> Self {
-        self
     }
 }
 
@@ -188,6 +243,499 @@ pub fn run_rag(cfg: &RagConfig, platform: &Platform) -> RagReport {
     RagReport { search: vector_search(cfg, platform), generation: generation(cfg, platform) }
 }
 
+// ======================================================================
+// Event-driven substrate
+// ======================================================================
+
+/// Knobs of the event-driven RAG run.
+#[derive(Clone, Copy, Debug)]
+pub struct RagFlowOptions {
+    /// Distinct corpus graph nodes tracked as hierarchy regions (one
+    /// region = one node's neighbour-vector block of
+    /// [`RagConfig::hop_bytes`]); the walk revisits them Zipf-skewed.
+    pub segments: usize,
+    /// Pool fetches of one segment before it is promoted to tier-1
+    /// (0 = promotion disabled — the parity configuration).
+    pub promote_after: u64,
+    /// Tier-1 byte budget available for promoted segments.
+    pub local_budget: u64,
+    /// Zipf skew of the traversal's revisit distribution.
+    pub zipf_skew: f64,
+    /// Walk seed (deterministic: same seed ⇒ byte-identical trace).
+    pub seed: u64,
+}
+
+impl RagFlowOptions {
+    /// Parity configuration: every hop pays the pool path, exactly like
+    /// the analytic closed form assumes — the idle-fabric run then
+    /// reproduces [`run_rag`] per phase.
+    pub fn parity() -> RagFlowOptions {
+        RagFlowOptions { segments: 64, promote_after: 0, local_budget: 0, zipf_skew: 1.1, seed: 7 }
+    }
+
+    /// Hot-node promotion enabled: frequently-revisited graph nodes
+    /// migrate into tier-1 (as contending [`TrafficClass::Migration`]
+    /// flows) and later hops to them skip the fabric.
+    pub fn promoting() -> RagFlowOptions {
+        RagFlowOptions { promote_after: 2, local_budget: 1 << 20, ..Self::parity() }
+    }
+}
+
+/// One phase of the event-driven run.
+#[derive(Clone, Debug)]
+pub struct RagPhaseFlow {
+    /// Measured wall span of the phase (ns). Queries run as serial chains
+    /// of dependent ops (matching the analytic aggregate), so this is the
+    /// stream's serial completion time.
+    pub elapsed: f64,
+    /// Idle-fabric reconstruction of the same chain: fixed delays plus
+    /// every op's idle route cost. On an idle fabric `elapsed == ideal`
+    /// (and both equal the analytic closed form); anything above it is
+    /// *measured* queueing behind other tenants' flows.
+    pub ideal: f64,
+    /// Pool bytes the phase moved over the fabric.
+    pub bytes: u64,
+    /// Routed flows the phase issued.
+    pub flows: u64,
+    /// Per-op contention delay (`latency - ideal`) distribution.
+    pub contention: Summary,
+}
+
+impl RagPhaseFlow {
+    fn new() -> RagPhaseFlow {
+        RagPhaseFlow { elapsed: 0.0, ideal: 0.0, bytes: 0, flows: 0, contention: Summary::new() }
+    }
+
+    /// `elapsed / ideal` — the phase's communication-tax factor (1.0 on an
+    /// idle fabric, strictly above it when the links are shared).
+    pub fn inflation(&self) -> f64 {
+        if self.ideal <= 0.0 {
+            1.0
+        } else {
+            self.elapsed / self.ideal
+        }
+    }
+}
+
+/// Measured outcome of one event-driven RAG run.
+#[derive(Clone, Debug)]
+pub struct RagFlowReport {
+    /// ANN traversal (dependent pool fetches + distance compute).
+    pub search: RagPhaseFlow,
+    /// Prefill + decode with the remote-KV share as routed flows.
+    pub generation: RagPhaseFlow,
+    /// Segments promoted into tier-1 during the walk.
+    pub promotions: u64,
+    /// Promotions refused for lack of tier-1 budget.
+    pub promotions_denied: u64,
+    /// Bytes the successful promotions migrated.
+    pub promoted_bytes: u64,
+    /// Hop bytes served from promoted tier-1 segments (no fabric flow).
+    pub local_hop_bytes: u64,
+    /// Hop bytes fetched from the pool as routed flows.
+    pub pool_hop_bytes: u64,
+    /// Corpus bytes that spilled straight to the pool at placement.
+    pub corpus_spilled_bytes: u64,
+    /// Corpus bytes demoted out of tier-1 at placement.
+    pub corpus_demoted_bytes: u64,
+}
+
+impl RagFlowReport {
+    /// End-to-end measured time (ns).
+    pub fn total(&self) -> f64 {
+        self.search.elapsed + self.generation.elapsed
+    }
+}
+
+const RAG_GEN_TAG: u64 = 1 << 40;
+
+struct RagFlowState {
+    cfg: RagConfig,
+    opts: RagFlowOptions,
+    platform: Platform,
+    node: usize,
+    rng: Rng,
+    visits: Vec<u64>,
+    // progress counters
+    setup_idx: u64,
+    demote_idx: u64,
+    q: u64,
+    h: u64,
+    phase_start: f64,
+    // outcome
+    search: RagPhaseFlow,
+    generation: RagPhaseFlow,
+    promotions: u64,
+    promotions_denied: u64,
+    promoted_bytes: u64,
+    local_hop_bytes: u64,
+    pool_hop_bytes: u64,
+    corpus_spilled_bytes: u64,
+    corpus_demoted_bytes: u64,
+    done: bool,
+    failed: bool,
+}
+
+/// Progress handle of one launched event-driven RAG run. Cheap to clone
+/// (shares the interior state and the hierarchy handle) — which is what
+/// the chained completion continuations capture.
+#[derive(Clone)]
+pub struct RagFlowRun {
+    st: Rc<RefCell<RagFlowState>>,
+    hier: HierarchicalMemory,
+}
+
+impl RagFlowRun {
+    /// The report, once the engine has drained the whole pipeline.
+    /// `None` while the run is still in flight or if it stalled (corpus
+    /// placement failed — give the hierarchy's pool enough capacity).
+    pub fn report(&self) -> Option<RagFlowReport> {
+        let s = self.st.borrow();
+        if !s.done || s.failed {
+            return None;
+        }
+        Some(RagFlowReport {
+            search: s.search.clone(),
+            generation: s.generation.clone(),
+            promotions: s.promotions,
+            promotions_denied: s.promotions_denied,
+            promoted_bytes: s.promoted_bytes,
+            local_hop_bytes: s.local_hop_bytes,
+            pool_hop_bytes: s.pool_hop_bytes,
+            corpus_spilled_bytes: s.corpus_spilled_bytes,
+            corpus_demoted_bytes: s.corpus_demoted_bytes,
+        })
+    }
+
+    /// The hierarchy the run's flows ride (its fabric holds the ledger).
+    pub fn hierarchy(&self) -> &HierarchicalMemory {
+        &self.hier
+    }
+}
+
+/// Launch the event-driven RAG pipeline on an existing hierarchy and
+/// engine — the colocation entry point: a hierarchy attached to a serving
+/// supercluster's fabric makes every ANN hop and KV flow contend with the
+/// tenants' traffic. `node` indexes the hierarchy's accelerator endpoints.
+///
+/// Phasing: corpus placement first (regions of `hop_bytes` each; tier-1
+/// placements are demoted so the corpus starts pool-resident), then the
+/// measured search walk, then the measured generation stream. Placement
+/// traffic is not part of either phase's measurement.
+pub fn launch_rag_flows(
+    cfg: &RagConfig,
+    opts: RagFlowOptions,
+    platform: &Platform,
+    hier: &HierarchicalMemory,
+    node: usize,
+    eng: &mut Engine,
+) -> RagFlowRun {
+    assert!(node < hier.node_count(), "node index out of range");
+    assert!(opts.segments > 0, "at least one corpus segment");
+    let st = RagFlowState {
+        cfg: cfg.clone(),
+        opts,
+        platform: platform.clone(),
+        node,
+        rng: Rng::new(opts.seed),
+        visits: vec![0; opts.segments],
+        setup_idx: 0,
+        demote_idx: 0,
+        q: 0,
+        h: 0,
+        phase_start: 0.0,
+        search: RagPhaseFlow::new(),
+        generation: RagPhaseFlow::new(),
+        promotions: 0,
+        promotions_denied: 0,
+        promoted_bytes: 0,
+        local_hop_bytes: 0,
+        pool_hop_bytes: 0,
+        corpus_spilled_bytes: 0,
+        corpus_demoted_bytes: 0,
+        done: false,
+        failed: false,
+    };
+    let run = RagFlowRun { st: Rc::new(RefCell::new(st)), hier: hier.clone() };
+    place_corpus(&run, eng);
+    run
+}
+
+/// The tier model a RAG corpus hierarchy should be built from: the
+/// platform's tiers with the pool capacity raised to fit the corpus when
+/// the tier model carries none (the RDMA baseline) — capacity only gates
+/// allocation, never pricing. One sizing rule shared by
+/// [`simulate_rag_flows`] and the colocation scenario
+/// (`crate::serve::rag_colocate`), so standalone and colocated runs can
+/// never drift in allocation behaviour.
+pub fn corpus_tiers(cfg: &RagConfig, opts: &RagFlowOptions, platform: &Platform) -> TieredMemory {
+    let mut tiers = platform.tiers.clone();
+    let corpus = opts.segments as u64 * cfg.hop_bytes();
+    if tiers.pool.capacity < corpus {
+        tiers.pool.capacity = corpus;
+    }
+    tiers
+}
+
+/// Convenience: run the pipeline to completion on the hierarchy's own
+/// (otherwise idle) fabric — the parity configuration.
+pub fn simulate_rag_flows(cfg: &RagConfig, opts: RagFlowOptions, platform: &Platform) -> RagFlowReport {
+    let hier = HierarchicalMemory::new(1, opts.local_budget, corpus_tiers(cfg, &opts, platform));
+    let mut eng = Engine::new();
+    let run = launch_rag_flows(cfg, opts, platform, &hier, 0, &mut eng);
+    eng.run();
+    run.report().expect("idle rag flow run completes")
+}
+
+/// Corpus placement: region `setup_idx` lands wherever the hierarchy has
+/// room (chained serially so placement order — and the trace — is
+/// deterministic), then tier-1 placements are demoted to the pool.
+fn place_corpus(run: &RagFlowRun, eng: &mut Engine) {
+    let (i, total, bytes, node) = {
+        let mut s = run.st.borrow_mut();
+        let i = s.setup_idx;
+        s.setup_idx += 1;
+        (i, s.opts.segments as u64, s.cfg.hop_bytes(), s.node)
+    };
+    if i >= total {
+        demote_corpus(run, eng);
+        return;
+    }
+    let run2 = run.clone();
+    let ok = run.hier.write_new(eng, i, bytes, node, TrafficClass::Parameter, move |e, d| {
+        if d.op == MemOp::Spill {
+            run2.st.borrow_mut().corpus_spilled_bytes += d.bytes;
+        }
+        place_corpus(&run2, e);
+    });
+    if !ok {
+        run.st.borrow_mut().failed = true;
+    }
+}
+
+/// Demote any tier-1-placed corpus regions so the walk starts against a
+/// fully pool-resident corpus (tier-1 stays free for earned promotions).
+fn demote_corpus(run: &RagFlowRun, eng: &mut Engine) {
+    loop {
+        let (i, total) = {
+            let mut s = run.st.borrow_mut();
+            let i = s.demote_idx;
+            s.demote_idx += 1;
+            (i, s.opts.segments as u64)
+        };
+        if i >= total {
+            start_search(run, eng);
+            return;
+        }
+        if run.hier.tier_of(i) == Some(Tier::Local) {
+            let run2 = run.clone();
+            let ok = run.hier.demote(eng, i, TrafficClass::Migration, move |e, d| {
+                run2.st.borrow_mut().corpus_demoted_bytes += d.bytes;
+                demote_corpus(&run2, e);
+            });
+            if ok {
+                return;
+            }
+            // pool full: the region stays tier-1 (a pre-warmed hot node)
+        }
+    }
+}
+
+fn start_search(run: &RagFlowRun, eng: &mut Engine) {
+    {
+        let mut s = run.st.borrow_mut();
+        s.phase_start = eng.now();
+        s.q = 0;
+        s.h = 0;
+    }
+    next_hop(run, eng);
+}
+
+/// Advance the walk: pick the next graph node, or close the phase after
+/// the last query's last hop.
+fn next_hop(run: &RagFlowRun, eng: &mut Engine) {
+    let seg = {
+        let mut s = run.st.borrow_mut();
+        if s.h == s.cfg.hops {
+            s.h = 0;
+            s.q += 1;
+        }
+        if s.q == s.cfg.queries || s.cfg.hops == 0 {
+            None
+        } else {
+            s.h += 1;
+            let (n, skew) = (s.opts.segments, s.opts.zipf_skew);
+            Some(s.rng.zipf(n, skew) as u64)
+        }
+    };
+    match seg {
+        None => {
+            {
+                let mut s = run.st.borrow_mut();
+                let now = eng.now();
+                s.search.elapsed = now - s.phase_start;
+                s.phase_start = now;
+                s.q = 0;
+            }
+            next_query_generation(run, eng);
+        }
+        Some(seg) => issue_hop(run, eng, seg),
+    }
+}
+
+/// One dependent ANN hop: read the node's neighbour block from wherever
+/// it lives (pool fetch = routed flow; promoted segment = tier-1 media
+/// read), then the distance compute, then the next hop.
+fn issue_hop(run: &RagFlowRun, eng: &mut Engine, seg: u64) {
+    let (compute_ns, promote_now) = {
+        let mut s = run.st.borrow_mut();
+        let compute_ns = s.cfg.hop_compute_ns(&s.platform);
+        let promote_now = if run.hier.tier_of(seg) == Some(Tier::Pool) {
+            s.visits[seg as usize] += 1;
+            s.opts.promote_after > 0 && s.visits[seg as usize] == s.opts.promote_after
+        } else {
+            false
+        };
+        (compute_ns, promote_now)
+    };
+    let run2 = run.clone();
+    let ok = run.hier.read(eng, seg, TrafficClass::Parameter, move |e, d| {
+        {
+            let mut s = run2.st.borrow_mut();
+            s.search.ideal += d.ideal + compute_ns;
+            if d.op == MemOp::LocalAccess {
+                s.local_hop_bytes += d.bytes;
+            } else {
+                s.pool_hop_bytes += d.bytes;
+                s.search.bytes += d.bytes;
+                s.search.flows += 1;
+                s.search.contention.add((d.latency - d.ideal).max(0.0));
+            }
+        }
+        let run3 = run2.clone();
+        e.schedule_in(compute_ns, move |e2| next_hop(&run3, e2));
+    });
+    if !ok {
+        run.st.borrow_mut().failed = true;
+        return;
+    }
+    if promote_now {
+        // fire-and-forget: the promotion migrates concurrently with the
+        // walk (residency flips at submission), contending like any flow
+        let run4 = run.clone();
+        let ok = run.hier.promote(eng, seg, TrafficClass::Migration, move |_, d| {
+            run4.st.borrow_mut().promoted_bytes += d.bytes;
+        });
+        let mut s = run.st.borrow_mut();
+        if ok {
+            s.promotions += 1;
+        } else {
+            s.promotions_denied += 1;
+        }
+    }
+}
+
+/// Generation for the next query: the prefill's fixed (compute + tier-1
+/// write) share as a delay, its remote-KV share as a pool-write flow, then
+/// the decode stream.
+fn next_query_generation(run: &RagFlowRun, eng: &mut Engine) {
+    let plan = {
+        let mut s = run.st.borrow_mut();
+        if s.q == s.cfg.queries {
+            None
+        } else {
+            s.q += 1;
+            let placement = KvPlacement::Remote { remote_frac_pct: s.cfg.kv_remote_pct };
+            let (fixed, remote) = prefill_parts(&s.cfg.model, s.cfg.context_tokens, placement, &s.platform);
+            s.generation.ideal += fixed;
+            Some((fixed, remote, s.q, s.node))
+        }
+    };
+    let Some((fixed, remote, q, node)) = plan else {
+        let mut s = run.st.borrow_mut();
+        s.generation.elapsed = eng.now() - s.phase_start;
+        s.done = true;
+        return;
+    };
+    let run2 = run.clone();
+    eng.schedule_in(fixed, move |e| {
+        if remote == 0 {
+            decode_step(&run2, e, 0);
+            return;
+        }
+        let run3 = run2.clone();
+        // compute-produced context KV: no tier-1 media read, pool write at
+        // the tray — exactly the analytic prefill's pool-write term
+        let ok = run2.hier.spill_partial(e, RAG_GEN_TAG + q, remote, 0, node, TrafficClass::KvCache, move |e2, d| {
+            {
+                let mut s = run3.st.borrow_mut();
+                s.generation.ideal += d.ideal;
+                s.generation.bytes += d.bytes;
+                s.generation.flows += 1;
+                s.generation.contention.add((d.latency - d.ideal).max(0.0));
+            }
+            decode_step(&run3, e2, 0);
+        });
+        if !ok {
+            run2.st.borrow_mut().failed = true;
+        }
+    });
+}
+
+/// One sampled decode step at generated-token offset `t`: fixed share
+/// (compute ∥ weight stream + tier-1 KV read) as a delay, the remote-KV
+/// read as a pool fetch flow, then the stride's remaining repeats replayed
+/// at the step's *measured* duration (`× mult`, exactly the closed form's
+/// stride sampling — contended repeats extrapolate the contended sample).
+fn decode_step(run: &RagFlowRun, eng: &mut Engine, t: u64) {
+    let plan = {
+        let mut s = run.st.borrow_mut();
+        if t >= s.cfg.gen_tokens {
+            None
+        } else {
+            let stride = decode_stride(s.cfg.gen_tokens);
+            let mult = stride.min(s.cfg.gen_tokens - t);
+            let ctx = s.cfg.context_tokens + t;
+            let placement = KvPlacement::Remote { remote_frac_pct: s.cfg.kv_remote_pct };
+            let (fixed, remote) = decode_step_parts(&s.cfg.model, 1, ctx, placement, &s.platform);
+            s.generation.ideal += fixed * mult as f64;
+            Some((fixed, remote, mult, stride, s.node))
+        }
+    };
+    let Some((fixed, remote, mult, stride, node)) = plan else {
+        next_query_generation(run, eng);
+        return;
+    };
+    let step_start = eng.now();
+    let run2 = run.clone();
+    eng.schedule_in(fixed, move |e| {
+        if remote == 0 {
+            finish_decode_step(&run2, e, t, stride, mult, step_start);
+            return;
+        }
+        let run3 = run2.clone();
+        let ok = run2.hier.stream(e, RAG_GEN_TAG, remote, node, false, TrafficClass::KvCache, move |e2, d| {
+            {
+                let mut s = run3.st.borrow_mut();
+                s.generation.ideal += d.ideal * mult as f64;
+                s.generation.bytes += d.bytes;
+                s.generation.flows += 1;
+                s.generation.contention.add((d.latency - d.ideal).max(0.0));
+            }
+            finish_decode_step(&run3, e2, t, stride, mult, step_start);
+        });
+        if !ok {
+            run2.st.borrow_mut().failed = true;
+        }
+    });
+}
+
+fn finish_decode_step(run: &RagFlowRun, eng: &mut Engine, t: u64, stride: u64, mult: u64, step_start: f64) {
+    let extra = (mult - 1) as f64 * (eng.now() - step_start);
+    let run2 = run.clone();
+    eng.schedule_in(extra, move |e| decode_step(&run2, e, t + stride));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,7 +755,10 @@ mod tests {
         let cxl = generation(&cfg, &Platform::composable_cxl());
         let rdma = generation(&cfg, &Platform::conventional_rdma());
         let ratio = rdma.total() / cxl.total();
-        assert!((1.8..4.5).contains(&ratio), "generation speedup={ratio} (paper: 2.78x)");
+        // band widened from 1.8–4.5 for the PR 5 prefill fix: the remote
+        // context-KV share now pays its pool write on both platforms,
+        // nudging the ratio up (decode still dominates by ~30x)
+        assert!((1.6..5.0).contains(&ratio), "generation speedup={ratio} (paper: 2.78x)");
     }
 
     #[test]
@@ -241,5 +792,65 @@ mod tests {
         let cfg = RagConfig::recipe_demo();
         let r = vector_search(&cfg, &Platform::composable_cxl());
         assert_eq!(r.bytes, cfg.queries * cfg.hops * cfg.hop_bytes());
+    }
+
+    #[test]
+    fn search_critical_path_is_total_over_queries() {
+        // the deliberate resolution of the old dead `per_query` local:
+        // queries are independent serial chains of identical cost, so the
+        // per-query critical path is exactly the aggregate over `queries`
+        let cfg = RagConfig::recipe_demo();
+        let p = Platform::composable_cxl();
+        let agg = vector_search(&cfg, &p).total();
+        let hop_fetch = p.remote_read(cfg.hop_bytes());
+        let per_query = cfg.hops as f64 * (hop_fetch + cfg.hop_compute_ns(&p));
+        assert!((agg / cfg.queries as f64 - per_query).abs() / per_query < 1e-12);
+    }
+
+    #[test]
+    fn flow_demo_keeps_per_hop_arithmetic() {
+        let full = RagConfig::recipe_demo();
+        let demo = RagConfig::flow_demo();
+        assert_eq!(full.hop_bytes(), demo.hop_bytes());
+        assert_eq!(full.context_tokens, demo.context_tokens);
+        assert!(demo.hops * demo.queries < 4096, "event-driven scale");
+    }
+
+    #[test]
+    fn idle_flow_run_matches_analytic_phases() {
+        // the parity contract at unit-test scale; the full <0.1% sweep
+        // over both demo configs and platforms lives in tests/rag_flows.rs
+        let cfg = RagConfig { hops: 32, queries: 2, gen_tokens: 8, ..RagConfig::flow_demo() };
+        let p = Platform::composable_cxl();
+        let flow = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &p);
+        let ana = run_rag(&cfg, &p);
+        let ds = (flow.search.elapsed - ana.search.total()).abs() / ana.search.total();
+        assert!(ds < 0.001, "search parity: flow {} vs analytic {}", flow.search.elapsed, ana.search.total());
+        let dg = (flow.generation.elapsed - ana.generation.total()).abs() / ana.generation.total();
+        assert!(dg < 0.001, "gen parity: flow {} vs analytic {}", flow.generation.elapsed, ana.generation.total());
+        // idle: no op waited on anyone
+        assert!(flow.search.contention.max() <= 1e-6);
+        assert!((flow.search.inflation() - 1.0).abs() < 1e-6);
+        assert_eq!(flow.local_hop_bytes, 0, "parity walk never leaves the pool");
+        assert_eq!(flow.pool_hop_bytes, cfg.queries * cfg.hops * cfg.hop_bytes());
+    }
+
+    #[test]
+    fn promotion_accelerates_revisited_segments() {
+        let cfg = RagConfig { hops: 128, queries: 2, gen_tokens: 4, ..RagConfig::flow_demo() };
+        let p = Platform::composable_cxl();
+        let cold = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &p);
+        let opts = RagFlowOptions { local_budget: 64 * cfg.hop_bytes(), ..RagFlowOptions::promoting() };
+        let hot = simulate_rag_flows(&cfg, opts, &p);
+        assert!(hot.promotions > 0, "zipf walk must revisit past the threshold");
+        assert!(hot.local_hop_bytes > 0);
+        assert!(
+            hot.search.elapsed < cold.search.elapsed,
+            "promoted segments must cut the walk: hot {} vs cold {}",
+            hot.search.elapsed,
+            cold.search.elapsed
+        );
+        // bytes conserve across the local/pool split
+        assert_eq!(hot.local_hop_bytes + hot.pool_hop_bytes, cfg.queries * cfg.hops * cfg.hop_bytes());
     }
 }

@@ -8,17 +8,33 @@
 //!   from `experiments::registry()` rather than hard-coded; deterministic,
 //!   kept active.
 //! * **Calibration bands** (`fig31_all_ratios_in_band`,
-//!   `fig33_fig34_fig35_phase_ratios`, `fig36_fig37_mpi_ratios`) — pin
-//!   measured speedups to numeric bands around the paper's figures. The
-//!   bands are sensitive to every cost-model constant, and the seed shipped
-//!   with them failing; each PR that touches a substrate can legitimately
-//!   move them. Quarantined with `#[ignore]` (run explicitly via
+//!   `fig36_fig37_mpi_ratios`, `fig35_dlrm_phase_ratios`) — pin measured
+//!   speedups to numeric bands around the paper's figures. The bands are
+//!   sensitive to every cost-model constant, and the seed shipped with
+//!   them failing; each PR that touches a substrate can legitimately move
+//!   them. Quarantined with `#[ignore]` (run explicitly via
 //!   `cargo test -- --ignored`) until the cost model is recalibrated
 //!   against the paper end-to-end; the per-figure *shape* assertions live
 //!   on in the experiments module's unit tests (e.g.
 //!   `fig31_rows_within_paper_shape`), which stay active.
+//!
+//! TRIAGE UPDATE (PR 5): with RAG now *measured* on the event-driven
+//! substrate, the Fig 33/34 ratio portion of the old combined
+//! `fig33_fig34_fig35_phase_ratios` test is **un-quarantined** as
+//! `fig33_fig34_rag_ratios_on_both_substrates`: it pins the analytic
+//! ratios to the paper bands *and* requires the flow-measured run to
+//! reproduce the analytic phases to <0.1% on an idle fabric, so the bands
+//! are now anchored to flow-measured numbers rather than closed forms
+//! alone (the Fig 33 generation band was widened from 1.8–4.5 to 1.6–5.0
+//! and the Graph-RAG band from 5–12 to 4.5–13 to absorb the PR 5 prefill
+//! bugfix, which charges the remote context-KV share its pool write on
+//! both platforms). The Fig 35 (DLRM) portion
+//! stays quarantined in `fig35_dlrm_phase_ratios` — DLRM has no flow
+//! substrate yet.
 
 use commtax::experiments;
+use commtax::workload::rag::{run_rag, simulate_rag_flows, RagConfig, RagFlowOptions};
+use commtax::workload::Platform;
 
 fn ratio(cell: &str) -> f64 {
     cell.trim_end_matches('x').parse().unwrap()
@@ -45,13 +61,33 @@ fn fig31_all_ratios_in_band() {
 }
 
 #[test]
-#[ignore = "quarantined: calibration-sensitive paper-ratio bands (see triage note at top of file)"]
-fn fig33_fig34_fig35_phase_ratios() {
+fn fig33_fig34_rag_ratios_on_both_substrates() {
+    // un-quarantined in PR 5 (see triage update above): the paper-band
+    // assertions, now anchored to the flow-measured substrate
     let f33 = experiments::fig33();
     assert!((9.0..20.0).contains(&ratio(&f33.rows[0][3])), "search {}", f33.rows[0][3]);
-    assert!((1.8..4.5).contains(&ratio(&f33.rows[1][3])), "gen {}", f33.rows[1][3]);
+    // gen band widened from 1.8–4.5 alongside the prefill bugfix (remote
+    // context-KV now pays its pool write on both platforms)
+    assert!((1.6..5.0).contains(&ratio(&f33.rows[1][3])), "gen {}", f33.rows[1][3]);
     let f34 = experiments::fig34();
-    assert!((5.0..12.0).contains(&ratio(&f34.rows[2][3])), "graph-rag total {}", f34.rows[2][3]);
+    assert!((4.5..13.0).contains(&ratio(&f34.rows[2][3])), "graph-rag total {}", f34.rows[2][3]);
+    // the flow-measured pipeline must reproduce the analytic phases the
+    // bands are pinned to (<0.1% per phase, idle fabric)
+    for (name, cfg) in [("recipe", RagConfig::flow_demo()), ("graph", RagConfig::graph_flow_demo())] {
+        for plat in [Platform::composable_cxl(), Platform::conventional_rdma()] {
+            let flow = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &plat);
+            let ana = run_rag(&cfg, &plat);
+            let ds = (flow.search.elapsed - ana.search.total()).abs() / ana.search.total();
+            let dg = (flow.generation.elapsed - ana.generation.total()).abs() / ana.generation.total();
+            assert!(ds < 0.001, "{name}/{}: search parity {:.4}%", plat.name, 100.0 * ds);
+            assert!(dg < 0.001, "{name}/{}: generation parity {:.4}%", plat.name, 100.0 * dg);
+        }
+    }
+}
+
+#[test]
+#[ignore = "quarantined: calibration-sensitive paper-ratio bands; DLRM has no flow substrate yet (see triage note)"]
+fn fig35_dlrm_phase_ratios() {
     let f35 = experiments::fig35();
     assert!((1.9..3.6).contains(&ratio(&f35.rows[0][3])), "init {}", f35.rows[0][3]);
     assert!((2.4..5.0).contains(&ratio(&f35.rows[1][3])), "inference {}", f35.rows[1][3]);

@@ -600,3 +600,53 @@ fn property_supercluster_transfer_total_order() {
     )
     .assert_ok();
 }
+
+#[test]
+fn property_rag_flow_hop_byte_conservation() {
+    // the event-driven RAG walk conserves bytes three ways: every hop byte
+    // is either a pool flow or a tier-1 hit; the fabric ledger's per-class
+    // columns reconstruct exactly from the report's counters (ANN hops +
+    // corpus spills = Parameter, setup demotions + earned promotions =
+    // Migration, generation's remote KV = KvCache); and the hierarchy's
+    // allocator accounting still balances after the run.
+    use commtax::fabric::TrafficClass;
+    use commtax::mem::hierarchy::HierarchicalMemory;
+    use commtax::sim::Engine;
+    use commtax::workload::rag::{launch_rag_flows, RagConfig, RagFlowOptions};
+    use commtax::workload::Platform;
+    check(
+        10,
+        |rng| {
+            let hops = 8 + rng.below(48);
+            let queries = 1 + rng.below(2);
+            let segments = 8 + rng.index(24);
+            let promote_after = rng.below(3); // 0 disables promotion
+            (hops, queries, segments, promote_after, rng.next_u64())
+        },
+        |&(hops, queries, segments, promote_after, seed)| {
+            let cfg = RagConfig { hops, queries, gen_tokens: 4, ..RagConfig::flow_demo() };
+            let opts = RagFlowOptions {
+                segments,
+                promote_after,
+                local_budget: if promote_after > 0 { segments as u64 * cfg.hop_bytes() / 2 } else { 0 },
+                zipf_skew: 1.1,
+                seed,
+            };
+            let p = Platform::composable_cxl();
+            let hier = HierarchicalMemory::new(1, opts.local_budget, p.tiers.clone());
+            let mut eng = Engine::new();
+            let run = launch_rag_flows(&cfg, opts, &p, &hier, 0, &mut eng);
+            eng.run();
+            let Some(r) = run.report() else {
+                return false;
+            };
+            let ledger = hier.fabric().ledger();
+            r.local_hop_bytes + r.pool_hop_bytes == cfg.queries * cfg.hops * cfg.hop_bytes()
+                && ledger.class_bytes(TrafficClass::Parameter) == r.corpus_spilled_bytes + r.pool_hop_bytes
+                && ledger.class_bytes(TrafficClass::Migration) == r.corpus_demoted_bytes + r.promoted_bytes
+                && ledger.class_bytes(TrafficClass::KvCache) == r.generation.bytes
+                && hier.check_conservation()
+        },
+    )
+    .assert_ok();
+}

@@ -1,0 +1,151 @@
+//! Acceptance tests for the event-driven RAG substrate (PR 5):
+//!
+//! * **idle-fabric parity** — the dependent-flow pipeline reproduces the
+//!   analytic `RagReport` per phase to <0.1%, on both platforms (the
+//!   3-link RDMA pool path included) and both flow-scale configs;
+//! * **colocation** — sharing the supercluster fabric with the flooded
+//!   serving mix inflates the search phase strictly (and the contention
+//!   ledger shows where);
+//! * **hot-node promotion** — corpus residency genuinely changes hop
+//!   latency;
+//! * **golden-trace determinism** — same config ⇒ byte-identical flow
+//!   trace and identical report numbers, alone and colocated.
+
+use commtax::serve::rag_colocate::{simulate_rag_colocate, RagColocateConfig};
+use commtax::workload::rag::{run_rag, simulate_rag_flows, RagConfig, RagFlowOptions};
+use commtax::workload::Platform;
+
+fn assert_parity(name: &str, cfg: &RagConfig, platform: &Platform) {
+    let flow = simulate_rag_flows(cfg, RagFlowOptions::parity(), platform);
+    let ana = run_rag(cfg, platform);
+    let ds = (flow.search.elapsed - ana.search.total()).abs() / ana.search.total();
+    assert!(
+        ds < 0.001,
+        "{name}: search parity {:.4}% (flow {} vs analytic {})",
+        100.0 * ds,
+        flow.search.elapsed,
+        ana.search.total()
+    );
+    let dg = (flow.generation.elapsed - ana.generation.total()).abs() / ana.generation.total();
+    assert!(
+        dg < 0.001,
+        "{name}: generation parity {:.4}% (flow {} vs analytic {})",
+        100.0 * dg,
+        flow.generation.elapsed,
+        ana.generation.total()
+    );
+    // idle fabric: every op pays exactly its route, nothing queues
+    assert!(flow.search.contention.max() <= 1e-6, "{name}: idle search op paid tax");
+    assert!(flow.generation.contention.max() <= 1e-6, "{name}: idle generation op paid tax");
+    assert!((flow.search.inflation() - 1.0).abs() < 1e-6, "{name}");
+}
+
+#[test]
+fn idle_parity_recipe_flow_demo_both_platforms() {
+    let cfg = RagConfig::flow_demo();
+    assert_parity("recipe/cxl", &cfg, &Platform::composable_cxl());
+    // the conventional pool path crosses 3 links — parity here proves the
+    // hierarchy's private fabric matches the analytic hop count
+    assert_parity("recipe/rdma", &cfg, &Platform::conventional_rdma());
+}
+
+#[test]
+fn idle_parity_graph_flow_demo() {
+    let cfg = RagConfig::graph_flow_demo();
+    assert_parity("graph/cxl", &cfg, &Platform::composable_cxl());
+}
+
+#[test]
+fn flow_substrate_preserves_the_fig33_34_speedups() {
+    // the per-hop arithmetic is hop-count-invariant, so the flow-scale
+    // configs measured on the event engine reproduce the paper-band
+    // speedups the analytic closed forms are calibrated to
+    let cxl = Platform::composable_cxl();
+    let rdma = Platform::conventional_rdma();
+    let cfg = RagConfig::flow_demo();
+    let f_cxl = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &cxl);
+    let f_rdma = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &rdma);
+    let search_ratio = f_rdma.search.elapsed / f_cxl.search.elapsed;
+    assert!((9.0..20.0).contains(&search_ratio), "flow-measured search speedup={search_ratio} (paper: 14x)");
+    // generation band widened from 1.8–4.5 alongside the prefill bugfix
+    // (remote context-KV now pays its pool write on both platforms)
+    let gen_ratio = f_rdma.generation.elapsed / f_cxl.generation.elapsed;
+    assert!((1.6..5.0).contains(&gen_ratio), "flow-measured generation speedup={gen_ratio} (paper: 2.78x)");
+    let g = RagConfig::graph_flow_demo();
+    let g_cxl = simulate_rag_flows(&g, RagFlowOptions::parity(), &cxl);
+    let g_rdma = simulate_rag_flows(&g, RagFlowOptions::parity(), &rdma);
+    let total_ratio = g_rdma.total() / g_cxl.total();
+    assert!((4.5..13.0).contains(&total_ratio), "flow-measured graph-rag speedup={total_ratio} (paper: 8.05x)");
+}
+
+#[test]
+fn colocation_inflates_search_strictly() {
+    let cfg = RagColocateConfig::flooded();
+    let r = simulate_rag_colocate(&cfg, &Platform::composable_cxl());
+    // the acceptance contract: strictly positive search-phase inflation
+    // when RAG shares the fabric with the flooded serving mix, and the
+    // per-op ledger records the queueing that caused it
+    assert!(r.search_inflation() > 1.0, "search inflation={}", r.search_inflation());
+    assert!(
+        r.rag_colocated.search.elapsed - r.rag_colocated.search.ideal > 0.0,
+        "elapsed-ideal spread must be positive"
+    );
+    assert!(r.rag_colocated.search.contention.max() > 0.0);
+    // serving pays in the other direction
+    assert!(r.serving_p99_inflation() > 1.0, "serving p99 inflation={}", r.serving_p99_inflation());
+    // both jobs' classes land on one ledger
+    use commtax::fabric::TrafficClass;
+    assert!(r.ledger.class_bytes(TrafficClass::Parameter) > 0);
+    assert!(r.ledger.class_bytes(TrafficClass::KvCache) > 0);
+    assert!(r.ledger.class_bytes(TrafficClass::Activation) > 0);
+}
+
+#[test]
+fn promotion_changes_hop_latency_and_conserves_bytes() {
+    let cfg = RagConfig { hops: 192, queries: 2, gen_tokens: 4, ..RagConfig::flow_demo() };
+    let p = Platform::composable_cxl();
+    let cold = simulate_rag_flows(&cfg, RagFlowOptions::parity(), &p);
+    let opts = RagFlowOptions { local_budget: 64 * cfg.hop_bytes(), ..RagFlowOptions::promoting() };
+    let hot = simulate_rag_flows(&cfg, opts, &p);
+    assert!(hot.promotions > 0);
+    assert!(hot.search.elapsed < cold.search.elapsed, "hot {} cold {}", hot.search.elapsed, cold.search.elapsed);
+    assert_eq!(hot.local_hop_bytes + hot.pool_hop_bytes, cfg.queries * cfg.hops * cfg.hop_bytes());
+    assert_eq!(cold.local_hop_bytes, 0);
+}
+
+#[test]
+fn golden_trace_determinism_alone() {
+    let run = || {
+        use commtax::mem::hierarchy::HierarchicalMemory;
+        use commtax::sim::Engine;
+        let cfg = RagConfig { hops: 64, queries: 2, gen_tokens: 8, ..RagConfig::flow_demo() };
+        let p = Platform::composable_cxl();
+        let opts = RagFlowOptions { local_budget: 32 * cfg.hop_bytes(), ..RagFlowOptions::promoting() };
+        let hier = HierarchicalMemory::new(1, opts.local_budget, p.tiers.clone());
+        let mut eng = Engine::new();
+        let r = commtax::workload::rag::launch_rag_flows(&cfg, opts, &p, &hier, 0, &mut eng);
+        eng.run();
+        let report = r.report().expect("completes");
+        (hier.fabric().trace_render(), report.total(), report.promotions, report.pool_hop_bytes)
+    };
+    let (t1, total1, p1, b1) = run();
+    let (t2, total2, p2, b2) = run();
+    assert_eq!(t1, t2, "flow trace must be byte-identical across runs");
+    assert_eq!(total1, total2);
+    assert_eq!(p1, p2);
+    assert_eq!(b1, b2);
+    assert!(!t1.is_empty());
+}
+
+#[test]
+fn golden_trace_determinism_colocated() {
+    let run = || {
+        let r = simulate_rag_colocate(&RagColocateConfig::flooded(), &Platform::composable_cxl());
+        (r.trace, r.rag_colocated.search.elapsed, r.serve_colocated.latency.percentile(99.0))
+    };
+    let (t1, s1, l1) = run();
+    let (t2, s2, l2) = run();
+    assert_eq!(t1, t2, "colocated trace must be byte-identical across runs");
+    assert_eq!(s1, s2);
+    assert_eq!(l1, l2);
+}
