@@ -1,0 +1,191 @@
+//! Flow-engine scaling benchmarks: the perf trajectory behind the
+//! incremental max-min rate repair + same-route aggregation work.
+//!
+//! Two workload families on the supercluster topology:
+//!
+//! * **scale sweep** — 1k/10k/100k concurrent flows over a fixed set of
+//!   hot routes, with [`AggregationPolicy::SameRoute`] armed so the rate
+//!   solver prices the swarm through a bounded aggregate population (the
+//!   open-loop serving regime the ROADMAP north-star asks for);
+//! * **churn** — 10k flows through a 128-wide closed loop of mostly
+//!   intra-cluster traffic (every completion launches the next flow), run
+//!   under the incremental solver and under the always-global solver. The
+//!   reported `churn_10k_speedup = global / incremental` is the measured
+//!   payoff of component-local repair.
+//!
+//! Flags (after `--` under `cargo bench --bench flow_engine`):
+//!   `--quick`            1 timed iteration, no warmup (the CI mode)
+//!   `--record <path>`    write the measurements as a new baseline JSON
+//!   `--check <path>`     compare against a committed baseline; prints
+//!                        `PERF WARN` lines and exits nonzero on regression
+//!
+//! The check tolerance is relative and comes from `COMMTAX_BENCH_TOL`
+//! (default 0.5 — i.e. a duration may grow 50%, a speedup may lose 50%,
+//! before warning; CI machines are noisy, the knob is deliberately loose).
+//!
+//! To refresh the committed baseline from a quiet machine:
+//! `cargo bench --bench flow_engine -- --record ../BENCH_flow_engine.json`
+
+use commtax::benchkit::{bench, PerfBaseline};
+use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
+use commtax::fabric::flow::{AggregationPolicy, FabricSim, RateSolver, TrafficClass, Transfer};
+use commtax::fabric::topology::NodeId;
+use commtax::sim::{Engine, Rng};
+use std::cell::Cell;
+use std::rc::Rc;
+
+const CLASSES: [TrafficClass; 3] = [TrafficClass::KvCache, TrafficClass::Activation, TrafficClass::Collective];
+
+fn build_fabric() -> FabricSim {
+    let clusters = vec![XLinkCluster::ualink(16); 4];
+    Supercluster::build_sim(&clusters, SuperclusterTopology::MultiClos, 2).fabric_sim().clone()
+}
+
+/// Hot routes of the scale sweep: tray fetches from every cluster plus
+/// cross-cluster peer exchanges — node ids are stable across rebuilds of
+/// the same shape, so one resolution serves every iteration.
+fn hot_pairs() -> Vec<(NodeId, NodeId)> {
+    let scs = Supercluster::build_sim(&vec![XLinkCluster::ualink(16); 4], SuperclusterTopology::MultiClos, 2);
+    let mut pairs = Vec::new();
+    for c in 0..4 {
+        for i in 0..8 {
+            pairs.push((scs.tray((c + i) % 2), scs.accel(c, i)));
+        }
+        for i in 0..4 {
+            pairs.push((scs.accel(c, 8 + i), scs.accel((c + 1) % 4, 8 + i)));
+        }
+    }
+    pairs
+}
+
+/// One scale point: `n` flows over the hot routes, 20 ns apart, far faster
+/// than they can drain — concurrency climbs to ~`n` and the aggregated
+/// solver carries it. Returns median wall ns per iteration.
+fn scale_point(n: usize, pairs: &[(NodeId, NodeId)], iters: usize, warmup: usize) -> f64 {
+    let r = bench(&format!("flow engine: {n} concurrent flows (agg+incremental)"), warmup, iters, || {
+        let sim = build_fabric();
+        sim.set_aggregation(AggregationPolicy::SameRoute);
+        let mut eng = Engine::new();
+        for i in 0..n {
+            let (src, dst) = pairs[i % pairs.len()];
+            let tr = Transfer::new(src, dst, 64 << 10, CLASSES[i % CLASSES.len()]);
+            let sim2 = sim.clone();
+            eng.schedule_at(i as f64 * 20.0, move |e| {
+                sim2.submit(e, tr);
+            });
+        }
+        eng.run();
+        assert_eq!(sim.completed() as usize, n, "scale sweep must drain completely");
+    });
+    r.median()
+}
+
+/// Closed-loop churn pairs: 90% intra-cluster (small link-sharing
+/// components — where incremental repair pays), 10% cross-cluster.
+fn churn_pairs(total: usize) -> Vec<(NodeId, NodeId)> {
+    let scs = Supercluster::build_sim(&vec![XLinkCluster::ualink(16); 8], SuperclusterTopology::MultiClos, 2);
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut pairs = Vec::with_capacity(total);
+    while pairs.len() < total {
+        let c = rng.index(8);
+        let a = rng.index(16);
+        let mut b = rng.index(16);
+        if rng.chance(0.9) {
+            if a == b {
+                b = (b + 1) % 16;
+            }
+            pairs.push((scs.accel(c, a), scs.accel(c, b)));
+        } else {
+            pairs.push((scs.accel(c, a), scs.accel((c + 1 + rng.index(7)) % 8, b)));
+        }
+    }
+    pairs
+}
+
+fn submit_next(
+    sim: &FabricSim,
+    eng: &mut Engine,
+    pairs: &Rc<Vec<(NodeId, NodeId)>>,
+    next: &Rc<Cell<usize>>,
+    total: usize,
+) {
+    let i = next.get();
+    if i >= total {
+        return;
+    }
+    next.set(i + 1);
+    let (src, dst) = pairs[i];
+    let (sim2, pairs2, next2) = (sim.clone(), pairs.clone(), next.clone());
+    sim.submit_with(eng, Transfer::new(src, dst, 256 << 10, TrafficClass::KvCache), move |e, _| {
+        submit_next(&sim2, e, &pairs2, &next2, total);
+    });
+}
+
+/// 10k-flow closed-loop churn (window 128) under `solver`; every flow
+/// start/finish triggers a rate repair, which is exactly what the solver
+/// choice changes. Returns median wall ns per iteration.
+fn churn_point(solver: RateSolver, pairs: &Rc<Vec<(NodeId, NodeId)>>, iters: usize, warmup: usize) -> f64 {
+    let total = pairs.len();
+    let label = match solver {
+        RateSolver::Global => "flow engine: 10k churn (global solver)",
+        RateSolver::Incremental { .. } => "flow engine: 10k churn (incremental solver)",
+    };
+    let r = bench(label, warmup, iters, || {
+        let clusters = vec![XLinkCluster::ualink(16); 8];
+        let sim = Supercluster::build_sim(&clusters, SuperclusterTopology::MultiClos, 2).fabric_sim().clone();
+        sim.set_rate_solver(solver);
+        let mut eng = Engine::new();
+        let next = Rc::new(Cell::new(0usize));
+        for _ in 0..128 {
+            submit_next(&sim, &mut eng, pairs, &next, total);
+        }
+        eng.run();
+        assert_eq!(sim.completed() as usize, total, "churn loop must drain completely");
+    });
+    r.median()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let flag_value = |flag: &str| args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned();
+    let record = flag_value("--record");
+    let check = flag_value("--check");
+    let tol: f64 = std::env::var("COMMTAX_BENCH_TOL").ok().and_then(|v| v.parse().ok()).unwrap_or(0.5);
+
+    let (iters, warmup) = if quick { (1, 0) } else { (3, 1) };
+    let mode = if quick { "quick" } else { "full" };
+    let mut cur = PerfBaseline::new(&format!("flow_engine bench, {mode} mode"));
+
+    let pairs = hot_pairs();
+    cur.record("scale_1k_ns", scale_point(1_000, &pairs, iters, warmup));
+    cur.record("scale_10k_ns", scale_point(10_000, &pairs, iters, warmup));
+    // the 100k point is expensive by design; never iterate it
+    cur.record("scale_100k_ns", scale_point(100_000, &pairs, 1, 0));
+
+    let cpairs = Rc::new(churn_pairs(10_000));
+    let inc = churn_point(RateSolver::default(), &cpairs, iters, warmup);
+    let glob = churn_point(RateSolver::Global, &cpairs, iters, warmup);
+    cur.record("churn_10k_incremental_ns", inc);
+    cur.record("churn_10k_global_ns", glob);
+    cur.record("churn_10k_speedup", glob / inc);
+    println!("  -> churn speedup (global / incremental): {:.2}x", glob / inc);
+
+    if let Some(path) = record {
+        cur.save(&path).expect("write baseline");
+        println!("recorded baseline -> {path}");
+    }
+    if let Some(path) = check {
+        let base = PerfBaseline::load(&path).expect("read committed baseline");
+        let warns = base.regressions(&cur, tol);
+        for w in &warns {
+            println!("PERF WARN {w}");
+        }
+        if warns.is_empty() {
+            println!("perf check OK against {path} (tol {tol})");
+        } else {
+            println!("perf check: {} regression(s) against {path} (tol {tol})", warns.len());
+            std::process::exit(1);
+        }
+    }
+}

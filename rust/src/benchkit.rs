@@ -1,10 +1,15 @@
 //! Minimal benchmark harness (criterion is unavailable in this offline
 //! build — see DESIGN.md §Substitutions).
 //!
-//! Provides warmup + timed iterations with median/p95 reporting and a
-//! stable text output format shared by all `rust/benches/*` targets.
+//! Provides warmup + timed iterations with median/p95 reporting, a stable
+//! text output format shared by all `rust/benches/*` targets, and
+//! [`PerfBaseline`] — a committed JSON file of named measurements a bench
+//! binary can record to and re-check against, which is how the repo's perf
+//! trajectory (`BENCH_flow_engine.json`) is versioned and CI-gated.
 
+use crate::config::json::Json;
 use crate::sim::Summary;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// One measured benchmark.
@@ -90,6 +95,97 @@ pub fn table_row(cells: &[String]) {
     println!("{}", cells.join(" | "));
 }
 
+/// A committed set of named perf measurements (a bench baseline file).
+///
+/// Entries are `name -> value`. Names ending in `_speedup` are
+/// higher-is-better ratios; everything else is a lower-is-better duration
+/// in nanoseconds. [`Self::regressions`] applies that convention so a CI
+/// job can diff a fresh quick-mode run against the committed file with one
+/// relative tolerance knob.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PerfBaseline {
+    /// Free-form note on where the numbers came from (host, mode, date).
+    pub provenance: String,
+    pub entries: BTreeMap<String, f64>,
+}
+
+impl PerfBaseline {
+    /// Empty baseline with a provenance note.
+    pub fn new(provenance: &str) -> Self {
+        PerfBaseline { provenance: provenance.to_string(), entries: BTreeMap::new() }
+    }
+
+    /// Record (or overwrite) one measurement.
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.entries.insert(name.to_string(), value);
+    }
+
+    /// Render as pretty JSON, one entry per line (stable diffs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"provenance\": {},\n", Json::Str(self.provenance.clone()).to_string()));
+        out.push_str("  \"entries\": {\n");
+        let n = self.entries.len();
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 < n { "," } else { "" };
+            out.push_str(&format!("    {}: {}{comma}\n", Json::Str(k.clone()).to_string(), Json::Num(*v).to_string()));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Parse a baseline previously rendered by [`Self::to_json`] (any JSON
+    /// object with `provenance` and a numeric `entries` map works).
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let provenance = v.get("provenance").and_then(|p| p.as_str()).unwrap_or("").to_string();
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Object(m)) = v.get("entries") {
+            for (k, val) in m {
+                if let Some(f) = val.as_f64() {
+                    entries.insert(k.clone(), f);
+                }
+            }
+        }
+        Ok(PerfBaseline { provenance, entries })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> crate::Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Save as JSON to a file.
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Compare `current` against this baseline with relative tolerance
+    /// `tol` (e.g. 0.5 = 50% headroom). Returns one human-readable line
+    /// per regression: a duration that grew past `base × (1 + tol)`, a
+    /// `_speedup` ratio that fell below `base × (1 - tol)`, or a baseline
+    /// entry missing from `current`. Extra entries in `current` are fine.
+    pub fn regressions(&self, current: &PerfBaseline, tol: f64) -> Vec<String> {
+        let mut out = Vec::new();
+        for (name, &base) in &self.entries {
+            let Some(&cur) = current.entries.get(name) else {
+                out.push(format!("{name}: missing from current run (baseline {base})"));
+                continue;
+            };
+            if name.ends_with("_speedup") {
+                if cur < base * (1.0 - tol) {
+                    out.push(format!("{name}: speedup {cur:.2} fell below baseline {base:.2} (tol {tol})"));
+                }
+            } else if cur > base * (1.0 + tol) {
+                out.push(format!("{name}: {} exceeds baseline {} (tol {tol})", fmt_ns(cur), fmt_ns(base)));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +215,34 @@ mod tests {
         let (v, ns) = time_once("x", || 42);
         assert_eq!(v, 42);
         assert!(ns >= 0.0);
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let mut b = PerfBaseline::new("unit test");
+        b.record("scale_1k_ns", 1.25e8);
+        b.record("churn_10k_speedup", 8.0);
+        let parsed = PerfBaseline::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed, b);
+    }
+
+    #[test]
+    fn baseline_regressions_follow_direction_conventions() {
+        let mut base = PerfBaseline::new("base");
+        base.record("scale_1k_ns", 100.0);
+        base.record("churn_10k_speedup", 10.0);
+        base.record("gone_ns", 5.0);
+        let mut cur = PerfBaseline::new("cur");
+        cur.record("scale_1k_ns", 140.0); // +40% — within 50% tolerance
+        cur.record("churn_10k_speedup", 6.0); // -40% — within tolerance
+        cur.record("extra_ns", 1.0); // extra entries are fine
+        let r = base.regressions(&cur, 0.5);
+        assert_eq!(r.len(), 1, "only the missing entry flags: {r:?}");
+        assert!(r[0].contains("gone_ns"));
+        // tighten the tolerance: both movements now regress
+        let r = base.regressions(&cur, 0.25);
+        assert_eq!(r.len(), 3, "{r:?}");
+        assert!(r.iter().any(|l| l.contains("scale_1k_ns")));
+        assert!(r.iter().any(|l| l.contains("churn_10k_speedup")));
     }
 }

@@ -406,6 +406,21 @@ impl SuperclusterSim {
         &self.sim
     }
 
+    /// Pass the rate-repair strategy through to the flow engine (see
+    /// [`crate::fabric::flow::RateSolver`]).
+    pub fn set_rate_solver(&self, solver: crate::fabric::flow::RateSolver) {
+        self.sim.set_rate_solver(solver);
+    }
+
+    /// Pass the aggregation policy through to the flow engine: under
+    /// [`crate::fabric::flow::AggregationPolicy::SameRoute`] concurrent
+    /// same-route, same-class transfers (e.g. a serving swarm's KV
+    /// fetches converging on one tray) fuse into aggregate flows while
+    /// member completion times and ledger attribution stay exact.
+    pub fn set_aggregation(&self, policy: crate::fabric::flow::AggregationPolicy) {
+        self.sim.set_aggregation(policy);
+    }
+
     /// Number of clusters.
     pub fn cluster_count(&self) -> usize {
         self.dir.accels.len()

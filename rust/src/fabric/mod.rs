@@ -25,6 +25,7 @@ pub mod cxl;
 pub mod flit;
 pub mod flow;
 pub mod link;
+pub mod minheap;
 pub mod netstack;
 pub mod routing;
 pub mod switch;
@@ -32,7 +33,9 @@ pub mod topology;
 
 pub use cxl::{CxlProtocol, CxlStack, CxlVersion};
 pub use flit::FlitFormat;
-pub use flow::{CommTaxLedger, FabricSim, FlowDone, FlowId, LinkUse, TrafficClass, Transfer};
+pub use flow::{
+    AggregationPolicy, CommTaxLedger, FabricSim, FlowDone, FlowId, LinkUse, RateSolver, TrafficClass, Transfer,
+};
 pub use link::{LinkClass, LinkSpec};
 pub use netstack::SoftwareStack;
 pub use routing::RoutingPolicy;

@@ -270,6 +270,16 @@ impl HierarchicalMemory {
         self
     }
 
+    /// Enable same-route flow aggregation on the hierarchy's fabric (see
+    /// [`crate::fabric::flow::AggregationPolicy`]): a burst of concurrent
+    /// spills or fetches between one accelerator and the tray fuses into
+    /// one aggregate flow per direction, while per-member completion times
+    /// and per-class ledger attribution stay exact.
+    pub fn with_aggregation(self, policy: crate::fabric::flow::AggregationPolicy) -> Self {
+        self.fabric.set_aggregation(policy);
+        self
+    }
+
     /// The fabric the hierarchy's flows ride (shared handle).
     pub fn fabric(&self) -> &FabricSim {
         &self.fabric

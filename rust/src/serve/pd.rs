@@ -46,6 +46,11 @@ pub struct PdConfig {
     pub gen_tokens: u64,
     /// KV budget (bytes) for admission.
     pub kv_budget: u64,
+    /// Fuse concurrent same-route KV handoff legs into aggregate flows
+    /// ([`crate::fabric::flow::AggregationPolicy::SameRoute`]); per-request
+    /// handoff latencies and the ledger stay exact, the solver just handles
+    /// fewer flow objects under handoff storms.
+    pub aggregate_flows: bool,
     pub seed: u64,
 }
 
@@ -61,6 +66,7 @@ impl Default for PdConfig {
             prompt_tokens: 512,
             gen_tokens: 64,
             kv_budget: 64 << 30,
+            aggregate_flows: false,
             seed: 11,
         }
     }
@@ -151,6 +157,9 @@ pub fn simulate_pd_fabric(
     // (tier-1 capacity 0: the handoff uses raw spill/fetch streams, no
     // region bookkeeping)
     let hier = HierarchicalMemory::new(2, 0, platform.tiers.clone());
+    if cfg.aggregate_flows {
+        hier.fabric().set_aggregation(crate::fabric::flow::AggregationPolicy::SameRoute);
+    }
     let sim = hier.fabric().clone();
     let handoff_bytes = cfg.model.kv_bytes_per_token() * cfg.prompt_tokens;
     let env = Rc::new(PdEnv {
@@ -392,6 +401,22 @@ mod tests {
         );
         assert!(r.handoff.mean() > 0.0, "handoff must cost time");
         assert!(trace.contains("handoff-finish"));
+    }
+
+    #[test]
+    fn aggregated_handoffs_match_per_flow_accounting() {
+        // fusing same-route KV handoff legs must not change what the run
+        // measures: same completions, byte-exact ledger, same handoff cost
+        let cfg = PdConfig { requests: 24, arrival_mean: 4.0e6, ..Default::default() };
+        let p = Platform::composable_cxl();
+        let (base, lb, _) = simulate_pd_fabric(&cfg, &p, true);
+        let (fused, lf, _) = simulate_pd_fabric(&PdConfig { aggregate_flows: true, ..cfg.clone() }, &p, true);
+        assert_eq!(base.completed, fused.completed);
+        assert_eq!(lb.flows, lf.flows);
+        assert_eq!(lb.total_payload, lf.total_payload);
+        assert_eq!(lb.class_payload, lf.class_payload);
+        let rel = (base.handoff.mean() - fused.handoff.mean()).abs() / base.handoff.mean().max(1.0);
+        assert!(rel < 1e-6, "handoff mean diverged: {} vs {}", base.handoff.mean(), fused.handoff.mean());
     }
 
     #[test]

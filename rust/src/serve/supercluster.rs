@@ -79,6 +79,11 @@ pub struct SuperServeConfig {
     pub sync_every: usize,
     pub sync_bytes: u64,
     pub strategy: RoutingStrategy,
+    /// Fuse concurrent same-route, same-class flows (e.g. several tenants'
+    /// KV prefetches off one tray) into aggregate flows
+    /// ([`crate::fabric::flow::AggregationPolicy::SameRoute`]); per-batch
+    /// latencies and ledger attribution stay exact.
+    pub aggregate_flows: bool,
     pub seed: u64,
 }
 
@@ -101,6 +106,7 @@ impl Default for SuperServeConfig {
             sync_every: 4,
             sync_bytes: 4 << 20,
             strategy: RoutingStrategy::FabricAware,
+            aggregate_flows: false,
             seed: 42,
         }
     }
@@ -238,6 +244,9 @@ pub(crate) fn launch_supercluster(
     assert!(scs.cluster_count() >= cfg.clusters, "serving spans more clusters than the fabric has");
     assert!(scs.tray_count() >= 1);
     let scs = scs.clone();
+    if cfg.aggregate_flows {
+        scs.set_aggregation(crate::fabric::flow::AggregationPolicy::SameRoute);
+    }
     // per-tenant arrivals + batches, via the shared serving front-end
     let mut arrivals = Vec::with_capacity(cfg.tenants);
     let mut batches: Vec<SBatch> = Vec::new();
@@ -480,6 +489,20 @@ mod tests {
             ledger.contention.max() > 0.0,
             "near-simultaneous tenant batches must queue on shared bridge/spine links"
         );
+    }
+
+    #[test]
+    fn aggregated_serving_preserves_ledger_attribution() {
+        // route-independent figures must be byte-exact whether the fabric
+        // fuses same-route tenant flows or prices them one by one
+        let (rb, lb, _) = simulate_supercluster(&SuperServeConfig::default(), &Platform::composable_cxl());
+        let cfg = SuperServeConfig { aggregate_flows: true, ..Default::default() };
+        let (rf, lf, _) = simulate_supercluster(&cfg, &Platform::composable_cxl());
+        assert_eq!(rf.latency.count(), cfg.tenants * cfg.requests_per_tenant);
+        assert_eq!(rb.batches, rf.batches);
+        assert_eq!(lb.flows, lf.flows);
+        assert_eq!(lb.total_payload, lf.total_payload);
+        assert_eq!(lb.class_payload, lf.class_payload);
     }
 
     #[test]

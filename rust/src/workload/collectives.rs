@@ -394,6 +394,16 @@ fn ring_chain_step<L: FlowLane>(
 /// with a different round count, so they all share one idle-parity proof:
 /// on an idle fabric each chain completes in exactly
 /// `rounds × step_time(chunk)`.
+///
+/// This round-chaining is *static* flow fusion: the collective's schedule
+/// is known up front, so `rounds` same-route chunks become one chained
+/// sequence rather than `rounds` simultaneous flows. Serving/KV/activation
+/// swarms have no such schedule — their same-route concurrency only
+/// materializes at run time — which is what the fabric-level
+/// [`crate::fabric::flow::AggregationPolicy::SameRoute`] generalizes this
+/// to: the engine fuses whatever happens to coincide on a route, with the
+/// same exactness contract (per-member completion times and ledger bytes
+/// unchanged).
 pub(crate) fn ring_rounds_flows_on<L: FlowLane>(
     lane: &L,
     eng: &mut Engine,
@@ -1273,6 +1283,29 @@ mod tests {
         assert!((inter.time(4096) - scs.estimate(scs.leader(0), scs.leader(1), 4096).unwrap()).abs() < 1e-9);
         let intra = BridgedCost::resolve(&scs, scs.accel(0, 0), scs.accel(0, 1)).unwrap();
         assert_eq!(intra.conversion, 0.0);
+    }
+
+    #[test]
+    fn ring_allreduce_unchanged_under_fabric_aggregation() {
+        // the statically fused ring must price identically whether or not
+        // the fabric's dynamic same-route aggregation is armed underneath
+        use crate::fabric::flow::AggregationPolicy;
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let run = |agg| {
+            let sim = FabricSim::new(Topology::fully_connected(6), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            sim.set_aggregation(agg);
+            let ranks = sim.endpoints();
+            let mut eng = Engine::new();
+            let r = ring_allreduce_flows_on(&sim, &mut eng, &ranks, 1 << 24);
+            eng.run();
+            (r.finish_time().expect("collective completes"), sim.total_payload())
+        };
+        let (a, pa) = run(AggregationPolicy::Off);
+        let (b, pb) = run(AggregationPolicy::SameRoute);
+        assert!((a - b).abs() / a < 1e-6, "finish diverged: {a} vs {b}");
+        assert_eq!(pa, pb);
     }
 
     #[test]

@@ -582,6 +582,60 @@ fn property_training_byte_conservation_on_ledger() {
 }
 
 #[test]
+fn property_aggregated_swarm_conserves_bytes() {
+    // same-route aggregation is invisible to the ledger's accounting: for
+    // any random swarm, delivered payload equals submitted bytes, the
+    // per-class columns partition the total, `flows` counts members (not
+    // aggregates), and every cross-node byte shows up on exactly the two
+    // star edges of its route.
+    use commtax::fabric::flow::{AggregationPolicy, FabricSim, TrafficClass, Transfer};
+    use commtax::sim::Engine;
+    check(
+        32,
+        |rng| {
+            let n = 3 + rng.index(6);
+            let swarm: Vec<(usize, usize, u64, u64, f64)> = (0..30)
+                .map(|_| (rng.index(n), rng.index(n), 1 + rng.below(1 << 18), rng.below(3), rng.f64() * 1.0e4))
+                .collect();
+            (n, swarm)
+        },
+        |(n, swarm)| {
+            let sim = FabricSim::new(Topology::star(*n), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            sim.set_aggregation(AggregationPolicy::SameRoute);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let (mut total, mut crossing) = (0u64, 0u64);
+            let mut by_class = [0u64; 3];
+            for &(a, b, bytes, ci, at) in swarm {
+                let class = [TrafficClass::KvCache, TrafficClass::Collective, TrafficClass::Activation][ci as usize];
+                let (src, dst) = (eps[a], eps[b]);
+                let sim2 = sim.clone();
+                eng.schedule_at(at, move |e| {
+                    sim2.submit(e, Transfer::new(src, dst, bytes, class));
+                });
+                total += bytes;
+                by_class[ci as usize] += bytes;
+                if a != b {
+                    crossing += bytes;
+                }
+            }
+            eng.run();
+            let ledger = sim.ledger();
+            let per_link_sum: u64 = ledger.per_link.iter().map(|l| l.payload).sum();
+            sim.active_flows() == 0
+                && ledger.flows == swarm.len() as u64
+                && ledger.total_payload == total
+                && ledger.class_bytes(TrafficClass::KvCache) == by_class[0]
+                && ledger.class_bytes(TrafficClass::Collective) == by_class[1]
+                && ledger.class_bytes(TrafficClass::Activation) == by_class[2]
+                // star routes are leaf->hub->leaf: two edges per crossing byte
+                && per_link_sum == 2 * crossing
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
 fn property_supercluster_transfer_total_order() {
     // inter-cluster latency >= intra-cluster latency for the same payload
     use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
