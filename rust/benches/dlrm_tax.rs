@@ -1,0 +1,52 @@
+//! Bench target for the dlrm-tax experiment: Fig 35's embedding-dominated
+//! recommendation phases priced by the analytic closed forms vs measured
+//! as routed flows on the contended fabric (idle parity, CXL-direct vs
+//! RDMA-staged table movement, hot-shard promotion, rec+LLM colocation).
+//!
+//! Flags (after `--` under `cargo bench --bench dlrm_tax`):
+//!   `--quick`            accepted for CLI symmetry with the flow_engine
+//!                        bench; the experiment is a single end-to-end run
+//!                        either way
+//!   `--record <path>`    write the measurement as a new baseline JSON
+//!   `--check <path>`     compare against a committed baseline; prints
+//!                        `PERF WARN` lines and exits nonzero on regression
+//!
+//! The check tolerance is relative and comes from `COMMTAX_BENCH_TOL`
+//! (default 0.5; CI machines are noisy, the knob is deliberately loose).
+//!
+//! To refresh the committed baseline from a quiet machine:
+//! `cargo bench --bench dlrm_tax -- --record ../BENCH_dlrm_tax.json`
+
+use commtax::benchkit::PerfBaseline;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flag_value = |flag: &str| args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned();
+    let record = flag_value("--record");
+    let check = flag_value("--check");
+    let tol: f64 = std::env::var("COMMTAX_BENCH_TOL").ok().and_then(|v| v.parse().ok()).unwrap_or(0.5);
+
+    let (table, ns) = commtax::benchkit::time_once("dlrm-tax", commtax::experiments::dlrm_tax);
+    table.print();
+
+    let mut cur = PerfBaseline::new("dlrm_tax bench, single end-to-end run");
+    cur.record("dlrm_tax_ns", ns);
+
+    if let Some(path) = record {
+        cur.save(&path).expect("write baseline");
+        println!("recorded baseline -> {path}");
+    }
+    if let Some(path) = check {
+        let base = PerfBaseline::load(&path).expect("read committed baseline");
+        let warns = base.regressions(&cur, tol);
+        for w in &warns {
+            println!("PERF WARN {w}");
+        }
+        if warns.is_empty() {
+            println!("perf check OK against {path} (tol {tol})");
+        } else {
+            println!("perf check: {} regression(s) against {path} (tol {tol})", warns.len());
+            std::process::exit(1);
+        }
+    }
+}

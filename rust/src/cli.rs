@@ -276,6 +276,7 @@ mod tests {
         assert!(ids.contains(&"train-tax"));
         assert!(ids.contains(&"comm-tax"));
         assert!(ids.contains(&"rag-tax"));
+        assert!(ids.contains(&"dlrm-tax"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use crate::fabric::flow::{CommTaxLedger, TrafficClass};
 use crate::mem::hierarchy::HierStats;
+use crate::workload::dlrm::DlrmFlowReport;
 use crate::workload::rag::RagFlowReport;
 use crate::workload::training::{FlowStepReport, TrainAxis};
 use std::collections::BTreeMap;
@@ -131,6 +132,30 @@ impl Telemetry {
         self.gauge_max(
             &format!("{prefix}.generation.contention.p99_ns"),
             report.generation.contention.percentile(99.0),
+        );
+    }
+
+    /// Fold one event-driven DLRM run into the registry under `prefix`
+    /// (e.g. `"dlrm"`): init-stream and per-batch gather flow/byte
+    /// counters (the recommendation-tax attribution the `dlrm-tax` table
+    /// reports) plus elapsed/inflation gauges. Counters accumulate across
+    /// runs; peak gauges keep their high-water mark.
+    pub fn record_dlrm(&mut self, prefix: &str, report: &DlrmFlowReport) {
+        self.incr(&format!("{prefix}.init.flows"), report.init.flows);
+        self.incr(&format!("{prefix}.init.pool_bytes"), report.table_streamed_bytes);
+        self.incr(&format!("{prefix}.gather.flows"), report.inference.flows);
+        self.incr(&format!("{prefix}.gather.pool_bytes"), report.pool_gather_bytes);
+        self.incr(&format!("{prefix}.gather.local_bytes"), report.local_gather_bytes);
+        self.incr(&format!("{prefix}.gather.hot_bytes"), report.hot_gather_bytes);
+        self.incr(&format!("{prefix}.promotions"), report.promotions);
+        self.gauge(&format!("{prefix}.init.elapsed_ns"), report.init.elapsed);
+        self.gauge(&format!("{prefix}.inference.elapsed_ns"), report.inference.elapsed);
+        self.gauge_max(&format!("{prefix}.init.inflation_peak"), report.init.inflation());
+        self.gauge_max(&format!("{prefix}.inference.inflation_peak"), report.inference.inflation());
+        self.gauge_max(&format!("{prefix}.init.contention.p99_ns"), report.init.contention.percentile(99.0));
+        self.gauge_max(
+            &format!("{prefix}.inference.contention.p99_ns"),
+            report.inference.contention.percentile(99.0),
         );
     }
 
@@ -299,6 +324,28 @@ mod tests {
         t.record_rag("rag", &r);
         assert_eq!(t.counter("rag.search.flows"), 2 * r.search.flows);
         assert!(t.report().contains("rag.search.pool_bytes"));
+    }
+
+    #[test]
+    fn dlrm_run_folds_into_registry() {
+        use crate::workload::dlrm::{simulate_dlrm_flows, DlrmConfig, DlrmFlowOptions};
+        use crate::workload::Platform;
+        let cfg = DlrmConfig { batches: 8, ..DlrmConfig::flow_demo() };
+        let r = simulate_dlrm_flows(&cfg, DlrmFlowOptions::parity(), &Platform::composable_cxl());
+        let mut t = Telemetry::new();
+        t.record_dlrm("dlrm", &r);
+        assert_eq!(t.counter("dlrm.init.flows"), 1, "one bulk table stream");
+        assert_eq!(t.counter("dlrm.init.pool_bytes"), cfg.table_bytes);
+        assert_eq!(t.counter("dlrm.gather.flows"), r.inference.flows);
+        assert_eq!(t.counter("dlrm.gather.pool_bytes"), cfg.batches * cfg.gather_split().1);
+        assert_eq!(t.counter("dlrm.gather.hot_bytes"), cfg.batches * cfg.gather_split().0);
+        assert!(t.gauge_value("dlrm.init.elapsed_ns").unwrap() > 0.0);
+        // idle run: the inflation peak sits at 1
+        assert!((t.gauge_value("dlrm.inference.inflation_peak").unwrap() - 1.0).abs() < 1e-6);
+        // a second run accumulates the counters
+        t.record_dlrm("dlrm", &r);
+        assert_eq!(t.counter("dlrm.gather.flows"), 2 * r.inference.flows);
+        assert!(t.report().contains("dlrm.gather.pool_bytes"));
     }
 
     #[test]

@@ -1534,6 +1534,147 @@ pub fn rag_tax() -> Table {
     }
 }
 
+/// DLRM-tax ledger — the Fig 35 recommendation workload priced by the
+/// analytic closed forms next to the event-driven run on the contended
+/// fabric: idle-fabric parity per phase on both platforms (the <0.1%
+/// acceptance contract, including the RDMA-staged init path), hot-shard
+/// promotion genuinely changing gather latency, and DLRM alone vs
+/// colocated with the flooded multi-tenant serving mix — the mixed
+/// rec+LLM tenancy tax the analytic model is structurally blind to, as a
+/// ledger output.
+pub fn dlrm_tax() -> Table {
+    use crate::coordinator::telemetry::Telemetry;
+    use crate::serve::rec_colocate::{simulate_rec_colocate, RecColocateConfig};
+    use crate::workload::dlrm::{simulate_dlrm_flows, DlrmFlowOptions};
+
+    let plat = Platform::composable_cxl();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // (a) idle-fabric parity: the routed table stream + gather flows
+    // reproduce the analytic DlrmReport per phase — on the CXL-direct
+    // write path and on the RDMA-staged baseline
+    let parity = simulate_dlrm_flows(&DlrmConfig::flow_demo(), DlrmFlowOptions::parity(), &plat);
+    let analytic = run_dlrm(&DlrmConfig::flow_demo(), &plat);
+    rows.push(vec![
+        "tensor init, idle fabric (flow demo)".into(),
+        fmt_ns(analytic.init.total()),
+        fmt_ns(parity.init.elapsed),
+        format!("{:+.2}% (must be ~0)", 100.0 * (parity.init.elapsed / analytic.init.total() - 1.0)),
+    ]);
+    rows.push(vec![
+        "inference gathers, idle fabric (flow demo)".into(),
+        fmt_ns(analytic.inference.total()),
+        fmt_ns(parity.inference.elapsed),
+        format!("{:+.2}% (must be ~0)", 100.0 * (parity.inference.elapsed / analytic.inference.total() - 1.0)),
+    ]);
+    {
+        let rdma = Platform::conventional_rdma();
+        let r_parity = simulate_dlrm_flows(&DlrmConfig::flow_demo(), DlrmFlowOptions::parity(), &rdma);
+        let r_analytic = run_dlrm(&DlrmConfig::flow_demo(), &rdma);
+        rows.push(vec![
+            "end-to-end, RDMA-staged baseline".into(),
+            fmt_ns(r_analytic.total()),
+            fmt_ns(r_parity.total()),
+            format!("{:+.2}% (must be ~0)", 100.0 * (r_parity.total() / r_analytic.total() - 1.0)),
+        ]);
+    }
+
+    // (b) the Fig 35 phase ratios, measured on the flow substrate
+    {
+        let cfg = DlrmConfig::flow_demo();
+        let rdma = simulate_dlrm_flows(&cfg, DlrmFlowOptions::parity(), &Platform::conventional_rdma());
+        rows.push(vec![
+            "flow-measured speedup (init / inference)".into(),
+            format!("init {:.2}x", rdma.init.elapsed / parity.init.elapsed),
+            format!("inference {:.2}x", rdma.inference.elapsed / parity.inference.elapsed),
+            "paper: 2.71x / 3.51x".into(),
+        ]);
+    }
+
+    // (c) hot-shard promotion: the table genuinely lives in the
+    // hierarchy, so revisited shards migrate into tier-1 and later
+    // gathers skip the fabric entirely
+    {
+        let cfg = DlrmConfig { batches: 128, ..DlrmConfig::flow_demo() };
+        let cold = simulate_dlrm_flows(&cfg, DlrmFlowOptions::parity(), &plat);
+        let hot = simulate_dlrm_flows(&cfg, DlrmFlowOptions::promoting(), &plat);
+        rows.push(vec![
+            "hot-shard promotion (zipf batch stream)".into(),
+            format!("cold: {}", fmt_ns(cold.inference.elapsed)),
+            format!("promoting: {} ({} promoted)", fmt_ns(hot.inference.elapsed), hot.promotions),
+            format!("{} gathers served from tier-1", crate::benchkit::fmt_bytes(hot.local_gather_bytes)),
+        ]);
+    }
+
+    // (d) DLRM alone vs colocated with the flooded serving mix: the mixed
+    // rec+LLM tenancy tax from both sides over one ledger
+    let r = simulate_rec_colocate(&RecColocateConfig::flooded(), &plat);
+    rows.push(vec![
+        "table init stream vs 3 flooded serving tenants".into(),
+        format!("alone: {}", fmt_ns(r.dlrm_alone.init.elapsed)),
+        format!("colocated: {}", fmt_ns(r.dlrm_colocated.init.elapsed)),
+        format!("{:.2}x init inflation", r.init_inflation()),
+    ]);
+    rows.push(vec![
+        "embedding gathers same scenario".into(),
+        format!("alone: {}", fmt_ns(r.dlrm_alone.inference.elapsed)),
+        format!("colocated: {}", fmt_ns(r.dlrm_colocated.inference.elapsed)),
+        format!(
+            "{:.2}x inflation, gather contention p99 {}",
+            r.inference_inflation(),
+            fmt_ns(r.dlrm_colocated.inference.contention.percentile(99.0))
+        ),
+    ]);
+    rows.push(vec![
+        "serving tenants during the recommendation job".into(),
+        format!("alone p99: {}", fmt_ns(r.serve_alone.latency.percentile(99.0))),
+        format!("colocated p99: {}", fmt_ns(r.serve_colocated.latency.percentile(99.0))),
+        format!("{:.2}x latency inflation", r.serving_p99_inflation()),
+    ]);
+    rows.push(vec![
+        "colocated ledger: traffic by class".into(),
+        format!(
+            "table+gathers {}",
+            crate::benchkit::fmt_bytes(r.ledger.class_bytes(crate::fabric::TrafficClass::Parameter))
+        ),
+        format!(
+            "kv {} / act {}",
+            crate::benchkit::fmt_bytes(r.ledger.class_bytes(crate::fabric::TrafficClass::KvCache)),
+            crate::benchkit::fmt_bytes(r.ledger.class_bytes(crate::fabric::TrafficClass::Activation))
+        ),
+        format!("flow contention p99 {}", fmt_ns(r.ledger.contention.percentile(99.0))),
+    ]);
+    for l in r.ledger.hottest(2) {
+        rows.push(vec![
+            format!("hot link #{} ({})", l.edge, l.link),
+            format!("{} -> {}", l.src, l.dst),
+            format!("util {:.0}%", 100.0 * l.utilization),
+            format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+        ]);
+    }
+
+    // (e) the coordinator's stable reporting path
+    let mut tel = Telemetry::new();
+    tel.record_dlrm("dlrm", &r.dlrm_colocated);
+    rows.push(vec![
+        "telemetry registry".into(),
+        format!("dlrm.gather.flows {}", tel.counter("dlrm.gather.flows")),
+        format!("dlrm.gather.pool_bytes {}", tel.counter("dlrm.gather.pool_bytes")),
+        format!(
+            "init inflation peak {:.2}x, contention p99 {}",
+            tel.gauge_value("dlrm.init.inflation_peak").unwrap_or(0.0),
+            fmt_ns(tel.gauge_value("dlrm.init.contention.p99_ns").unwrap_or(0.0))
+        ),
+    ]);
+
+    Table {
+        title: "DLRM tax — event-driven recommendation on the contended fabric: analytic vs measured, alone vs colocated"
+            .into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
 /// Experiment driver function type (one per paper table/figure).
 pub type TableFn = fn() -> Table;
 
@@ -1565,6 +1706,7 @@ pub fn registry() -> Vec<(&'static str, TableFn)> {
         ("supercluster-tax", supercluster_tax),
         ("train-tax", train_tax),
         ("rag-tax", rag_tax),
+        ("dlrm-tax", dlrm_tax),
     ]
 }
 
@@ -1736,6 +1878,26 @@ mod tests {
         let search_row = t.rows.iter().find(|r| r[3].ends_with("search inflation")).expect("search row");
         let f: f64 = search_row[3].split('x').next().unwrap().parse().unwrap();
         assert!(f > 1.0, "search inflation {f} must exceed 1");
+        // serving pays too, and the ledger/telemetry rows are present
+        assert!(t.rows.iter().any(|r| r[0].starts_with("serving tenants")));
+        assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));
+        assert!(t.rows.iter().any(|r| r[0] == "telemetry registry"));
+    }
+
+    #[test]
+    fn dlrm_tax_parity_and_colocation_inflation() {
+        let t = dlrm_tax();
+        // idle-fabric parity per phase and platform: the routed run
+        // within 0.1% of the analytic closed forms (the acceptance
+        // threshold)
+        for row in &t.rows[..3] {
+            let delta: f64 = row[3].split('%').next().unwrap().parse().unwrap();
+            assert!(delta.abs() < 0.1, "{}: idle parity delta={delta}%", row[0]);
+        }
+        // the colocated init stream pays a strictly positive tax
+        let init_row = t.rows.iter().find(|r| r[3].ends_with("init inflation")).expect("init row");
+        let f: f64 = init_row[3].split('x').next().unwrap().parse().unwrap();
+        assert!(f > 1.0, "init inflation {f} must exceed 1");
         // serving pays too, and the ledger/telemetry rows are present
         assert!(t.rows.iter().any(|r| r[0].starts_with("serving tenants")));
         assert!(t.rows.iter().any(|r| r[0].starts_with("hot link")));

@@ -432,6 +432,11 @@ struct FlowNet {
     completed: u64,
     contention: Summary,
     concurrency: TimeWeighted,
+    /// Rate-repair rounds the numerical guard cut short (finite headroom
+    /// left but no link crossed its saturation tolerance). Always
+    /// compiled, so release builds surface partial rate allocations
+    /// instead of silently accepting them.
+    rate_guard_trips: u64,
     trace: Vec<TraceRec>,
     trace_cap: usize,
     scratch: SolveScratch,
@@ -470,6 +475,7 @@ impl FlowNet {
             completed: 0,
             contention: Summary::new(),
             concurrency: TimeWeighted::new(),
+            rate_guard_trips: 0,
             trace: Vec::new(),
             trace_cap: 1 << 16,
             scratch: SolveScratch::default(),
@@ -754,13 +760,26 @@ impl FlowNet {
                 // crossed its saturation tolerance this round. The partial
                 // allocation stands; every first round assigns a positive
                 // increment, so no flow can be silently stranded at rate 0
-                // — asserted here so a regression fails loudly in debug
-                // builds instead of stalling a simulation.
+                // — asserted below so a regression fails loudly in debug
+                // builds instead of stalling a simulation. Trips are
+                // counted in an always-compiled stat
+                // ([`FabricSim::rate_guard_trips`]) so release builds
+                // surface them too, rather than silently accepting the
+                // partial rates.
+                self.rate_guard_trips += 1;
                 #[cfg(debug_assertions)]
                 {
+                    if self.rate_guard_trips == 1 {
+                        eprintln!(
+                            "commtax: rate-repair numerical guard tripped ({left} unfrozen, rates stay partial; \
+                             logged once, see rate_guard_trips())"
+                        );
+                    }
+                    // count over the full index range, not iteration order:
+                    // the tally is identical however the set is traversed,
+                    // and the log above already printed when it fires
                     let stalled = (0..nf).filter(|&i| !s.frozen[i] && s.rate[i] <= 0.0).count();
                     debug_assert_eq!(stalled, 0, "rate repair left {stalled} unfrozen flow(s) at zero rate");
-                    eprintln!("commtax: rate-repair numerical guard tripped ({left} unfrozen, rates stay partial)");
                 }
                 break;
             }
@@ -965,6 +984,15 @@ impl FabricSim {
     /// Flows delivered so far.
     pub fn completed(&self) -> u64 {
         self.net.borrow().completed
+    }
+
+    /// Rate-repair rounds the numerical guard cut short so far (finite
+    /// headroom left but no link crossed its saturation tolerance; the
+    /// partial rate allocation stood). Always compiled — 0 on healthy
+    /// runs; a nonzero count in release builds is the signal the old
+    /// debug-only `eprintln!` could never deliver.
+    pub fn rate_guard_trips(&self) -> u64 {
+        self.net.borrow().rate_guard_trips
     }
 
     /// Payload bytes delivered so far.
@@ -1316,6 +1344,22 @@ mod tests {
         let rel = (d.latency - est).abs() / est;
         assert!(rel < 0.01, "latency={} est={est}", d.latency);
         assert!(d.contention < est * 0.01, "idle flow must pay no tax, got {}", d.contention);
+    }
+
+    #[test]
+    fn rate_guard_stays_quiet_on_healthy_runs() {
+        // the numerical guard is a last-resort break; ordinary contended
+        // runs must converge without it, and the always-compiled counter
+        // is how release builds would notice if they ever stopped doing so
+        let sim = star_sim(4, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        for i in 0..3 {
+            sim.submit(&mut eng, Transfer::new(eps[i], eps[3], 1u64 << 22, TrafficClass::Collective));
+        }
+        eng.run();
+        assert_eq!(sim.completed(), 3);
+        assert_eq!(sim.rate_guard_trips(), 0);
     }
 
     #[test]

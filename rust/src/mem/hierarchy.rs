@@ -438,6 +438,26 @@ impl HierarchicalMemory {
         true
     }
 
+    /// Register `bytes` already sitting in the pool as region `region`
+    /// owned by accelerator `node` — pure bookkeeping for data whose
+    /// movement was already paid as a bulk stream (the DLRM table ingest:
+    /// one [`Self::spill_partial`] flow moves the whole table, then the
+    /// shards it carried are adopted as addressable regions). Issues no
+    /// flow and takes no simulated time. Returns false when the id is
+    /// taken, `node` is out of range, or the pool lacks capacity.
+    pub fn adopt_pool_resident(&self, region: u64, bytes: u64, node: usize) -> bool {
+        if node >= self.nodes.len() {
+            return false;
+        }
+        let mut s = self.st.borrow_mut();
+        if s.regions.contains_key(&region) {
+            return false;
+        }
+        let Some(extent) = s.pool.alloc(bytes) else { return false };
+        s.regions.insert(region, Region { bytes, home: node, tier: Tier::Pool, extent });
+        true
+    }
+
     /// Demote a tier-1-resident region to the pool. Residency flips
     /// atomically at submission; `done` fires when the bytes land.
     pub fn demote(
@@ -842,6 +862,29 @@ mod tests {
             fetch.latency
         );
         assert!(fetch.latency - fetch.ideal < analytic_r * 0.01, "idle op must pay no tax");
+    }
+
+    #[test]
+    fn adopt_pool_resident_is_free_bookkeeping() {
+        let tiers = proposed(GIB, 4 * GIB);
+        let hier = HierarchicalMemory::new(1, 0, tiers.clone());
+        let bytes = 4u64 << 20;
+        // adoption allocates pool residency without any flow or time
+        assert!(hier.adopt_pool_resident(3, bytes, 0));
+        assert_eq!(hier.tier_of(3), Some(Tier::Pool));
+        assert_eq!(hier.resident_bytes(), (0, bytes));
+        assert_eq!(hier.stats().spills, 0, "no movement was charged");
+        assert!(hier.check_conservation());
+        // duplicate ids, bad nodes and over-capacity adoptions are refused
+        assert!(!hier.adopt_pool_resident(3, bytes, 0));
+        assert!(!hier.adopt_pool_resident(4, bytes, 9));
+        assert!(!hier.adopt_pool_resident(5, 64 * GIB, 0));
+        // an adopted region reads exactly like a spilled one
+        let mut eng = Engine::new();
+        let fetch = hier.read_sync(&mut eng, 3, TrafficClass::Parameter).expect("fetch done");
+        assert_eq!(fetch.op, MemOp::Fetch);
+        let analytic_r = tiers.read(Tier::Pool, bytes);
+        assert!((fetch.latency - analytic_r).abs() / analytic_r < 0.01);
     }
 
     #[test]

@@ -22,15 +22,20 @@
 //! training job ([`crate::workload::training`]) with those tenants on one
 //! fabric and measures the colocation tax from both sides; [`rag_colocate`]
 //! does the same for the event-driven RAG pipeline
-//! ([`crate::workload::rag::launch_rag_flows`]) — the retrieval tax.
+//! ([`crate::workload::rag::launch_rag_flows`]) — the retrieval tax — and
+//! [`rec_colocate`] for the event-driven DLRM workload
+//! ([`crate::workload::dlrm::launch_dlrm_flows`]) — the mixed rec+LLM
+//! tenancy tax.
 
 pub mod colocate;
 pub mod pd;
 pub mod rag_colocate;
+pub mod rec_colocate;
 pub mod supercluster;
 
 pub use colocate::{simulate_colocate, ColocateConfig, ColocateReport};
 pub use rag_colocate::{simulate_rag_colocate, RagColocateConfig, RagColocateReport};
+pub use rec_colocate::{simulate_rec_colocate, RecColocateConfig, RecColocateReport};
 pub use supercluster::{simulate_supercluster, SuperServeConfig, SuperServeReport};
 
 use crate::coordinator::batcher::{Batch, DynamicBatcher};

@@ -1,0 +1,198 @@
+//! DLRM / serving colocation on one contended CXL-over-XLink supercluster —
+//! the recommendation-side counterpart of [`super::colocate`] and
+//! [`super::rag_colocate`]: Fig 35 prices DLRM against a fabric the
+//! recommender *owns*, yet mixed rec+LLM tenancy is the realistic
+//! hyperscaler traffic — the pooled tray serves embedding-table streams
+//! and gathers next to multi-tenant KV prefetches (FengHuang's
+//! memory-orchestration framing; the Photonic Fabric pooled-memory serving
+//! argument — PAPERS.md).
+//!
+//! [`simulate_rec_colocate`] runs three deterministic simulations on
+//! fabrics of identical shape:
+//!
+//! 1. **DLRM alone** — the event-driven workload of
+//!    [`crate::workload::dlrm::launch_dlrm_flows`], its table hierarchy
+//!    attached to a private supercluster's fabric (accel ↔ tier-2 tray
+//!    across a bridge);
+//! 2. **serving alone** — the multi-tenant
+//!    [`super::supercluster::simulate_supercluster`] pipeline;
+//! 3. **colocated** — both on *one* supercluster and one engine: the bulk
+//!    table-init stream and every cold-shard gather share bridge, spine
+//!    and tray links with the tenants' KV-prefetch / activation-writeback /
+//!    state-sync flows.
+//!
+//! The report puts init/inference-phase inflation (the recommender's view)
+//! next to p99-latency inflation (serving's view) over one byte-attributed
+//! ledger: DLRM's table stream and gathers are [`TrafficClass::Parameter`],
+//! its promotions [`TrafficClass::Migration`], the tenants' traffic its
+//! usual classes. Same config ⇒ byte-identical trace (`tests/dlrm_flows.rs`
+//! locks the golden-trace contract down).
+
+use super::supercluster::{build_scs, launch_supercluster, SuperServeConfig, SuperServeReport};
+use crate::datacenter::cluster::SuperclusterSim;
+use crate::fabric::flow::CommTaxLedger;
+#[allow(unused_imports)] // doc link
+use crate::fabric::flow::TrafficClass;
+use crate::mem::hierarchy::HierarchicalMemory;
+use crate::sim::Engine;
+use crate::workload::dlrm::{launch_dlrm_flows, DlrmConfig, DlrmFlowOptions, DlrmFlowReport};
+use crate::workload::Platform;
+
+/// One DLRM/serving colocation scenario.
+#[derive(Clone, Debug)]
+pub struct RecColocateConfig {
+    /// The serving tenants (also defines the supercluster shape).
+    pub serve: SuperServeConfig,
+    /// The recommendation workload sharing the fabric.
+    pub dlrm: DlrmConfig,
+    /// Event-driven DLRM knobs (table sharding, promotion, seed).
+    pub opts: DlrmFlowOptions,
+}
+
+impl RecColocateConfig {
+    /// The canonical flooded scenario: three serving tenants bursting 24
+    /// requests each at a 30 µs mean inter-arrival while the
+    /// [`DlrmConfig::colocate_demo`] workload streams its table and
+    /// gathers through the same tray — the table tiled into 48 shards so
+    /// the shard regions and the streamed table are the same bytes. One
+    /// definition shared by the `dlrm-tax` experiment driver, the bench,
+    /// and the acceptance tests in `tests/dlrm_flows.rs`.
+    pub fn flooded() -> RecColocateConfig {
+        let serve = SuperServeConfig { arrival_mean: 30_000.0, requests_per_tenant: 24, ..Default::default() };
+        let opts = DlrmFlowOptions { segments: 48, ..DlrmFlowOptions::parity() };
+        RecColocateConfig { serve, dlrm: DlrmConfig::colocate_demo(), opts }
+    }
+}
+
+impl Default for RecColocateConfig {
+    fn default() -> Self {
+        Self::flooded()
+    }
+}
+
+/// Measured outcome of one DLRM/serving colocation scenario.
+#[derive(Debug)]
+pub struct RecColocateReport {
+    /// Recommendation with the fabric to itself.
+    pub dlrm_alone: DlrmFlowReport,
+    /// Recommendation while the tenants share bridges, spines and trays.
+    pub dlrm_colocated: DlrmFlowReport,
+    /// Serving with the fabric to itself.
+    pub serve_alone: SuperServeReport,
+    /// Serving while the recommendation workload shares the fabric.
+    pub serve_colocated: SuperServeReport,
+    /// The colocated fabric's communication-tax ledger (both jobs).
+    pub ledger: CommTaxLedger,
+    /// Deterministic colocated trace (scheduler decisions + all flows).
+    pub trace: String,
+}
+
+impl RecColocateReport {
+    /// Init-phase wall-time inflation over DLRM alone (> 1 when the
+    /// tenants genuinely contend — the acceptance contract).
+    pub fn init_inflation(&self) -> f64 {
+        self.dlrm_colocated.init.elapsed / self.dlrm_alone.init.elapsed
+    }
+
+    /// Inference-phase wall-time inflation over DLRM alone.
+    pub fn inference_inflation(&self) -> f64 {
+        self.dlrm_colocated.inference.elapsed / self.dlrm_alone.inference.elapsed
+    }
+
+    /// Serving p99 latency inflation while colocated with recommendation.
+    pub fn serving_p99_inflation(&self) -> f64 {
+        self.serve_colocated.latency.percentile(99.0) / self.serve_alone.latency.percentile(99.0)
+    }
+}
+
+/// Attach a DLRM table hierarchy to a supercluster's fabric: the
+/// recommendation accelerator is the last accel of the last serving
+/// cluster, its pool the last tier-2 tray, so the table stream and every
+/// cold gather cross a bridge exactly like tenant KV prefetches do —
+/// including the bridge protocol-conversion surcharge
+/// ([`HierarchicalMemory::with_conversion`] set to the same
+/// `conversion_between` unit `SuperclusterSim::submit` charges). Pool
+/// sizing comes from the shared [`crate::workload::dlrm::table_tiers`]
+/// rule.
+fn attach_dlrm_hier(
+    scs: &SuperclusterSim,
+    cfg: &RecColocateConfig,
+    platform: &Platform,
+) -> HierarchicalMemory {
+    let tiers = crate::workload::dlrm::table_tiers(&cfg.dlrm, &cfg.opts, platform);
+    let accel = scs.accel(cfg.serve.clusters - 1, cfg.serve.accels_per_cluster - 1);
+    let tray = scs.tray(scs.tray_count() - 1);
+    HierarchicalMemory::with_fabric(scs.fabric_sim().clone(), vec![accel], tray, cfg.opts.local_budget, tiers)
+        .with_conversion(scs.conversion_between(accel, tray))
+}
+
+/// Run the three-way DLRM/serving colocation comparison.
+pub fn simulate_rec_colocate(cfg: &RecColocateConfig, platform: &Platform) -> RecColocateReport {
+    // 1) DLRM alone on a private fabric of the same shape
+    let dlrm_alone = {
+        let scs = build_scs(&cfg.serve);
+        let hier = attach_dlrm_hier(&scs, cfg, platform);
+        let mut eng = Engine::new();
+        let run = launch_dlrm_flows(&cfg.dlrm, cfg.opts, platform, &hier, 0, &mut eng);
+        eng.run();
+        run.report().expect("dlrm-alone run completes")
+    };
+    // 2) serving alone on a private fabric of the same shape
+    let serve_alone = {
+        let scs = build_scs(&cfg.serve);
+        let mut eng = Engine::new();
+        let run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+        eng.run();
+        run.finish(&scs).0
+    };
+    // 3) both on one fabric, one engine
+    let scs = build_scs(&cfg.serve);
+    let hier = attach_dlrm_hier(&scs, cfg, platform);
+    let mut eng = Engine::new();
+    let serve_run = launch_supercluster(&cfg.serve, platform, &scs, &mut eng);
+    let dlrm_run = launch_dlrm_flows(&cfg.dlrm, cfg.opts, platform, &hier, 0, &mut eng);
+    eng.run();
+    let (serve_colocated, ledger, trace) = serve_run.finish(&scs);
+    let dlrm_colocated = dlrm_run.report().expect("colocated dlrm run completes");
+    RecColocateReport { dlrm_alone, dlrm_colocated, serve_alone, serve_colocated, ledger, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::flow::TrafficClass;
+
+    #[test]
+    fn colocation_taxes_both_sides() {
+        let cfg = RecColocateConfig::flooded();
+        let r = simulate_rec_colocate(&cfg, &Platform::composable_cxl());
+        // the recommender pays for the tenants: the bulk table stream
+        // lands mid-flood, so init inflates strictly, visible per-op in
+        // the contention ledger
+        assert!(r.init_inflation() > 1.0, "init inflation={}", r.init_inflation());
+        assert!(r.dlrm_colocated.init.contention.max() > 0.0, "the table stream must queue behind tenant flows");
+        assert!(r.inference_inflation() >= 1.0 - 1e-9, "inference inflation={}", r.inference_inflation());
+        // and the tenants pay for the recommender (p99, strictly)
+        assert!(r.serving_p99_inflation() > 1.0, "serving p99 inflation={}", r.serving_p99_inflation());
+        // one ledger attributes both jobs' traffic
+        assert!(r.ledger.class_bytes(TrafficClass::Parameter) > 0, "table stream + cold gathers");
+        assert!(r.ledger.class_bytes(TrafficClass::KvCache) > 0, "tenant prefetches");
+        assert!(r.ledger.class_bytes(TrafficClass::Activation) > 0, "tenant writebacks");
+        assert!(!r.trace.is_empty());
+    }
+
+    #[test]
+    fn alone_baseline_is_idle_per_op() {
+        let cfg = RecColocateConfig::flooded();
+        let scs = build_scs(&cfg.serve);
+        let hier = attach_dlrm_hier(&scs, &cfg, &Platform::composable_cxl());
+        let mut eng = Engine::new();
+        let run = launch_dlrm_flows(&cfg.dlrm, cfg.opts, &Platform::composable_cxl(), &hier, 0, &mut eng);
+        eng.run();
+        let r = run.report().expect("completes");
+        // nothing else on the fabric: every op pays exactly its route
+        assert!(r.init.contention.max() <= 1e-6);
+        assert!(r.inference.contention.max() <= 1e-6);
+        assert!((r.inference.inflation() - 1.0).abs() < 1e-6);
+    }
+}

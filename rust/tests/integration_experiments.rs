@@ -28,11 +28,20 @@
 //! alone (the Fig 33 generation band was widened from 1.8–4.5 to 1.6–5.0
 //! and the Graph-RAG band from 5–12 to 4.5–13 to absorb the PR 5 prefill
 //! bugfix, which charges the remote context-KV share its pool write on
-//! both platforms). The Fig 35 (DLRM) portion
-//! stays quarantined in `fig35_dlrm_phase_ratios` — DLRM has no flow
-//! substrate yet.
+//! both platforms).
+//!
+//! TRIAGE UPDATE (PR 7): the last analytic-only workload got its flow
+//! substrate, so `fig35_dlrm_phase_ratios` is **un-quarantined** on the
+//! same contract: the analytic Fig 35 phase ratios stay inside the paper
+//! bands *and* the event-driven run (`simulate_dlrm_flows`) reproduces
+//! the analytic phases to <0.1% per phase on an idle fabric, on both
+//! platforms — the bands are anchored to flow-measured numbers. The
+//! hot/cold gather split now goes through the shared `remote_share`
+//! rounding rule and the hot HBM read is classified as memory time
+//! (`comm`), neither of which moves the phase *totals* the bands pin.
 
 use commtax::experiments;
+use commtax::workload::dlrm::{run_dlrm, simulate_dlrm_flows, DlrmConfig, DlrmFlowOptions};
 use commtax::workload::rag::{run_rag, simulate_rag_flows, RagConfig, RagFlowOptions};
 use commtax::workload::Platform;
 
@@ -86,11 +95,24 @@ fn fig33_fig34_rag_ratios_on_both_substrates() {
 }
 
 #[test]
-#[ignore = "quarantined: calibration-sensitive paper-ratio bands; DLRM has no flow substrate yet (see triage note)"]
 fn fig35_dlrm_phase_ratios() {
+    // un-quarantined in PR 7 (see triage update above): the paper-band
+    // assertions, now anchored to the flow-measured substrate
     let f35 = experiments::fig35();
     assert!((1.9..3.6).contains(&ratio(&f35.rows[0][3])), "init {}", f35.rows[0][3]);
     assert!((2.4..5.0).contains(&ratio(&f35.rows[1][3])), "inference {}", f35.rows[1][3]);
+    assert!((2.2..4.5).contains(&ratio(&f35.rows[2][3])), "overall {}", f35.rows[2][3]);
+    // the flow-measured run must reproduce the analytic phases the bands
+    // are pinned to (<0.1% per phase, idle fabric)
+    let cfg = DlrmConfig::flow_demo();
+    for plat in [Platform::composable_cxl(), Platform::conventional_rdma()] {
+        let flow = simulate_dlrm_flows(&cfg, DlrmFlowOptions::parity(), &plat);
+        let ana = run_dlrm(&cfg, &plat);
+        let di = (flow.init.elapsed - ana.init.total()).abs() / ana.init.total();
+        let dg = (flow.inference.elapsed - ana.inference.total()).abs() / ana.inference.total();
+        assert!(di < 0.001, "dlrm/{}: init parity {:.4}%", plat.name, 100.0 * di);
+        assert!(dg < 0.001, "dlrm/{}: inference parity {:.4}%", plat.name, 100.0 * dg);
+    }
 }
 
 #[test]

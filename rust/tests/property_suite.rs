@@ -704,3 +704,56 @@ fn property_rag_flow_hop_byte_conservation() {
     )
     .assert_ok();
 }
+
+#[test]
+fn property_dlrm_flow_gather_byte_conservation() {
+    // the event-driven DLRM run conserves bytes three ways: every gathered
+    // byte is exactly one of hot tier-1 / promoted-local / pool-flow, and
+    // the residency split sums to the analytic `inference().bytes`; the
+    // fabric ledger's per-class columns reconstruct exactly from the
+    // report's counters (table stream + cold pool gathers = Parameter,
+    // earned promotions = Migration); and the hierarchy's allocator
+    // accounting still balances after the run.
+    use commtax::fabric::TrafficClass;
+    use commtax::mem::hierarchy::HierarchicalMemory;
+    use commtax::sim::Engine;
+    use commtax::workload::dlrm::{inference, launch_dlrm_flows, table_tiers, DlrmConfig, DlrmFlowOptions};
+    use commtax::workload::Platform;
+    check(
+        10,
+        |rng| {
+            let batches = 4 + rng.below(32);
+            let segments = 4 + rng.index(16);
+            let promote_after = rng.below(3); // 0 disables promotion
+            (batches, segments, promote_after, rng.next_u64())
+        },
+        |&(batches, segments, promote_after, seed)| {
+            let mut cfg = DlrmConfig { batches, batch_size: 64, ..DlrmConfig::production() };
+            cfg.table_bytes = segments as u64 * cfg.gather_split().1;
+            let opts = DlrmFlowOptions {
+                segments,
+                promote_after,
+                local_budget: if promote_after > 0 { segments as u64 * cfg.gather_split().1 / 2 } else { 0 },
+                zipf_skew: 1.1,
+                seed,
+            };
+            let p = Platform::composable_cxl();
+            let hier = HierarchicalMemory::new(1, opts.local_budget, table_tiers(&cfg, &opts, &p));
+            let mut eng = Engine::new();
+            let run = launch_dlrm_flows(&cfg, opts, &p, &hier, 0, &mut eng);
+            eng.run();
+            let Some(r) = run.report() else {
+                return false;
+            };
+            let ledger = hier.fabric().ledger();
+            let gathered = cfg.batches * cfg.per_batch_bytes();
+            r.hot_gather_bytes + r.local_gather_bytes + r.pool_gather_bytes == gathered
+                && gathered == inference(&cfg, &p).bytes
+                && r.table_streamed_bytes == cfg.table_bytes
+                && ledger.class_bytes(TrafficClass::Parameter) == r.table_streamed_bytes + r.pool_gather_bytes
+                && ledger.class_bytes(TrafficClass::Migration) == r.promoted_bytes
+                && hier.check_conservation()
+        },
+    )
+    .assert_ok();
+}
