@@ -38,6 +38,9 @@ fn main() {
     }
     if let Some(path) = check {
         let base = PerfBaseline::load(&path).expect("read committed baseline");
+        for a in base.additions(&cur) {
+            println!("PERF NOTE {a}");
+        }
         let warns = base.regressions(&cur, tol);
         for w in &warns {
             println!("PERF WARN {w}");

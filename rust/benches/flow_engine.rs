@@ -1,10 +1,10 @@
 //! Flow-engine scaling benchmarks: the perf trajectory behind the
 //! incremental max-min rate repair + same-route aggregation work.
 //!
-//! Two workload families on the supercluster topology:
+//! Four workload families on the supercluster topology:
 //!
-//! * **scale sweep** — 1k/10k/100k concurrent flows over a fixed set of
-//!   hot routes, with [`AggregationPolicy::SameRoute`] armed so the rate
+//! * **scale sweep** — 1k/10k/100k/500k concurrent flows over a fixed set
+//!   of hot routes, with [`AggregationPolicy::SameRoute`] armed so the rate
 //!   solver prices the swarm through a bounded aggregate population (the
 //!   open-loop serving regime the ROADMAP north-star asks for);
 //! * **churn** — 10k flows through a 128-wide closed loop of mostly
@@ -12,6 +12,16 @@
 //!   under the incremental solver and under the always-global solver. The
 //!   reported `churn_10k_speedup = global / incremental` is the measured
 //!   payoff of component-local repair.
+//! * **burst admission** — the same open-loop swarm arriving in
+//!   same-timestamp waves, priced under per-admission solves
+//!   ([`AdmissionBatching::Immediate`]) and under the default coalescing
+//!   ([`AdmissionBatching::Coalesce`]); `batch_burst_speedup` is the
+//!   measured payoff of folding a wave into one rate repair.
+//! * **parallel residual** — link-disjoint per-cluster traffic under the
+//!   always-global solver, solved with 1 worker and with the machine's
+//!   default worker count; `parallel_residual_speedup` is the measured
+//!   payoff of component-parallel residual solves (results are
+//!   byte-identical across thread counts by construction).
 //!
 //! Flags (after `--` under `cargo bench --bench flow_engine`):
 //!   `--quick`            1 timed iteration, no warmup (the CI mode)
@@ -28,7 +38,7 @@
 
 use commtax::benchkit::{bench, PerfBaseline};
 use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
-use commtax::fabric::flow::{AggregationPolicy, FabricSim, RateSolver, TrafficClass, Transfer};
+use commtax::fabric::flow::{AdmissionBatching, AggregationPolicy, FabricSim, RateSolver, TrafficClass, Transfer};
 use commtax::fabric::topology::NodeId;
 use commtax::sim::{Engine, Rng};
 use std::cell::Cell;
@@ -76,6 +86,85 @@ fn scale_point(n: usize, pairs: &[(NodeId, NodeId)], iters: usize, warmup: usize
         }
         eng.run();
         assert_eq!(sim.completed() as usize, n, "scale sweep must drain completely");
+    });
+    r.median()
+}
+
+/// Burst admission: the `scale_point` swarm, but arriving in
+/// same-timestamp waves of `burst` flows every 5 µs — the handoff-storm
+/// shape admission batching targets. Under `Immediate` every admission
+/// pays its own rate repair; under `Coalesce` (the engine default) each
+/// wave folds into one. Returns median wall ns per iteration.
+fn burst_point(
+    n: usize,
+    burst: usize,
+    batching: AdmissionBatching,
+    pairs: &[(NodeId, NodeId)],
+    iters: usize,
+    warmup: usize,
+) -> f64 {
+    let tag = match batching {
+        AdmissionBatching::Immediate => "immediate",
+        AdmissionBatching::Coalesce => "coalesced",
+    };
+    let r = bench(&format!("flow engine: {n} burst admissions x{burst} ({tag})"), warmup, iters, || {
+        let sim = build_fabric();
+        sim.set_aggregation(AggregationPolicy::SameRoute);
+        sim.set_admission_batching(batching);
+        let mut eng = Engine::new();
+        for i in 0..n {
+            let (src, dst) = pairs[i % pairs.len()];
+            let tr = Transfer::new(src, dst, 64 << 10, CLASSES[i % CLASSES.len()]);
+            let sim2 = sim.clone();
+            eng.schedule_at((i / burst) as f64 * 5_000.0, move |e| {
+                sim2.submit(e, tr);
+            });
+        }
+        eng.run();
+        assert_eq!(sim.completed() as usize, n, "burst sweep must drain completely");
+        if batching == AdmissionBatching::Coalesce {
+            assert!(sim.admission_flushes() < sim.deferred_starts(), "waves must coalesce");
+        }
+    });
+    r.median()
+}
+
+/// Link-disjoint traffic for the parallel-residual sweep: intra-cluster
+/// pairs only, so each cluster's flows form their own component and the
+/// global solve decomposes into 8 independent fills.
+fn parallel_pairs() -> Vec<(NodeId, NodeId)> {
+    let scs = Supercluster::build_sim(&vec![XLinkCluster::ualink(16); 8], SuperclusterTopology::MultiClos, 2);
+    let mut pairs = Vec::new();
+    for c in 0..8 {
+        for i in 0..16 {
+            pairs.push((scs.accel(c, i), scs.accel(c, (i + 5) % 16)));
+        }
+    }
+    pairs
+}
+
+/// One parallel-residual point: `n` staggered-size flows of per-cluster
+/// traffic under the always-global solver with `threads` workers. Sizes
+/// are staggered so completions land on distinct instants and every one
+/// pays a full residual solve — the stage the workers parallelize.
+/// Expensive by design; callers run it once, untimed-warmup-free.
+fn parallel_point(n: usize, threads: usize, pairs: &[(NodeId, NodeId)]) -> f64 {
+    let r = bench(&format!("flow engine: {n} global residual solves ({threads} thread)"), 0, 1, || {
+        let clusters = vec![XLinkCluster::ualink(16); 8];
+        let sim = Supercluster::build_sim(&clusters, SuperclusterTopology::MultiClos, 2).fabric_sim().clone();
+        sim.set_rate_solver(RateSolver::Global);
+        sim.set_solver_threads(threads);
+        let mut eng = Engine::new();
+        for i in 0..n {
+            let (src, dst) = pairs[i % pairs.len()];
+            let bytes = (64 << 10) + (i as u64 % 97) * 4096;
+            let sim2 = sim.clone();
+            eng.schedule_at(i as f64 * 20.0, move |e| {
+                sim2.submit(e, Transfer::new(src, dst, bytes, TrafficClass::Collective));
+            });
+        }
+        eng.run();
+        assert_eq!(sim.completed() as usize, n, "parallel sweep must drain completely");
     });
     r.median()
 }
@@ -160,8 +249,9 @@ fn main() {
     let pairs = hot_pairs();
     cur.record("scale_1k_ns", scale_point(1_000, &pairs, iters, warmup));
     cur.record("scale_10k_ns", scale_point(10_000, &pairs, iters, warmup));
-    // the 100k point is expensive by design; never iterate it
+    // the 100k/500k points are expensive by design; never iterate them
     cur.record("scale_100k_ns", scale_point(100_000, &pairs, 1, 0));
+    cur.record("scale_500k_ns", scale_point(500_000, &pairs, 1, 0));
 
     let cpairs = Rc::new(churn_pairs(10_000));
     let inc = churn_point(RateSolver::default(), &cpairs, iters, warmup);
@@ -171,12 +261,34 @@ fn main() {
     cur.record("churn_10k_speedup", glob / inc);
     println!("  -> churn speedup (global / incremental): {:.2}x", glob / inc);
 
+    let nobatch = burst_point(10_000, 250, AdmissionBatching::Immediate, &pairs, iters, warmup);
+    let batch = burst_point(10_000, 250, AdmissionBatching::Coalesce, &pairs, iters, warmup);
+    cur.record("nobatch_burst_ns", nobatch);
+    cur.record("batch_burst_ns", batch);
+    cur.record("batch_burst_speedup", nobatch / batch);
+    println!("  -> burst admission speedup (immediate / coalesced): {:.2}x", nobatch / batch);
+
+    let ppairs = parallel_pairs();
+    // the engine's default worker count (RAYON_NUM_THREADS or core count)
+    let threads = build_fabric().solver_threads();
+    let t1 = parallel_point(3_000, 1, &ppairs);
+    let tn = if threads > 1 { parallel_point(3_000, threads, &ppairs) } else { t1 };
+    cur.record("parallel_residual_t1_ns", t1);
+    cur.record("parallel_residual_tN_ns", tn);
+    cur.record("parallel_residual_speedup", t1 / tn);
+    println!("  -> parallel residual speedup (1 thread / {threads} threads): {:.2}x", t1 / tn);
+
     if let Some(path) = record {
         cur.save(&path).expect("write baseline");
         println!("recorded baseline -> {path}");
     }
     if let Some(path) = check {
         let base = PerfBaseline::load(&path).expect("read committed baseline");
+        // new metrics this run measured but the committed file lacks:
+        // informational only, never a failure
+        for a in base.additions(&cur) {
+            println!("PERF NOTE {a}");
+        }
         let warns = base.regressions(&cur, tol);
         for w in &warns {
             println!("PERF WARN {w}");

@@ -184,6 +184,25 @@ impl PerfBaseline {
         }
         out
     }
+
+    /// Metrics present in `current` but absent from this baseline — new
+    /// measurements a bench grew that the committed file does not cover
+    /// yet. Never a failure: the check job prints these as a note so the
+    /// author knows to refresh the baseline with `--record`.
+    pub fn additions(&self, current: &PerfBaseline) -> Vec<String> {
+        current
+            .entries
+            .iter()
+            .filter(|(name, _)| !self.entries.contains_key(*name))
+            .map(|(name, &val)| {
+                if name.ends_with("_speedup") {
+                    format!("{name}: {val:.2} (not in baseline; record to track)")
+                } else {
+                    format!("{name}: {} (not in baseline; record to track)", fmt_ns(val))
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +263,21 @@ mod tests {
         assert_eq!(r.len(), 3, "{r:?}");
         assert!(r.iter().any(|l| l.contains("scale_1k_ns")));
         assert!(r.iter().any(|l| l.contains("churn_10k_speedup")));
+    }
+
+    #[test]
+    fn baseline_additions_report_run_only_metrics() {
+        let mut base = PerfBaseline::new("base");
+        base.record("scale_1k_ns", 100.0);
+        let mut cur = PerfBaseline::new("cur");
+        cur.record("scale_1k_ns", 90.0);
+        cur.record("batch_burst_ns", 3.0e9);
+        cur.record("batch_burst_speedup", 2.0);
+        let a = base.additions(&cur);
+        assert_eq!(a.len(), 2, "{a:?}");
+        assert!(a.iter().any(|l| l.contains("batch_burst_ns")));
+        assert!(a.iter().any(|l| l.contains("batch_burst_speedup")));
+        // additions never flag as regressions
+        assert!(base.regressions(&cur, 0.5).is_empty());
     }
 }

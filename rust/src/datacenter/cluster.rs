@@ -421,6 +421,15 @@ impl SuperclusterSim {
         self.sim.set_aggregation(policy);
     }
 
+    /// Pass the admission-batching policy through to the flow engine:
+    /// under [`crate::fabric::flow::AdmissionBatching::Coalesce`] (the
+    /// default) flow starts sharing a timestamp — a tenant burst, a sync
+    /// fan-out — fold into one rate repair per instant instead of one per
+    /// admission; observable rates and completion times are unchanged.
+    pub fn set_admission_batching(&self, policy: crate::fabric::flow::AdmissionBatching) {
+        self.sim.set_admission_batching(policy);
+    }
+
     /// Number of clusters.
     pub fn cluster_count(&self) -> usize {
         self.dir.accels.len()

@@ -89,7 +89,10 @@ impl RoutedPath {
     /// Resolve against a flow-level [`FabricSim`] using its routing policy
     /// (PBR picks the least-loaded equal-cost candidate at resolve time).
     pub fn resolve_sim(sim: &FabricSim, src: NodeId, dst: NodeId, stack: SoftwareStack) -> Option<RoutedPath> {
-        let edges = sim.route(src, dst)?;
+        // `route` shares the cache's Arc; this resolver keeps an owned copy
+        // (RoutedPath owns its edges) — a cold, per-path call, not the
+        // per-flow hot path
+        let edges: Vec<EdgeId> = sim.route(src, dst)?.as_ref().clone();
         let links = edges.iter().map(|&e| sim.link(e)).collect();
         Some(RoutedPath { src, dst, edges, path: CommPath { links, stack } })
     }

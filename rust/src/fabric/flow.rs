@@ -18,7 +18,7 @@
 //!   at those instants and reschedule the next completion — no per-flit or
 //!   per-quantum ticking.
 //!
-//! Three mechanisms keep the event cost sublinear in the active population
+//! Five mechanisms keep the event cost sublinear in the active population
 //! (the difference between simulating hundreds of flows and the open-loop
 //! swarms the ROADMAP north-star demands):
 //!
@@ -31,9 +31,35 @@
 //!   the trace/completion granularity). A per-edge flow index makes the
 //!   component walk O(component); when the dirty set exceeds a
 //!   configurable fraction of the population the solver falls back to the
-//!   plain global pass. Per-flow progress and per-edge utilization are
-//!   folded lazily — untouched flows carry `(delivered, rate, updated_at)`
-//!   forward exactly because their rate did not change.
+//!   residual global pass below. Per-flow progress and per-edge
+//!   utilization are folded lazily — untouched flows carry
+//!   `(delivered, rate, updated_at)` forward exactly because their rate
+//!   did not change.
+//! * **Same-timestamp admission batching**
+//!   ([`AdmissionBatching::Coalesce`], the default): collective launches,
+//!   DP fan-out, and colocation floods start hundreds of flows at one sim
+//!   instant. Each start links into the active set immediately, but the
+//!   rate solve is deferred to a single flush carrying the union of the
+//!   batch's seed edges, scheduled at the *same* instant after every
+//!   already-queued same-time event ([`Engine::defer`]). A completion
+//!   batch at the same instant drains the pending seeds into its own
+//!   solve, so rates are always repaired before any read or time advance.
+//!   Zero sim time elapses between the deferred starts and the flush, so
+//!   only the final rate assignment is observable — the batched solve
+//!   leaves exactly the state the per-start solves would have.
+//! * **Parallel residual solves**: every global pass ([`RateSolver::Global`],
+//!   or the incremental fallback) enumerates *all* link-disjoint
+//!   components of the active population in canonical order (ascending
+//!   minimum flow id, via the same stamped BFS the incremental walk uses)
+//!   and progressive-fills each component independently — max-min
+//!   decomposes exactly over components. Components fan out over scoped
+//!   worker threads ([`FabricSim::set_solver_threads`]; the default
+//!   honors `RAYON_NUM_THREADS`, else the machine's parallelism) once the
+//!   dirty population reaches [`FabricSim::set_parallel_solve_threshold`],
+//!   each worker filling disjoint contiguous ranges of one shared
+//!   scratch. The component enumeration, per-component arithmetic, and
+//!   write-back order are all fixed independently of the worker count, so
+//!   results are **byte-identical for every thread count**.
 //! * **Same-route aggregation** ([`AggregationPolicy::SameRoute`], opt-in):
 //!   concurrent same-`(src, dst, class)` transfers on the identical route
 //!   fuse into one aggregate flow that counts with its member multiplicity
@@ -73,6 +99,7 @@ use crate::sim::{Engine, SimTime, Summary};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Identifier of a flow within one [`FabricSim`] (submission order).
@@ -119,6 +146,24 @@ pub enum AggregationPolicy {
     /// population shrinks. Within one completion batch, members of the
     /// same aggregate settle in stream (threshold) order.
     SameRoute,
+}
+
+/// Whether flow starts sharing one sim instant coalesce into a single
+/// deferred rate solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionBatching {
+    /// Every activation repairs rates on the spot (the original
+    /// behavior; a k-flow collective launch pays k solves at one instant).
+    Immediate,
+    /// Activations sharing a timestamp link into the active set at once
+    /// but defer the rate solve to one same-instant flush carrying the
+    /// union of their seed edges (the default). Zero sim time elapses
+    /// between the deferred starts and the flush, so the batched solve
+    /// leaves exactly the state the per-start solves would have — only
+    /// the k−1 intermediate (never-observable) rate assignments are
+    /// skipped.
+    #[default]
+    Coalesce,
 }
 
 /// What a transfer carries — drives per-class ledger accounting so the
@@ -368,6 +413,17 @@ struct SolveScratch {
     flows: Vec<FlowId>,
     edges: Vec<EdgeId>,
     stack: Vec<EdgeId>,
+    /// Root scan order for the global pass's component enumeration
+    /// (ascending active flow ids, snapshotted so the BFS can mark flows
+    /// while scanning).
+    roots: Vec<FlowId>,
+    /// Link-disjoint component ranges as `(flow_start, flow_end,
+    /// edge_start, edge_end)` into `flows`/`edges`. Contiguous by
+    /// construction, so parallel workers carve disjoint slices out of the
+    /// shared per-solve vectors below.
+    comps: Vec<(usize, usize, usize, usize)>,
+    /// Worker-partition boundaries (indices into `comps`).
+    parts: Vec<usize>,
     edge_slot: Vec<usize>,
     cap_left: Vec<f64>,
     wsum: Vec<f64>,
@@ -375,6 +431,130 @@ struct SolveScratch {
     rate: Vec<f64>,
     frozen: Vec<bool>,
     mult: Vec<f64>,
+}
+
+/// Dirty-flow population below which a multi-component solve stays
+/// sequential: thread spawn/join overhead dwarfs small fills.
+const PARALLEL_SOLVE_THRESHOLD: usize = 256;
+
+/// Default worker count for parallel residual solves. The
+/// `RAYON_NUM_THREADS` convention is honored — it is the ecosystem-wide
+/// knob for solver fan-out, and this engine reads it even though the
+/// implementation uses scoped std threads rather than rayon (the build
+/// carries no extra dependencies) — falling back to the machine's
+/// available parallelism. `0` or garbage means "use the fallback".
+fn default_solver_threads() -> usize {
+    match std::env::var("RAYON_NUM_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Progressive filling restricted to one link-disjoint component — the
+/// whole solve when the dirty set is one component (the incremental fast
+/// path), or one unit of a decomposed residual pass. Max-min allocations
+/// decompose exactly over link-disjoint components, so filling each in
+/// isolation reproduces the joint answer bit-for-bit.
+///
+/// `routes`/`mult`/`rate`/`frozen` are the component's flow-parallel
+/// slices; `cap_left`/`wsum` its edge-parallel slices. `edge_slot` maps a
+/// global edge id to its dense slot over the *whole* solve and
+/// `slot_base` is this component's first slot (component slots are
+/// contiguous), so workers index only their own slices. Runs on scoped
+/// worker threads: everything it touches is either component-private or
+/// (`edge_slot`, `links`, the atomic trip counter) shared read-only.
+#[allow(clippy::too_many_arguments)]
+fn fill_component(
+    routes: &[(&[EdgeId], &[f64])],
+    mult: &[f64],
+    rate: &mut [f64],
+    frozen: &mut [bool],
+    cap_left: &mut [f64],
+    wsum: &mut [f64],
+    edge_slot: &[usize],
+    slot_base: usize,
+    links: &[LinkSpec],
+    guard_trips: &AtomicU64,
+) {
+    let nf = routes.len();
+    let mut left = nf;
+    while left > 0 {
+        for w in wsum.iter_mut() {
+            *w = 0.0;
+        }
+        for (i, (path, weight)) in routes.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for (k, &e) in path.iter().enumerate() {
+                wsum[edge_slot[e] - slot_base] += mult[i] * weight[k];
+            }
+        }
+        let mut inc = f64::INFINITY;
+        for (j, &w) in wsum.iter().enumerate() {
+            if w > 0.0 {
+                let room = (cap_left[j] / w).max(0.0);
+                if room < inc {
+                    inc = room;
+                }
+            }
+        }
+        if !inc.is_finite() {
+            break;
+        }
+        for (i, r) in rate.iter_mut().enumerate() {
+            if !frozen[i] {
+                *r += inc;
+            }
+        }
+        for (j, w) in wsum.iter().enumerate() {
+            if *w > 0.0 {
+                cap_left[j] -= inc * *w;
+            }
+        }
+        let mut any = false;
+        for (i, (path, _)) in routes.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            if path.iter().any(|&e| cap_left[edge_slot[e] - slot_base] <= links[e].bw * 1e-9) {
+                frozen[i] = true;
+                left -= 1;
+                any = true;
+            }
+        }
+        if !any {
+            // Numerical guard: finite headroom remains but no link in this
+            // component crossed its saturation tolerance this round. The
+            // partial allocation stands; every first round assigns a
+            // positive increment, so no flow can be silently stranded at
+            // rate 0 — asserted below so a regression fails loudly in
+            // debug builds instead of stalling a simulation. Trips are
+            // counted in an always-compiled atomic stat
+            // ([`FabricSim::rate_guard_trips`]) whose fetch-and-add doubles
+            // as the once-only log latch: exactly one worker observes the
+            // 0→1 transition, so parallel component fills can neither
+            // duplicate nor interleave the message.
+            let prior = guard_trips.fetch_add(1, Ordering::Relaxed);
+            #[cfg(debug_assertions)]
+            {
+                if prior == 0 {
+                    eprintln!(
+                        "commtax: rate-repair numerical guard tripped (component of {nf} flows, {left} unfrozen; \
+                         rates stay partial; logged once, see rate_guard_trips())"
+                    );
+                }
+                // count over the full index range, not iteration order:
+                // the tally is identical however the set is traversed,
+                // and the log above already printed when it fires
+                let stalled = (0..nf).filter(|&i| !frozen[i] && rate[i] <= 0.0).count();
+                debug_assert_eq!(stalled, 0, "rate repair left {stalled} unfrozen flow(s) at zero rate");
+            }
+            #[cfg(not(debug_assertions))]
+            let _ = prior;
+            break;
+        }
+    }
 }
 
 /// Interior state of the simulator (single-threaded, event-callback shared).
@@ -385,6 +565,28 @@ struct FlowNet {
     policy: RoutingPolicy,
     solver: RateSolver,
     aggregation: AggregationPolicy,
+    batching: AdmissionBatching,
+    /// Worker threads a residual/global solve may fan out over (1 =
+    /// always sequential; results are byte-identical either way).
+    solver_threads: usize,
+    /// Dirty-flow population below which multi-component solves stay
+    /// sequential.
+    par_threshold: usize,
+    /// Union of seed edges of flow starts deferred at the current instant
+    /// (under [`AdmissionBatching::Coalesce`]); consumed by the
+    /// same-instant flush event or drained into a same-instant
+    /// completion batch's solve, whichever runs first.
+    pending_seeds: Vec<EdgeId>,
+    /// Instant the pending batch belongs to (debug cross-check: the flush
+    /// must run before sim time advances past it).
+    pending_at: SimTime,
+    /// Batch generation: a queued flush acts only if no other solve
+    /// consumed its batch first.
+    pending_gen: u64,
+    /// Introspection: flow starts whose rate solve was deferred into a
+    /// batch, and deferred batches flushed by their own event.
+    deferred_starts: u64,
+    admission_flushes: u64,
     /// Flows streaming right now (BTreeMap: deterministic iteration order).
     active: BTreeMap<FlowId, FlowState>,
     /// Flows submitted but still paying the head-of-message hop latency.
@@ -435,8 +637,10 @@ struct FlowNet {
     /// Rate-repair rounds the numerical guard cut short (finite headroom
     /// left but no link crossed its saturation tolerance). Always
     /// compiled, so release builds surface partial rate allocations
-    /// instead of silently accepting them.
-    rate_guard_trips: u64,
+    /// instead of silently accepting them. Atomic because parallel
+    /// component fills bump it from worker threads, and its 0→1
+    /// transition latches the once-only debug log.
+    rate_guard_trips: AtomicU64,
     trace: Vec<TraceRec>,
     trace_cap: usize,
     scratch: SolveScratch,
@@ -451,6 +655,14 @@ impl FlowNet {
             policy,
             solver: RateSolver::default(),
             aggregation: AggregationPolicy::default(),
+            batching: AdmissionBatching::default(),
+            solver_threads: default_solver_threads(),
+            par_threshold: PARALLEL_SOLVE_THRESHOLD,
+            pending_seeds: Vec::new(),
+            pending_at: 0.0,
+            pending_gen: 0,
+            deferred_starts: 0,
+            admission_flushes: 0,
             active: BTreeMap::new(),
             staged: BTreeMap::new(),
             pending_cb: HashMap::new(),
@@ -475,7 +687,7 @@ impl FlowNet {
             completed: 0,
             contention: Summary::new(),
             concurrency: TimeWeighted::new(),
-            rate_guard_trips: 0,
+            rate_guard_trips: AtomicU64::new(0),
             trace: Vec::new(),
             trace_cap: 1 << 16,
             scratch: SolveScratch::default(),
@@ -547,8 +759,10 @@ impl FlowNet {
 
     /// Activate a staged flow at `now`: join an open same-route aggregate
     /// (under [`AggregationPolicy::SameRoute`]) or enter the active set as
-    /// its own flow, then repair rates from the touched route.
-    fn start_flow(&mut self, now: SimTime, id: FlowId, mut f: FlowState) {
+    /// its own flow. Returns the seed edges the rate repair must start
+    /// from — the caller either solves immediately or defers the seeds
+    /// into the current instant's admission batch.
+    fn start_flow(&mut self, now: SimTime, id: FlowId, mut f: FlowState) -> Arc<Vec<EdgeId>> {
         debug_assert_eq!(f.members.len(), 1, "staged flows carry exactly one member");
         let key: AggKey = (f.src, f.dst, f.class);
         let mut lead = None;
@@ -594,7 +808,7 @@ impl FlowNet {
                 seeds
             }
         };
-        self.solve_after_change(now, &seeds);
+        seeds
     }
 
     /// Remove a completed flow from the per-edge index, fixing the
@@ -621,17 +835,24 @@ impl FlowNet {
     /// dirty flow crosses is in the dirty edge set, so all competitors for
     /// those edges are dirty too and the restricted progressive filling is
     /// exactly the global solution on that component. Flows outside keep
-    /// their rates, fold horizons, and heap entries untouched. Falls back
-    /// to a global pass when the component outgrows
-    /// [`RateSolver::Incremental::global_fraction`] (seed edges stay in
-    /// the set either way so rates of just-removed flows integrate to
-    /// zero).
+    /// their rates, fold horizons, and heap entries untouched.
+    ///
+    /// When the component outgrows
+    /// [`RateSolver::Incremental::global_fraction`] — or under
+    /// [`RateSolver::Global`] — the residual pass enumerates *every*
+    /// link-disjoint component of the active population (same stamped
+    /// BFS, roots scanned in ascending flow id, so the enumeration is
+    /// canonical) and fills each independently, fanning components out
+    /// over scoped worker threads when the population is large enough.
+    /// Seed edges no surviving flow crosses stay in the set either way,
+    /// so rates of just-removed flows integrate to zero.
     fn solve_after_change(&mut self, now: SimTime, seeds: &[EdgeId]) {
         self.epoch += 1;
         let mut s = std::mem::take(&mut self.scratch);
         s.flows.clear();
         s.edges.clear();
         s.stack.clear();
+        s.comps.clear();
         let mut global = matches!(self.solver, RateSolver::Global);
         if !global {
             self.mark += 1;
@@ -664,30 +885,77 @@ impl FlowNet {
                     global = true;
                 }
             }
+            if !global {
+                // one dirty component spanning the whole set
+                s.comps.push((0, s.flows.len(), 0, s.edges.len()));
+            }
         }
         if global {
+            // Residual global pass: enumerate every link-disjoint
+            // component of the active population with the same stamped
+            // BFS, scanning roots in ascending flow id (each component is
+            // discovered at its minimum member id). The enumeration — and
+            // with it each component's flow/edge order and all filling
+            // arithmetic — is canonical: independent of the seeds and of
+            // how many workers later solve it.
             self.mark += 1;
             let stamp = self.mark;
             s.flows.clear();
             s.edges.clear();
+            s.roots.clear();
+            s.roots.extend(self.active.keys().copied());
+            for &root in &s.roots {
+                let (f0, e0) = (s.flows.len(), s.edges.len());
+                {
+                    let f = self.active.get_mut(&root).expect("rooted flow is active");
+                    if f.mark == stamp {
+                        continue;
+                    }
+                    f.mark = stamp;
+                    s.flows.push(root);
+                    for &e in f.path.iter() {
+                        if self.edge_mark[e] != stamp {
+                            self.edge_mark[e] = stamp;
+                            s.stack.push(e);
+                        }
+                    }
+                }
+                while let Some(e) = s.stack.pop() {
+                    s.edges.push(e);
+                    for &(fid, _) in &self.edge_flows[e] {
+                        let f = self.active.get_mut(&fid).expect("indexed flow is active");
+                        if f.mark == stamp {
+                            continue;
+                        }
+                        f.mark = stamp;
+                        s.flows.push(fid);
+                        for &e2 in f.path.iter() {
+                            if self.edge_mark[e2] != stamp {
+                                self.edge_mark[e2] = stamp;
+                                s.stack.push(e2);
+                            }
+                        }
+                    }
+                }
+                s.comps.push((f0, s.flows.len(), e0, s.edges.len()));
+            }
+            // Seed edges no surviving flow crosses (routes of just-removed
+            // flows) form a trailing flowless range: the write-back below
+            // integrates them under their previous rate and zeroes them,
+            // exactly as the old single-pass global solve did.
+            let e0 = s.edges.len();
             for &e in seeds {
                 if self.edge_mark[e] != stamp {
                     self.edge_mark[e] = stamp;
                     s.edges.push(e);
                 }
             }
-            for (&id, f) in self.active.iter() {
-                s.flows.push(id);
-                for &e in f.path.iter() {
-                    if self.edge_mark[e] != stamp {
-                        self.edge_mark[e] = stamp;
-                        s.edges.push(e);
-                    }
-                }
+            if s.edges.len() > e0 {
+                s.comps.push((s.flows.len(), s.flows.len(), e0, s.edges.len()));
             }
         }
 
-        // ---- progressive filling over the dirty set ---------------------
+        // ---- progressive filling over the dirty components --------------
         if s.edge_slot.len() < self.links.len() {
             s.edge_slot.resize(self.links.len(), 0);
         }
@@ -707,81 +975,107 @@ impl FlowNet {
         s.frozen.resize(nf, false);
         s.mult.clear();
         s.mult.extend(s.flows.iter().map(|id| self.active[id].members.len() as f64));
-        let mut left = nf;
-        while left > 0 {
-            for w in s.wsum.iter_mut() {
-                *w = 0.0;
-            }
-            for (i, id) in s.flows.iter().enumerate() {
-                if s.frozen[i] {
-                    continue;
-                }
-                let f = &self.active[id];
-                for (k, &e) in f.path.iter().enumerate() {
-                    s.wsum[s.edge_slot[e]] += s.mult[i] * f.weight[k];
-                }
-            }
-            let mut inc = f64::INFINITY;
-            for (j, &w) in s.wsum.iter().enumerate() {
-                if w > 0.0 {
-                    let room = (s.cap_left[j] / w).max(0.0);
-                    if room < inc {
-                        inc = room;
+        {
+            // Per-flow route views: one BTreeMap lookup per solve instead
+            // of one per filling round, and a plain-data (`Sync`) view the
+            // scoped workers can share.
+            let active = &self.active;
+            let routes: Vec<(&[EdgeId], &[f64])> = s
+                .flows
+                .iter()
+                .map(|id| {
+                    let f = &active[id];
+                    (f.path.as_slice(), f.weight.as_slice())
+                })
+                .collect();
+            let links: &[LinkSpec] = &self.links;
+            let guard = &self.rate_guard_trips;
+            let threads = self.solver_threads.min(s.comps.len()).max(1);
+            if threads > 1 && nf >= self.par_threshold {
+                // One scoped worker per contiguous component group,
+                // balanced by flow count. Component flow/edge ranges are
+                // contiguous by construction, so each group carves
+                // disjoint `&mut` ranges out of the shared scratch; the
+                // per-component arithmetic is identical wherever it runs,
+                // which is what makes results byte-equal for every thread
+                // count (including 1).
+                s.parts.clear();
+                s.parts.push(0);
+                let per = nf.div_ceil(threads);
+                let mut acc = 0usize;
+                for (ci, c) in s.comps.iter().enumerate() {
+                    if acc >= per && s.parts.len() < threads {
+                        s.parts.push(ci);
+                        acc = 0;
                     }
+                    acc += c.1 - c.0;
                 }
-            }
-            if !inc.is_finite() {
-                break;
-            }
-            for (i, r) in s.rate.iter_mut().enumerate() {
-                if !s.frozen[i] {
-                    *r += inc;
-                }
-            }
-            for (j, w) in s.wsum.iter().enumerate() {
-                if *w > 0.0 {
-                    s.cap_left[j] -= inc * *w;
-                }
-            }
-            let mut any = false;
-            for (i, id) in s.flows.iter().enumerate() {
-                if s.frozen[i] {
-                    continue;
-                }
-                let f = &self.active[id];
-                if f.path.iter().any(|&e| s.cap_left[s.edge_slot[e]] <= self.links[e].bw * 1e-9) {
-                    s.frozen[i] = true;
-                    left -= 1;
-                    any = true;
-                }
-            }
-            if !any {
-                // Numerical guard: finite headroom remains but no link
-                // crossed its saturation tolerance this round. The partial
-                // allocation stands; every first round assigns a positive
-                // increment, so no flow can be silently stranded at rate 0
-                // — asserted below so a regression fails loudly in debug
-                // builds instead of stalling a simulation. Trips are
-                // counted in an always-compiled stat
-                // ([`FabricSim::rate_guard_trips`]) so release builds
-                // surface them too, rather than silently accepting the
-                // partial rates.
-                self.rate_guard_trips += 1;
-                #[cfg(debug_assertions)]
-                {
-                    if self.rate_guard_trips == 1 {
-                        eprintln!(
-                            "commtax: rate-repair numerical guard tripped ({left} unfrozen, rates stay partial; \
-                             logged once, see rate_guard_trips())"
-                        );
+                s.parts.push(s.comps.len());
+                let edge_slot: &[usize] = &s.edge_slot;
+                let parts: &[usize] = &s.parts;
+                let comps_all: &[(usize, usize, usize, usize)] = &s.comps;
+                let mut rate_rest = s.rate.as_mut_slice();
+                let mut frozen_rest = s.frozen.as_mut_slice();
+                let mut cap_rest = s.cap_left.as_mut_slice();
+                let mut wsum_rest = s.wsum.as_mut_slice();
+                let mut routes_rest = routes.as_slice();
+                let mut mult_rest = s.mult.as_slice();
+                std::thread::scope(|sc| {
+                    for w in parts.windows(2) {
+                        let comps = &comps_all[w[0]..w[1]];
+                        if comps.is_empty() {
+                            continue;
+                        }
+                        let (first, last) = (comps[0], comps[comps.len() - 1]);
+                        let (nfl, nel) = (last.1 - first.0, last.3 - first.2);
+                        let (base_f, base_e) = (first.0, first.2);
+                        let (rate_g, rest) = rate_rest.split_at_mut(nfl);
+                        rate_rest = rest;
+                        let (frozen_g, rest) = frozen_rest.split_at_mut(nfl);
+                        frozen_rest = rest;
+                        let (cap_g, rest) = cap_rest.split_at_mut(nel);
+                        cap_rest = rest;
+                        let (wsum_g, rest) = wsum_rest.split_at_mut(nel);
+                        wsum_rest = rest;
+                        let (routes_g, rest) = routes_rest.split_at(nfl);
+                        routes_rest = rest;
+                        let (mult_g, rest) = mult_rest.split_at(nfl);
+                        mult_rest = rest;
+                        sc.spawn(move || {
+                            for &(f0, f1, e0, e1) in comps {
+                                let (lf0, lf1) = (f0 - base_f, f1 - base_f);
+                                let (le0, le1) = (e0 - base_e, e1 - base_e);
+                                fill_component(
+                                    &routes_g[lf0..lf1],
+                                    &mult_g[lf0..lf1],
+                                    &mut rate_g[lf0..lf1],
+                                    &mut frozen_g[lf0..lf1],
+                                    &mut cap_g[le0..le1],
+                                    &mut wsum_g[le0..le1],
+                                    edge_slot,
+                                    e0,
+                                    links,
+                                    guard,
+                                );
+                            }
+                        });
                     }
-                    // count over the full index range, not iteration order:
-                    // the tally is identical however the set is traversed,
-                    // and the log above already printed when it fires
-                    let stalled = (0..nf).filter(|&i| !s.frozen[i] && s.rate[i] <= 0.0).count();
-                    debug_assert_eq!(stalled, 0, "rate repair left {stalled} unfrozen flow(s) at zero rate");
+                });
+            } else {
+                for &(f0, f1, e0, e1) in &s.comps {
+                    fill_component(
+                        &routes[f0..f1],
+                        &s.mult[f0..f1],
+                        &mut s.rate[f0..f1],
+                        &mut s.frozen[f0..f1],
+                        &mut s.cap_left[e0..e1],
+                        &mut s.wsum[e0..e1],
+                        &s.edge_slot,
+                        e0,
+                        links,
+                        guard,
+                    );
                 }
-                break;
             }
         }
 
@@ -940,6 +1234,60 @@ impl FabricSim {
         self.net.borrow_mut().aggregation = policy;
     }
 
+    /// Admission batching policy in force.
+    pub fn admission_batching(&self) -> AdmissionBatching {
+        self.net.borrow().batching
+    }
+
+    /// Set the admission batching policy. Coalesce (the default) is
+    /// exactly equivalent to Immediate — zero sim time elapses between a
+    /// batch's starts and its flush — so this knob exists for A/B
+    /// measurement. Set it before traffic for a uniform run.
+    pub fn set_admission_batching(&self, batching: AdmissionBatching) {
+        self.net.borrow_mut().batching = batching;
+    }
+
+    /// Worker threads a residual/global rate solve may fan out over.
+    pub fn solver_threads(&self) -> usize {
+        self.net.borrow().solver_threads
+    }
+
+    /// Set the solver worker count (clamped to ≥ 1; 1 means always
+    /// sequential). The default honors `RAYON_NUM_THREADS`, else the
+    /// machine's available parallelism. Results are byte-identical for
+    /// every value — the knob only moves wall-clock time.
+    pub fn set_solver_threads(&self, threads: usize) {
+        self.net.borrow_mut().solver_threads = threads.max(1);
+    }
+
+    /// Dirty-flow population at which residual solves start fanning
+    /// components out over worker threads.
+    pub fn parallel_solve_threshold(&self) -> usize {
+        self.net.borrow().par_threshold
+    }
+
+    /// Set the parallel-solve threshold (tests pin it to 1 to force the
+    /// decomposed path on tiny workloads; the default keeps small solves
+    /// sequential, where thread spawn overhead would dominate).
+    pub fn set_parallel_solve_threshold(&self, flows: usize) {
+        self.net.borrow_mut().par_threshold = flows;
+    }
+
+    /// Flow starts whose rate solve was deferred into a same-instant
+    /// admission batch so far (0 under [`AdmissionBatching::Immediate`]).
+    pub fn deferred_starts(&self) -> u64 {
+        self.net.borrow().deferred_starts
+    }
+
+    /// Deferred admission batches flushed by their own same-instant event
+    /// so far. Strictly fewer than [`Self::deferred_starts`] on workloads
+    /// with same-timestamp waves — each gap is a rate solve amortized away
+    /// (batches drained by a same-instant completion batch don't count;
+    /// those cost zero extra solves).
+    pub fn admission_flushes(&self) -> u64 {
+        self.net.borrow().admission_flushes
+    }
+
     /// Link spec of a directed edge (cloned out of the shared state).
     pub fn link(&self, e: EdgeId) -> LinkSpec {
         self.net.borrow().links[e].clone()
@@ -947,11 +1295,13 @@ impl FabricSim {
 
     /// The route the current policy would pick right now (edge ids), or
     /// `None` when unreachable. Same selection logic as [`Self::submit`].
-    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<Vec<EdgeId>> {
+    /// Shares the cached path storage (`Arc`) — no per-call copy; clone
+    /// the inner `Vec` only if you need to own or mutate it.
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<Arc<Vec<EdgeId>>> {
         if src == dst {
-            return Some(Vec::new());
+            return Some(Arc::new(Vec::new()));
         }
-        self.net.borrow().route(src, dst).map(|p| p.as_ref().clone())
+        self.net.borrow().route(src, dst)
     }
 
     /// Whether the current policy can route `src` → `dst`, without copying
@@ -992,7 +1342,7 @@ impl FabricSim {
     /// runs; a nonzero count in release builds is the signal the old
     /// debug-only `eprintln!` could never deliver.
     pub fn rate_guard_trips(&self) -> u64 {
-        self.net.borrow().rate_guard_trips
+        self.net.borrow().rate_guard_trips.load(Ordering::Relaxed)
     }
 
     /// Payload bytes delivered so far.
@@ -1157,12 +1507,64 @@ impl FabricSim {
 
     fn activate(net: Rc<RefCell<FlowNet>>, eng: &mut Engine, id: FlowId) {
         let now = eng.now();
+        // Under Coalesce, the first deferred start of an instant schedules
+        // the batch's flush; later same-instant starts just add seeds.
+        let mut solved = false;
+        let mut flush_gen = None;
         {
             let mut n = net.borrow_mut();
             n.advance(now);
             if let Some(f) = n.staged.remove(&id) {
-                n.start_flow(now, id, f);
+                let seeds = n.start_flow(now, id, f);
+                match n.batching {
+                    AdmissionBatching::Immediate => {
+                        n.solve_after_change(now, &seeds);
+                        solved = true;
+                    }
+                    AdmissionBatching::Coalesce => {
+                        let opens = n.pending_seeds.is_empty();
+                        debug_assert!(opens || n.pending_at == now, "a pending batch never outlives its instant");
+                        n.pending_seeds.extend(seeds.iter().copied());
+                        n.pending_at = now;
+                        n.deferred_starts += 1;
+                        if opens {
+                            flush_gen = Some(n.pending_gen);
+                        }
+                    }
+                }
             }
+        }
+        if solved {
+            Self::drive(&net, eng);
+        } else if let Some(gen) = flush_gen {
+            let netc = net.clone();
+            eng.defer(move |e| Self::flush_admissions(netc, e, gen));
+        }
+    }
+
+    /// Flush a deferred admission batch: one rate repair over the union of
+    /// the batch's seed edges, at the very instant the starts happened
+    /// (scheduled via [`Engine::defer`], it runs after every event already
+    /// queued at that instant, so the whole same-timestamp wave is in). A
+    /// stale generation means a same-instant completion batch already
+    /// drained these seeds into its own solve.
+    fn flush_admissions(net: Rc<RefCell<FlowNet>>, eng: &mut Engine, gen: u64) {
+        {
+            let mut n = net.borrow_mut();
+            if n.pending_gen != gen {
+                return;
+            }
+            debug_assert!(!n.pending_seeds.is_empty(), "live flush with no pending seeds");
+            let now = eng.now();
+            debug_assert_eq!(n.pending_at, now, "flush must run at the admission instant");
+            n.advance(now);
+            n.pending_gen += 1;
+            n.admission_flushes += 1;
+            let mut seeds = std::mem::take(&mut n.pending_seeds);
+            n.solve_after_change(now, &seeds);
+            // hand the buffer back so the next batch reuses its capacity
+            seeds.clear();
+            n.pending_seeds = seeds;
         }
         Self::drive(&net, eng);
     }
@@ -1245,6 +1647,16 @@ impl FabricSim {
                 seeds.extend(path.iter().copied());
             }
             n.concurrency.set(now, n.active_members as f64);
+            // Admissions deferred at this same instant fold into this
+            // solve: the union of seed edges covers both the finished and
+            // the just-started routes, and the batch's own flush event
+            // then no-ops on the stale generation. (Starts and finishes
+            // sharing a timestamp cost one solve total.)
+            if !n.pending_seeds.is_empty() {
+                debug_assert_eq!(n.pending_at, now, "a pending batch never outlives its instant");
+                n.pending_gen += 1;
+                seeds.extend(n.pending_seeds.drain(..));
+            }
             n.solve_after_change(now, &seeds);
         }
         for (d, cb) in done {
@@ -1541,10 +1953,126 @@ mod tests {
         let sim = star_sim(2, RoutingPolicy::Hbr);
         assert!(matches!(sim.rate_solver(), RateSolver::Incremental { .. }), "incremental repair is the default");
         assert_eq!(sim.aggregation(), AggregationPolicy::Off, "aggregation is opt-in");
+        assert_eq!(sim.admission_batching(), AdmissionBatching::Coalesce, "admission batching is the default");
         sim.set_rate_solver(RateSolver::Global);
         assert_eq!(sim.rate_solver(), RateSolver::Global);
         sim.set_aggregation(AggregationPolicy::SameRoute);
         assert_eq!(sim.aggregation(), AggregationPolicy::SameRoute);
+        sim.set_admission_batching(AdmissionBatching::Immediate);
+        assert_eq!(sim.admission_batching(), AdmissionBatching::Immediate);
+        assert!(sim.solver_threads() >= 1, "default worker count is at least one");
+        sim.set_solver_threads(0);
+        assert_eq!(sim.solver_threads(), 1, "thread count clamps to at least one");
+        sim.set_solver_threads(4);
+        assert_eq!(sim.solver_threads(), 4);
+        assert_eq!(sim.parallel_solve_threshold(), 256, "small solves stay sequential by default");
+        sim.set_parallel_solve_threshold(1);
+        assert_eq!(sim.parallel_solve_threshold(), 1);
+    }
+
+    #[test]
+    fn admission_batching_coalesces_same_instant_starts() {
+        // three 2-hop submits at t=0 activate at the same instant; under
+        // the default Coalesce policy they must share one rate solve
+        let sim = star_sim(4, RoutingPolicy::Hbr);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        for i in 0..3 {
+            sim.submit(&mut eng, Transfer::new(eps[i], eps[3], 1 << 22, TrafficClass::Collective));
+        }
+        eng.run();
+        assert_eq!(sim.completed(), 3);
+        assert_eq!(sim.deferred_starts(), 3);
+        assert_eq!(sim.admission_flushes(), 1, "three same-instant starts must coalesce into one flush");
+        assert_eq!(sim.active_flows(), 0);
+        assert_eq!(sim.rate_guard_trips(), 0);
+    }
+
+    #[test]
+    fn immediate_admission_defers_nothing() {
+        let sim = star_sim(4, RoutingPolicy::Hbr);
+        sim.set_admission_batching(AdmissionBatching::Immediate);
+        let eps = sim.endpoints();
+        let mut eng = Engine::new();
+        for i in 0..3 {
+            sim.submit(&mut eng, Transfer::new(eps[i], eps[3], 1 << 22, TrafficClass::Collective));
+        }
+        eng.run();
+        assert_eq!(sim.completed(), 3);
+        assert_eq!(sim.deferred_starts(), 0);
+        assert_eq!(sim.admission_flushes(), 0);
+    }
+
+    #[test]
+    fn batched_admission_matches_immediate_admission() {
+        // a same-instant fan-in wave: per-member arrivals and the ledger
+        // must match the unbatched run (zero sim time elapses between a
+        // batch's starts and its flush, so only the final rates matter)
+        let run = |batching: AdmissionBatching| {
+            let sim = star_sim(5, RoutingPolicy::Hbr);
+            sim.set_admission_batching(batching);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let done: Rc<RefCell<Vec<FlowDone>>> = Rc::new(RefCell::new(Vec::new()));
+            for i in 0..4 {
+                let d = done.clone();
+                let bytes = (1u64 << 22) + (i as u64) * 8192; // distinct sizes
+                sim.submit_with(&mut eng, Transfer::new(eps[i], eps[4], bytes, TrafficClass::KvCache), move |_, r| {
+                    d.borrow_mut().push(r)
+                });
+            }
+            eng.run();
+            let mut rs: Vec<(FlowId, f64)> = done.borrow().iter().map(|r| (r.id, r.arrival)).collect();
+            rs.sort_by_key(|r| r.0);
+            (rs, sim.total_payload(), sim.ledger().contention.sum())
+        };
+        let (base, pb, cb) = run(AdmissionBatching::Immediate);
+        let (got, pg, cg) = run(AdmissionBatching::Coalesce);
+        assert_eq!(pb, pg);
+        assert_eq!(base.len(), got.len());
+        for ((ia, ta), (ib, tb)) in base.iter().zip(got.iter()) {
+            assert_eq!(ia, ib);
+            let rel = (ta - tb).abs() / ta.max(1.0);
+            assert!(rel < 1e-9, "arrival diverged under batching: {ta} vs {tb}");
+        }
+        let rel = (cb - cg).abs() / cb.abs().max(1.0);
+        assert!(rel < 1e-9, "contention diverged under batching: {cb} vs {cg}");
+    }
+
+    #[test]
+    fn parallel_residual_solve_is_bit_identical() {
+        // disjoint pairs on a star fabric give every global pass several
+        // link-disjoint components; forcing the parallel path (threshold
+        // 1) must not move a single bit relative to one worker
+        let run = |threads: usize| {
+            let sim = star_sim(8, RoutingPolicy::Hbr);
+            sim.set_rate_solver(RateSolver::Global);
+            sim.set_solver_threads(threads);
+            sim.set_parallel_solve_threshold(1);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let done: Rc<RefCell<Vec<FlowDone>>> = Rc::new(RefCell::new(Vec::new()));
+            let pairs = [(0usize, 1usize), (2, 3), (4, 5), (6, 7), (0, 2), (4, 6), (1, 3), (5, 7)];
+            for (i, &(a, b)) in pairs.iter().enumerate() {
+                let d = done.clone();
+                let bytes = (1u64 << 22) + (i as u64) * 4096;
+                sim.submit_with(&mut eng, Transfer::new(eps[a], eps[b], bytes, TrafficClass::Collective), move |_, r| {
+                    d.borrow_mut().push(r)
+                });
+            }
+            eng.run();
+            let mut rs: Vec<(FlowId, u64)> = done.borrow().iter().map(|r| (r.id, r.arrival.to_bits())).collect();
+            rs.sort_by_key(|r| r.0);
+            (rs, sim.trace_render(), sim.total_payload())
+        };
+        let (base, trace1, pay1) = run(1);
+        assert_eq!(base.len(), 8);
+        for threads in [2, 8] {
+            let (got, trace_n, pay_n) = run(threads);
+            assert_eq!(base, got, "{threads} workers changed an arrival bit");
+            assert_eq!(trace1, trace_n, "{threads} workers changed the trace");
+            assert_eq!(pay1, pay_n);
+        }
     }
 
     #[test]

@@ -34,7 +34,8 @@ pub mod topology;
 pub use cxl::{CxlProtocol, CxlStack, CxlVersion};
 pub use flit::FlitFormat;
 pub use flow::{
-    AggregationPolicy, CommTaxLedger, FabricSim, FlowDone, FlowId, LinkUse, RateSolver, TrafficClass, Transfer,
+    AdmissionBatching, AggregationPolicy, CommTaxLedger, FabricSim, FlowDone, FlowId, LinkUse, RateSolver,
+    TrafficClass, Transfer,
 };
 pub use link::{LinkClass, LinkSpec};
 pub use netstack::SoftwareStack;

@@ -17,7 +17,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::hash::{BuildHasherDefault, Hasher};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 /// Multiply-shift hasher for the (src, dst) route caches — SipHash showed
 /// up in the §Perf transfer-path profile; route keys are small integers so
@@ -69,13 +69,16 @@ pub enum TopologyKind {
 
 /// Directed graph with BFS route cache.
 ///
-/// The route/ECMP caches sit behind `Mutex`es and hand out `Arc`s, so a
+/// The route/ECMP caches sit behind `RwLock`s and hand out `Arc`s, so a
 /// built `Topology` is `Send + Sync`: experiments can fan shared read-only
-/// topologies out across threads while still enjoying warm caches. The
-/// uncontended lock is one atomic pair per lookup — accepted over a
-/// lock-free design for simplicity; hot-path callers hold the returned
-/// `Arc` per flow instead of re-resolving, and `perf_hotpath` tracks the
-/// transfer-path cost.
+/// topologies out across threads while still enjoying warm caches. Once a
+/// pair is warm the lookup takes only a shared read lock — concurrent
+/// readers (parallel component solves, hot submit loops) never serialize
+/// on each other; only the one-time fill per pair takes the write lock,
+/// and a racing double-compute is benign (BFS is deterministic, last
+/// insert wins with an identical value). Hot-path callers hold the
+/// returned `Arc` per flow instead of re-resolving, and `perf_hotpath`
+/// tracks the transfer-path cost.
 #[derive(Debug)]
 pub struct Topology {
     kind: TopologyKind,
@@ -85,9 +88,9 @@ pub struct Topology {
     /// adjacency: node -> [(neighbor, edge id)]
     adj: Vec<Vec<(NodeId, usize)>>,
     endpoints: Vec<NodeId>,
-    route_cache: Mutex<PairMap<Option<Arc<Vec<usize>>>>>,
+    route_cache: RwLock<PairMap<Option<Arc<Vec<usize>>>>>,
     /// Equal-cost candidate sets for PBR (computed once per pair).
-    ecmp_cache: Mutex<PairMap<Arc<Vec<Vec<usize>>>>>,
+    ecmp_cache: RwLock<PairMap<Arc<Vec<Vec<usize>>>>>,
 }
 
 impl Topology {
@@ -99,8 +102,8 @@ impl Topology {
             edges: Vec::new(),
             adj: Vec::new(),
             endpoints: Vec::new(),
-            route_cache: Mutex::new(HashMap::default()),
-            ecmp_cache: Mutex::new(HashMap::default()),
+            route_cache: RwLock::new(HashMap::default()),
+            ecmp_cache: RwLock::new(HashMap::default()),
         }
     }
 
@@ -123,8 +126,8 @@ impl Topology {
         let rev = self.edges.len();
         self.edges.push((b, a));
         self.adj[b].push((a, rev));
-        self.route_cache.lock().expect("route cache").clear();
-        self.ecmp_cache.lock().expect("ecmp cache").clear();
+        self.route_cache.write().expect("route cache").clear();
+        self.ecmp_cache.write().expect("ecmp cache").clear();
         (fwd, rev)
     }
 
@@ -175,11 +178,13 @@ impl Topology {
         if src == dst {
             return Some(Arc::new(Vec::new()));
         }
-        if let Some(hit) = self.route_cache.lock().expect("route cache").get(&(src, dst)) {
+        if let Some(hit) = self.route_cache.read().expect("route cache").get(&(src, dst)) {
             return hit.clone();
         }
+        // miss: compute outside any lock, then take the write lock only to
+        // publish (a racing duplicate compute is deterministic-identical)
         let path = self.bfs(src, dst).map(Arc::new);
-        self.route_cache.lock().expect("route cache").insert((src, dst), path.clone());
+        self.route_cache.write().expect("route cache").insert((src, dst), path.clone());
         path
     }
 
@@ -220,11 +225,11 @@ impl Topology {
     /// dynamic, so the DFS runs once per pair (§Perf optimization — this
     /// took PBR routing from 0.63 to HBR-class M transfers/s).
     pub fn equal_cost_paths_cached(&self, src: NodeId, dst: NodeId, cap: usize) -> Arc<Vec<Vec<usize>>> {
-        if let Some(hit) = self.ecmp_cache.lock().expect("ecmp cache").get(&(src, dst)) {
+        if let Some(hit) = self.ecmp_cache.read().expect("ecmp cache").get(&(src, dst)) {
             return hit.clone();
         }
         let paths = Arc::new(self.equal_cost_paths(src, dst, cap));
-        self.ecmp_cache.lock().expect("ecmp cache").insert((src, dst), paths.clone());
+        self.ecmp_cache.write().expect("ecmp cache").insert((src, dst), paths.clone());
         paths
     }
 

@@ -280,6 +280,16 @@ impl HierarchicalMemory {
         self
     }
 
+    /// Set the admission-batching policy on the hierarchy's fabric (see
+    /// [`crate::fabric::flow::AdmissionBatching`]). The fabric already
+    /// defaults to `Coalesce` — same-instant spill/fetch bursts fold into
+    /// one rate repair — so this is mainly for A/B runs that want the
+    /// per-admission `Immediate` behaviour back.
+    pub fn with_admission_batching(self, policy: crate::fabric::flow::AdmissionBatching) -> Self {
+        self.fabric.set_admission_batching(policy);
+        self
+    }
+
     /// The fabric the hierarchy's flows ride (shared handle).
     pub fn fabric(&self) -> &FabricSim {
         &self.fabric

@@ -51,6 +51,11 @@ pub struct PdConfig {
     /// handoff latencies and the ledger stay exact, the solver just handles
     /// fewer flow objects under handoff storms.
     pub aggregate_flows: bool,
+    /// Coalesce same-timestamp KV handoff admissions into one rate repair
+    /// ([`crate::fabric::flow::AdmissionBatching::Coalesce`], the fabric
+    /// default). Kept as an explicit knob for A/B runs against
+    /// per-admission (`Immediate`) solves.
+    pub batch_admission: bool,
     pub seed: u64,
 }
 
@@ -67,6 +72,7 @@ impl Default for PdConfig {
             gen_tokens: 64,
             kv_budget: 64 << 30,
             aggregate_flows: false,
+            batch_admission: true,
             seed: 11,
         }
     }
@@ -159,6 +165,9 @@ pub fn simulate_pd_fabric(
     let hier = HierarchicalMemory::new(2, 0, platform.tiers.clone());
     if cfg.aggregate_flows {
         hier.fabric().set_aggregation(crate::fabric::flow::AggregationPolicy::SameRoute);
+    }
+    if !cfg.batch_admission {
+        hier.fabric().set_admission_batching(crate::fabric::flow::AdmissionBatching::Immediate);
     }
     let sim = hier.fabric().clone();
     let handoff_bytes = cfg.model.kv_bytes_per_token() * cfg.prompt_tokens;

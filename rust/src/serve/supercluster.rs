@@ -84,6 +84,12 @@ pub struct SuperServeConfig {
     /// ([`crate::fabric::flow::AggregationPolicy::SameRoute`]); per-batch
     /// latencies and ledger attribution stay exact.
     pub aggregate_flows: bool,
+    /// Coalesce same-timestamp flow admissions (tenant bursts, sync fan-out)
+    /// into one rate repair per instant
+    /// ([`crate::fabric::flow::AdmissionBatching::Coalesce`], the fabric
+    /// default). Explicit knob so A/B runs can fall back to per-admission
+    /// (`Immediate`) solves.
+    pub batch_admission: bool,
     pub seed: u64,
 }
 
@@ -107,6 +113,7 @@ impl Default for SuperServeConfig {
             sync_bytes: 4 << 20,
             strategy: RoutingStrategy::FabricAware,
             aggregate_flows: false,
+            batch_admission: true,
             seed: 42,
         }
     }
@@ -246,6 +253,9 @@ pub(crate) fn launch_supercluster(
     let scs = scs.clone();
     if cfg.aggregate_flows {
         scs.set_aggregation(crate::fabric::flow::AggregationPolicy::SameRoute);
+    }
+    if !cfg.batch_admission {
+        scs.set_admission_batching(crate::fabric::flow::AdmissionBatching::Immediate);
     }
     // per-tenant arrivals + batches, via the shared serving front-end
     let mut arrivals = Vec::with_capacity(cfg.tenants);

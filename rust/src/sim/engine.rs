@@ -116,6 +116,17 @@ impl Engine {
         self.schedule_at(now + dt.max(0.0), cb)
     }
 
+    /// Schedule `cb` at the *current* instant, after every event already
+    /// queued at this time (same-time ties break by insertion order, and
+    /// this inserts last). The flow engine's same-timestamp admission
+    /// batching hangs off this: activations sharing an instant enqueue
+    /// work, and one deferred callback folds it into a single rate repair
+    /// before simulated time can advance.
+    pub fn defer<F: FnOnce(&mut Engine) + 'static>(&mut self, cb: F) -> EventId {
+        let now = self.now;
+        self.schedule_at(now, cb)
+    }
+
     /// Execute a single event. Returns false when the queue is empty or the
     /// horizon has been reached.
     pub fn step(&mut self) -> bool {
@@ -212,6 +223,31 @@ mod tests {
         });
         e.run();
         assert_eq!(*hits.borrow(), 2);
+    }
+
+    #[test]
+    fn defer_runs_after_queued_same_time_events() {
+        // three events at t=1; the first defers a callback, which must run
+        // after the two events already queued at the same instant — and
+        // after anything those events themselves defer later
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for i in 0..3u32 {
+            let o = order.clone();
+            e.schedule_at(1.0, move |eng| {
+                o.borrow_mut().push(i);
+                if i == 0 {
+                    let o2 = o.clone();
+                    eng.defer(move |eng2| {
+                        assert_eq!(eng2.now(), 1.0, "defer must not advance time");
+                        o2.borrow_mut().push(10);
+                    });
+                }
+            });
+        }
+        e.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 10]);
+        assert_eq!(e.now(), 1.0);
     }
 
     #[test]

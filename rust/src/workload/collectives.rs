@@ -404,6 +404,12 @@ fn ring_chain_step<L: FlowLane>(
 /// to: the engine fuses whatever happens to coincide on a route, with the
 /// same exactness contract (per-member completion times and ledger bytes
 /// unchanged).
+///
+/// The kickoff below also benefits from the fabric's same-timestamp
+/// admission batching ([`crate::fabric::flow::AdmissionBatching`], default
+/// `Coalesce`) with no code here: all `n` chains start at the same
+/// instant, so their first-round admissions fold into a single rate
+/// repair instead of `n` successive ones.
 pub(crate) fn ring_rounds_flows_on<L: FlowLane>(
     lane: &L,
     eng: &mut Engine,
@@ -1306,6 +1312,31 @@ mod tests {
         let (b, pb) = run(AggregationPolicy::SameRoute);
         assert!((a - b).abs() / a < 1e-6, "finish diverged: {a} vs {b}");
         assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn ring_allreduce_unchanged_under_admission_batching() {
+        // all n chains kick off at one instant, so batching folds their
+        // admissions into one repair — the priced result must not move
+        use crate::fabric::flow::AdmissionBatching;
+        use crate::fabric::link::LinkSpec;
+        use crate::fabric::routing::RoutingPolicy;
+        use crate::fabric::topology::Topology;
+        let run = |batching| {
+            let sim = FabricSim::new(Topology::fully_connected(6), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            sim.set_admission_batching(batching);
+            let ranks = sim.endpoints();
+            let mut eng = Engine::new();
+            let r = ring_allreduce_flows_on(&sim, &mut eng, &ranks, 1 << 24);
+            eng.run();
+            (r.finish_time().expect("collective completes"), sim.total_payload(), sim.deferred_starts())
+        };
+        let (a, pa, da) = run(AdmissionBatching::Immediate);
+        let (b, pb, db) = run(AdmissionBatching::Coalesce);
+        assert!((a - b).abs() / a < 1e-6, "finish diverged: {a} vs {b}");
+        assert_eq!(pa, pb);
+        assert_eq!(da, 0, "immediate mode defers nothing");
+        assert!(db > 0, "coalesce mode defers the same-instant kickoff");
     }
 
     #[test]

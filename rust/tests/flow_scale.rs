@@ -1,14 +1,19 @@
 //! Cross-configuration equivalence suite for the flow engine.
 //!
-//! The incremental max-min rate repair ([`RateSolver::Incremental`]) and
-//! same-route flow aggregation ([`AggregationPolicy::SameRoute`]) are pure
+//! The incremental max-min rate repair ([`RateSolver::Incremental`]),
+//! same-route flow aggregation ([`AggregationPolicy::SameRoute`]),
+//! same-timestamp admission batching ([`AdmissionBatching::Coalesce`]),
+//! and component-parallel residual solves (`set_solver_threads`) are pure
 //! performance features: on any workload they must reproduce the global
 //! progressive-filling solver's answer — per-flow finish times (within
 //! float-summation noise, far inside the 0.1% budget), the finish order of
 //! clearly separated completions, and the ledger's integer byte columns
 //! exactly. These tests drive randomized arrival sequences over several
 //! topologies through every solver/aggregation combination and diff the
-//! outcomes against the `Global + Off` baseline.
+//! outcomes against the `Global + Off` baseline. The parallel sweep is
+//! held to a stricter bar: the determinism contract says thread count is
+//! unobservable, so traces and finish times must be *byte-identical*
+//! across worker counts, not merely within tolerance.
 //!
 //! Routing is pinned to HBR throughout: PBR's least-loaded plane choice is
 //! legitimately sensitive to event ordering, so it can pick different (but
@@ -19,7 +24,9 @@
 //! `Incremental` solver unchanged, which is the regression gate that the
 //! default rollout didn't move any previously pinned figure.
 
-use commtax::fabric::flow::{AggregationPolicy, FabricSim, FlowId, RateSolver, TrafficClass, Transfer};
+use commtax::fabric::flow::{
+    AdmissionBatching, AggregationPolicy, FabricSim, FlowId, RateSolver, TrafficClass, Transfer,
+};
 use commtax::fabric::link::LinkSpec;
 use commtax::fabric::routing::RoutingPolicy;
 use commtax::fabric::topology::{NodeId, Topology};
@@ -65,13 +72,40 @@ struct RunOut {
     finish_order: Vec<FlowId>,
     ledger: commtax::fabric::flow::CommTaxLedger,
     joins: u64,
+    /// Admissions that entered a same-instant batch / solves that flushed
+    /// one (engine counters; equal deferred==0 under `Immediate`).
+    deferred: u64,
+    flushes: u64,
     trace: String,
 }
 
 fn run(topo: Topology, wl: &Work, solver: RateSolver, agg: AggregationPolicy) -> RunOut {
+    run_tuned(topo, wl, solver, agg, None, None, None)
+}
+
+/// [`run`] with the admission-batching / worker-count / parallel-threshold
+/// knobs pinned (`None` keeps the engine default for that knob).
+fn run_tuned(
+    topo: Topology,
+    wl: &Work,
+    solver: RateSolver,
+    agg: AggregationPolicy,
+    batching: Option<AdmissionBatching>,
+    threads: Option<usize>,
+    threshold: Option<usize>,
+) -> RunOut {
     let sim = FabricSim::new(topo, LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
     sim.set_rate_solver(solver);
     sim.set_aggregation(agg);
+    if let Some(b) = batching {
+        sim.set_admission_batching(b);
+    }
+    if let Some(t) = threads {
+        sim.set_solver_threads(t);
+    }
+    if let Some(k) = threshold {
+        sim.set_parallel_solve_threshold(k);
+    }
     let done: Rc<RefCell<Vec<(FlowId, f64)>>> = Rc::new(RefCell::new(Vec::new()));
     let mut eng = Engine::new();
     for &(s, d, bytes, at, class) in wl {
@@ -89,7 +123,15 @@ fn run(topo: Topology, wl: &Work, solver: RateSolver, agg: AggregationPolicy) ->
     let finish_order: Vec<FlowId> = raw.iter().map(|&(id, _)| id).collect();
     let mut arrivals = raw.clone();
     arrivals.sort_unstable_by_key(|&(id, _)| id);
-    RunOut { arrivals, finish_order, ledger: sim.ledger(), joins: sim.aggregated_joins(), trace: sim.trace_render() }
+    RunOut {
+        arrivals,
+        finish_order,
+        ledger: sim.ledger(),
+        joins: sim.aggregated_joins(),
+        deferred: sim.deferred_starts(),
+        flushes: sim.admission_flushes(),
+        trace: sim.trace_render(),
+    }
 }
 
 /// True when `a` and `b` agree within [`FINISH_TOL`] relative.
@@ -219,6 +261,72 @@ fn property_solver_configs_agree_on_random_workloads() {
         },
     )
     .assert_ok();
+}
+
+#[test]
+fn parallel_residual_solves_are_byte_identical_across_thread_counts() {
+    // the determinism contract: worker count is unobservable. Threshold 1
+    // forces even these small populations through the parallel path, and
+    // the comparison is exact — arrival bits, trace bytes, finish order,
+    // integer ledger columns — not a tolerance band.
+    for (ti, mk) in topologies().into_iter().enumerate() {
+        let eps = mk().endpoints().to_vec();
+        let mut rng = Rng::new(0x7472 + ti as u64);
+        let wl = gen_workload(&mut rng, &eps, 64);
+        for (si, solver) in [RateSolver::Global, RateSolver::Incremental { global_fraction: 0.0 }]
+            .into_iter()
+            .enumerate()
+        {
+            let base = run_tuned(mk(), &wl, solver, AggregationPolicy::Off, None, Some(1), Some(1));
+            for threads in [2usize, 8] {
+                let got = run_tuned(mk(), &wl, solver, AggregationPolicy::Off, None, Some(threads), Some(1));
+                assert_eq!(base.trace, got.trace, "topo {ti} solver {si} threads {threads}: trace bytes diverged");
+                assert_eq!(base.finish_order, got.finish_order, "topo {ti} solver {si} threads {threads}");
+                for (&(id, ta), &(_, tb)) in base.arrivals.iter().zip(&got.arrivals) {
+                    assert_eq!(
+                        ta.to_bits(),
+                        tb.to_bits(),
+                        "topo {ti} solver {si} threads {threads}: flow {id} arrival {ta} vs {tb}"
+                    );
+                }
+                assert_eq!(base.ledger.flows, got.ledger.flows);
+                assert_eq!(base.ledger.total_payload, got.ledger.total_payload);
+                assert_eq!(base.ledger.class_payload, got.ledger.class_payload);
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_admission_matches_immediate_admission() {
+    // quantize arrivals onto a 2.5 us grid so same-timestamp waves form
+    // (gen_workload's raw arrivals are distinct floats and would never
+    // coalesce), then diff coalesced admission against per-admission
+    // solving — zero sim time separates a wave from its flush, so only
+    // the final rate assignment is observable
+    for (ti, mk) in topologies().into_iter().enumerate() {
+        let eps = mk().endpoints().to_vec();
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(0xBA7C ^ ((seed << 8) | ti as u64));
+            let mut wl = gen_workload(&mut rng, &eps, 48);
+            for w in &mut wl {
+                w.3 = (w.3 / 2.5e3).floor() * 2.5e3;
+            }
+            let imm =
+                run_tuned(mk(), &wl, RateSolver::Global, AggregationPolicy::Off, Some(AdmissionBatching::Immediate), None, None);
+            let bat =
+                run_tuned(mk(), &wl, RateSolver::Global, AggregationPolicy::Off, Some(AdmissionBatching::Coalesce), None, None);
+            assert_eq!(imm.deferred, 0, "immediate mode must not defer");
+            assert_eq!(imm.flushes, 0);
+            assert!(
+                bat.flushes < bat.deferred,
+                "topo {ti} seed {seed}: quantized waves must coalesce ({} flushes for {} deferred starts)",
+                bat.flushes,
+                bat.deferred
+            );
+            assert_equivalent(&imm, &bat, &format!("topo {ti} seed {seed} batched admission"));
+        }
+    }
 }
 
 #[test]

@@ -636,6 +636,71 @@ fn property_aggregated_swarm_conserves_bytes() {
 }
 
 #[test]
+fn property_batched_admission_conserves_bytes() {
+    // admission batching (with the parallel residual path forced on) is
+    // invisible to the ledger: random same-timestamp swarms — every flow
+    // in a wave shares one arrival instant — deliver exactly the bytes
+    // they submitted, partitioned per class, with the batch counters
+    // proving the waves actually coalesced.
+    use commtax::fabric::flow::{AdmissionBatching, FabricSim, RateSolver, TrafficClass, Transfer};
+    use commtax::sim::Engine;
+    check(
+        32,
+        |rng| {
+            let n = 3 + rng.index(6);
+            let waves = 2 + rng.index(4);
+            let swarm: Vec<(usize, usize, u64, u64, f64)> = (0..30)
+                .map(|_| {
+                    let wave = rng.index(waves) as f64 * 5.0e3;
+                    (rng.index(n), rng.index(n), 1 + rng.below(1 << 18), rng.below(3), wave)
+                })
+                .collect();
+            (n, swarm)
+        },
+        |(n, swarm)| {
+            let sim = FabricSim::new(Topology::star(*n), LinkSpec::cxl3_x16(), RoutingPolicy::Hbr);
+            sim.set_admission_batching(AdmissionBatching::Coalesce);
+            sim.set_rate_solver(RateSolver::Global);
+            sim.set_solver_threads(4);
+            sim.set_parallel_solve_threshold(1);
+            let eps = sim.endpoints();
+            let mut eng = Engine::new();
+            let (mut total, mut crossing_flows) = (0u64, 0u64);
+            let mut by_class = [0u64; 3];
+            for &(a, b, bytes, ci, at) in swarm {
+                let class = [TrafficClass::KvCache, TrafficClass::Collective, TrafficClass::Activation][ci as usize];
+                let (src, dst) = (eps[a], eps[b]);
+                let sim2 = sim.clone();
+                eng.schedule_at(at, move |e| {
+                    sim2.submit(e, Transfer::new(src, dst, bytes, class));
+                });
+                total += bytes;
+                by_class[ci as usize] += bytes;
+                if a != b {
+                    crossing_flows += 1;
+                }
+            }
+            eng.run();
+            let ledger = sim.ledger();
+            sim.active_flows() == 0
+                && ledger.flows == swarm.len() as u64
+                && ledger.total_payload == total
+                && ledger.class_bytes(TrafficClass::KvCache) == by_class[0]
+                && ledger.class_bytes(TrafficClass::Collective) == by_class[1]
+                && ledger.class_bytes(TrafficClass::Activation) == by_class[2]
+                // every cross-node admission deferred into a wave; with at
+                // least 6 crossing flows over at most 5 wave instants the
+                // pigeonhole forces a collision, so strictly fewer flushes
+                // than admissions (fewer crossings can legally tie 1:1)
+                && sim.deferred_starts() == crossing_flows
+                && (crossing_flows < 6 || sim.admission_flushes() < crossing_flows)
+                && sim.rate_guard_trips() == 0
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
 fn property_supercluster_transfer_total_order() {
     // inter-cluster latency >= intra-cluster latency for the same payload
     use commtax::datacenter::cluster::{Supercluster, SuperclusterTopology, XLinkCluster};
