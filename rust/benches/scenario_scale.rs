@@ -1,0 +1,107 @@
+//! Open-loop scenario scaling benchmarks: the million-request serving
+//! sweep behind the pooled event hot path + streaming-quantile work.
+//!
+//! Two scale points of the deterministic scenario generator
+//! ([`commtax::scenario`]) on the default 4×16 supercluster:
+//!
+//! * **1e5 requests** — the open-loop arrival stream, Zipf tenancy over a
+//!   2M-user population, per-tenant dynamic batching, every batch pricing
+//!   its KV/activation/sync flows on the contended fabric;
+//! * **1e6 requests** — the same scenario an order of magnitude up, the
+//!   ROADMAP's million-user regime. The `1e5 -> 1e6` wall-clock ratio is
+//!   the scaling point the committed baseline tracks.
+//!
+//! Both points run on the engine's hook lane (no boxed closure per
+//! arrival/deadline/finish event) and accumulate latencies in `Summary`'s
+//! bounded-memory sketch regime — the run asserts the latency summary
+//! retains orders of magnitude fewer samples than it absorbed, so the
+//! sweep's memory stays flat as the request count grows.
+//!
+//! Flags (after `--` under `cargo bench --bench scenario_scale`):
+//!   `--quick`            single-shot points only (the CI mode; both
+//!                        points are single-shot by design, so quick mode
+//!                        only changes the provenance note)
+//!   `--record <path>`    write the measurements as a new baseline JSON
+//!   `--check <path>`     compare against a committed baseline; prints
+//!                        `PERF WARN` lines and exits nonzero on regression
+//!
+//! The check tolerance is relative and comes from `COMMTAX_BENCH_TOL`
+//! (default 0.5). To refresh the committed baseline from a quiet machine:
+//! `cargo bench --bench scenario_scale -- --record ../BENCH_scenario_scale.json`
+
+use commtax::benchkit::{bench, PerfBaseline};
+use commtax::scenario::{run_scenario, ScenarioConfig};
+use commtax::workload::Platform;
+
+fn scenario(requests: u64) -> ScenarioConfig {
+    ScenarioConfig {
+        users: 2_000_000,
+        tenants: 8,
+        requests,
+        rps: 40_000.0,
+        max_batch: 32,
+        ..Default::default()
+    }
+}
+
+/// One scale point, single-shot (expensive by design; never iterated).
+/// Returns wall ns for the full run.
+fn point(requests: u64) -> f64 {
+    let plat = Platform::composable_cxl();
+    let cfg = scenario(requests);
+    let r = bench(&format!("scenario: {requests} open-loop requests"), 0, 1, || {
+        let (rep, ledger, _) = run_scenario(&cfg, &plat);
+        assert_eq!(rep.completed, requests, "open-loop stream must drain");
+        assert_eq!(rep.in_flight, 0);
+        assert!(ledger.flows > 0, "batches must put flows on the fabric");
+        // the bounded-memory contract: sketch-mode summaries never hold
+        // one sample per request
+        let retained = rep.latency.retained();
+        assert!(retained < 20_000, "latency summary retains {retained} samples for {requests} requests");
+        println!(
+            "  -> {requests} reqs: p99 {}, retained samples {retained}, queue peak {}",
+            commtax::benchkit::fmt_ns(rep.latency.percentiles().p99),
+            rep.queue_peak
+        );
+    });
+    r.median()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let flag_value = |flag: &str| args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned();
+    let record = flag_value("--record");
+    let check = flag_value("--check");
+    let tol: f64 = std::env::var("COMMTAX_BENCH_TOL").ok().and_then(|v| v.parse().ok()).unwrap_or(0.5);
+
+    let mode = if quick { "quick" } else { "full" };
+    let mut cur = PerfBaseline::new(&format!("scenario_scale bench, {mode} mode"));
+
+    let t5 = point(100_000);
+    let t6 = point(1_000_000);
+    cur.record("scenario_1e5_ns", t5);
+    cur.record("scenario_1e6_ns", t6);
+    println!("  -> 1e5 -> 1e6 request scaling: {:.2}x wall time", t6 / t5);
+
+    if let Some(path) = record {
+        cur.save(&path).expect("write baseline");
+        println!("recorded baseline -> {path}");
+    }
+    if let Some(path) = check {
+        let base = PerfBaseline::load(&path).expect("read committed baseline");
+        for a in base.additions(&cur) {
+            println!("PERF NOTE {a}");
+        }
+        let warns = base.regressions(&cur, tol);
+        for w in &warns {
+            println!("PERF WARN {w}");
+        }
+        if warns.is_empty() {
+            println!("perf check OK against {path} (tol {tol})");
+        } else {
+            println!("perf check: {} regression(s) against {path} (tol {tol})", warns.len());
+            std::process::exit(1);
+        }
+    }
+}

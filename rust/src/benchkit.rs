@@ -39,12 +39,14 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         summary.add(t0.elapsed().as_nanos() as f64);
     }
     let r = BenchResult { name: name.to_string(), iters, summary };
+    // one sorted snapshot serves both cuts
+    let pct = r.summary.percentiles();
     println!(
         "bench {:<44} iters={:<5} median={:>12} p95={:>12}",
         r.name,
         r.iters,
-        fmt_ns(r.median()),
-        fmt_ns(r.summary.percentile(95.0)),
+        fmt_ns(pct.p50),
+        fmt_ns(pct.p95),
     );
     r
 }

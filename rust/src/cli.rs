@@ -109,11 +109,12 @@ fn run_simulate(flags: &HashMap<String, String>) -> i32 {
             }
             WorkloadKind::Inference => {
                 let r = crate::serve::simulate_serving(&crate::serve::ServeConfig::default(), plat);
+                let pct = r.latency.percentiles();
                 println!(
                     "  {}: p50={} p99={} throughput={:.1} req/s",
                     plat.name,
-                    crate::benchkit::fmt_ns(r.latency.percentile(50.0)),
-                    crate::benchkit::fmt_ns(r.latency.percentile(99.0)),
+                    crate::benchkit::fmt_ns(pct.p50),
+                    crate::benchkit::fmt_ns(pct.p99),
                     r.throughput_rps
                 );
                 continue;
@@ -160,17 +161,40 @@ fn run_serve(flags: &HashMap<String, String>) -> i32 {
     let cfg = crate::serve::ServeConfig { requests, ..Default::default() };
     for plat in [Platform::composable_cxl(), Platform::conventional_rdma()] {
         let r = crate::serve::simulate_serving(&cfg, &plat);
+        let pct = r.latency.percentiles();
         println!(
             "{:<18} p50={} p95={} p99={} throughput={:.1} req/s mean-batch={:.1}",
             plat.name,
-            crate::benchkit::fmt_ns(r.latency.percentile(50.0)),
-            crate::benchkit::fmt_ns(r.latency.percentile(95.0)),
-            crate::benchkit::fmt_ns(r.latency.percentile(99.0)),
+            crate::benchkit::fmt_ns(pct.p50),
+            crate::benchkit::fmt_ns(pct.p95),
+            crate::benchkit::fmt_ns(pct.p99),
             r.throughput_rps,
             r.mean_batch
         );
     }
     0
+}
+
+/// Build the `scenario-tax` table on a CLI-selected fabric: `--topology
+/// <multi-clos|torus|dragonfly>`, `--clusters N`, `--accels N`,
+/// `--trays N` (each optional, defaulting to the experiment's fabric).
+fn scenario_report(flags: &HashMap<String, String>) -> Result<crate::experiments::Table, String> {
+    use crate::scenario::ScenarioTopology;
+    let mut topo = ScenarioTopology::default();
+    if let Some(shape) = flags.get("topology") {
+        topo.shape =
+            ScenarioTopology::parse_shape(shape).ok_or_else(|| format!("unknown topology '{shape}'"))?;
+    }
+    for (flag, slot) in [
+        ("clusters", &mut topo.clusters as &mut usize),
+        ("accels", &mut topo.accels_per_cluster),
+        ("trays", &mut topo.mem_trays),
+    ] {
+        if let Some(v) = flags.get(flag) {
+            *slot = v.parse::<usize>().ok().filter(|&n| n > 0).ok_or_else(|| format!("bad --{flag} '{v}'"))?;
+        }
+    }
+    Ok(experiments::scenario_tax_on(topo))
 }
 
 /// CLI entry point; returns the process exit code.
@@ -180,6 +204,24 @@ pub fn run(argv: &[String]) -> i32 {
         "report" => {
             let md = args.flags.get("format").map(String::as_str) == Some("md");
             if let Some(id) = args.flags.get("exp") {
+                // scenario-tax takes fabric flags the zero-arg registry
+                // drivers cannot express
+                if id == "scenario-tax" {
+                    return match scenario_report(&args.flags) {
+                        Ok(t) => {
+                            if md {
+                                println!("{}", t.markdown());
+                            } else {
+                                t.print();
+                            }
+                            0
+                        }
+                        Err(e) => {
+                            eprintln!("{e}");
+                            2
+                        }
+                    };
+                }
                 match experiments::by_id(id) {
                     Some(t) => {
                         if md {
@@ -217,7 +259,9 @@ pub fn run(argv: &[String]) -> i32 {
         _ => {
             println!(
                 "commtax — composable CXL / CXL-over-XLink AI-infrastructure simulator\n\
-                 usage:\n  commtax report [--exp ID]\n  commtax simulate --workload W --platform P\n  \
+                 usage:\n  commtax report [--exp ID]\n  commtax report --exp scenario-tax \
+                 [--topology S] [--clusters N] [--accels N] [--trays N]\n  \
+                 commtax simulate --workload W --platform P\n  \
                  commtax topo --shape S --n N\n  commtax serve --requests N\n  commtax list"
             );
             if args.cmd == "help" {
@@ -277,6 +321,14 @@ mod tests {
         assert!(ids.contains(&"comm-tax"));
         assert!(ids.contains(&"rag-tax"));
         assert!(ids.contains(&"dlrm-tax"));
+        assert!(ids.contains(&"scenario-tax"));
+    }
+
+    #[test]
+    fn scenario_flags_validate_without_running() {
+        assert_eq!(run(&argv("report --exp scenario-tax --topology bogus")), 2);
+        assert_eq!(run(&argv("report --exp scenario-tax --clusters 0")), 2);
+        assert_eq!(run(&argv("report --exp scenario-tax --accels nope")), 2);
     }
 
     #[test]

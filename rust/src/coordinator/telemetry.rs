@@ -57,7 +57,8 @@ impl Telemetry {
         self.gauge(&format!("{prefix}.active_flows.mean"), ledger.mean_active_flows);
         self.gauge_max(&format!("{prefix}.active_flows.peak"), ledger.peak_active_flows);
         self.gauge(&format!("{prefix}.contention.mean_ns"), ledger.contention.mean());
-        self.gauge_max(&format!("{prefix}.contention.p99_ns"), ledger.contention.percentile(99.0));
+        // one snapshot: Summary sorts (or flushes its sketch) once per fold
+        self.gauge_max(&format!("{prefix}.contention.p99_ns"), ledger.contention.percentiles().p99);
         for class in TrafficClass::ALL {
             let bytes = ledger.class_bytes(class);
             if bytes > 0 {
@@ -88,7 +89,7 @@ impl Telemetry {
         self.incr(&format!("{prefix}.migrate_bytes"), stats.migrate_bytes);
         self.incr(&format!("{prefix}.fetch_bytes"), stats.fetch_bytes);
         self.gauge(&format!("{prefix}.contention.mean_ns"), stats.contention.mean());
-        self.gauge_max(&format!("{prefix}.contention.p99_ns"), stats.contention.percentile(99.0));
+        self.gauge_max(&format!("{prefix}.contention.p99_ns"), stats.contention.percentiles().p99);
     }
 
     /// Fold one event-driven training step into the registry under
@@ -128,10 +129,10 @@ impl Telemetry {
         self.gauge(&format!("{prefix}.generation.elapsed_ns"), report.generation.elapsed);
         self.gauge_max(&format!("{prefix}.search.inflation_peak"), report.search.inflation());
         self.gauge_max(&format!("{prefix}.generation.inflation_peak"), report.generation.inflation());
-        self.gauge_max(&format!("{prefix}.search.contention.p99_ns"), report.search.contention.percentile(99.0));
+        self.gauge_max(&format!("{prefix}.search.contention.p99_ns"), report.search.contention.percentiles().p99);
         self.gauge_max(
             &format!("{prefix}.generation.contention.p99_ns"),
-            report.generation.contention.percentile(99.0),
+            report.generation.contention.percentiles().p99,
         );
     }
 
@@ -152,10 +153,10 @@ impl Telemetry {
         self.gauge(&format!("{prefix}.inference.elapsed_ns"), report.inference.elapsed);
         self.gauge_max(&format!("{prefix}.init.inflation_peak"), report.init.inflation());
         self.gauge_max(&format!("{prefix}.inference.inflation_peak"), report.inference.inflation());
-        self.gauge_max(&format!("{prefix}.init.contention.p99_ns"), report.init.contention.percentile(99.0));
+        self.gauge_max(&format!("{prefix}.init.contention.p99_ns"), report.init.contention.percentiles().p99);
         self.gauge_max(
             &format!("{prefix}.inference.contention.p99_ns"),
-            report.inference.contention.percentile(99.0),
+            report.inference.contention.percentiles().p99,
         );
     }
 

@@ -1226,14 +1226,17 @@ pub fn pd_disagg() -> Table {
     let row = |name: &str, u: f64, d: f64| {
         vec![name.to_string(), fmt_ns(u), fmt_ns(d), format!("{:.2}x", u / d)]
     };
+    // one sorted/sketched snapshot per summary instead of a cut per row
+    let (u_ttft, d_ttft) = (unified.ttft.percentiles(), disagg.ttft.percentiles());
+    let (u_itl, d_itl) = (unified.itl.percentiles(), disagg.itl.percentiles());
     Table {
         title: "§4.3 — prefill/decode disaggregation (96 reqs, 7B-class)".into(),
         headers: vec!["metric", "unified", "disaggregated", "gain"],
         rows: vec![
-            row("TTFT p50", unified.ttft.percentile(50.0), disagg.ttft.percentile(50.0)),
-            row("TTFT p99", unified.ttft.percentile(99.0), disagg.ttft.percentile(99.0)),
-            row("inter-token p50", unified.itl.percentile(50.0), disagg.itl.percentile(50.0)),
-            row("inter-token p99", unified.itl.percentile(99.0), disagg.itl.percentile(99.0)),
+            row("TTFT p50", u_ttft.p50, d_ttft.p50),
+            row("TTFT p99", u_ttft.p99, d_ttft.p99),
+            row("inter-token p50", u_itl.p50, d_itl.p50),
+            row("inter-token p99", u_itl.p99, d_itl.p99),
             row("makespan", unified.makespan, disagg.makespan),
         ],
     }
@@ -1675,6 +1678,96 @@ pub fn dlrm_tax() -> Table {
     }
 }
 
+/// Scenario tax — open-loop serving at scale: the deterministic scenario
+/// generator (seeded Zipf tenancy over a modeled million-user population,
+/// rate-curve-shaped Poisson arrivals) sweeps offered load over the
+/// contended supercluster and reports the p50/p99/p999 latency-vs-load
+/// hockey stick next to the communication-tax ledger at each point —
+/// the open-loop picture the closed-loop serving mixes cannot show.
+pub fn scenario_tax() -> Table {
+    scenario_tax_on(crate::scenario::ScenarioTopology::default())
+}
+
+/// [`scenario_tax`] on a caller-chosen fabric — the CLI's `--topology`,
+/// `--clusters` and `--accels` flags land here.
+pub fn scenario_tax_on(topology: crate::scenario::ScenarioTopology) -> Table {
+    use crate::scenario::{run_scenario, sweep_load, RateCurve, ScenarioConfig};
+
+    let cfg = ScenarioConfig { requests: 600, rps: 2_000.0, topology, ..Default::default() };
+    let plat = Platform::composable_cxl();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    rows.push(vec![
+        format!(
+            "{:?} ×{} clusters × {} accels, {} trays",
+            topology.shape, topology.clusters, topology.accels_per_cluster, topology.mem_trays
+        ),
+        format!("{} tenants (zipf s={})", cfg.tenants, cfg.zipf_s),
+        format!("{} modeled users", cfg.users),
+        format!("{} reqs/point, batch ≤{} or {}", cfg.requests, cfg.max_batch, fmt_ns(cfg.max_wait)),
+    ]);
+
+    // (a) the latency-vs-offered-load curve: each point an independent
+    // deterministic run at rps × multiplier
+    let points = sweep_load(&cfg, &plat, &[0.25, 1.0, 4.0, 16.0]);
+    for p in &points {
+        let r = &p.report;
+        let pct = r.latency.percentiles();
+        rows.push(vec![
+            format!("load ×{:<5} ({:.0} rps offered)", p.multiplier, r.offered_rps),
+            format!("p50 {} / p99 {} / p999 {}", fmt_ns(pct.p50), fmt_ns(pct.p99), fmt_ns(pct.p999)),
+            format!("achieved {:.0} rps", r.achieved_rps),
+            format!("queue peak {}, mean batch {:.1}", r.queue_peak, r.batch_sizes.mean()),
+        ]);
+    }
+
+    // (b) arrival shaping: the same offered volume, flat vs bursty — the
+    // tail pays for the bursts even at equal mean load
+    let flat = &points[1].report;
+    let bursty_cfg = ScenarioConfig {
+        curve: RateCurve::Bursty { mult: 8.0, duty: 0.1, period: 50.0e6 },
+        ..cfg.clone()
+    };
+    let (bursty, _, _) = run_scenario(&bursty_cfg, &plat);
+    rows.push(vec![
+        "burst sensitivity at ×1 load".into(),
+        format!("flat p999 {}", fmt_ns(flat.latency.percentiles().p999)),
+        format!("bursty p999 {}", fmt_ns(bursty.latency.percentiles().p999)),
+        format!("queue peak {} vs {}", flat.queue_peak, bursty.queue_peak),
+    ]);
+
+    // (c) the tax ledger where it hurts: the most-loaded point
+    let last = points.last().expect("non-empty sweep");
+    let ledger = &last.ledger;
+    rows.push(vec![
+        format!("ledger at ×{} load", last.multiplier),
+        format!(
+            "kv {} / act {}",
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::KvCache)),
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::Activation))
+        ),
+        format!(
+            "sync {} ({} inter-cluster)",
+            crate::benchkit::fmt_bytes(ledger.class_bytes(crate::fabric::TrafficClass::Collective)),
+            crate::benchkit::fmt_bytes(last.report.inter_cluster_bytes)
+        ),
+        format!("flow contention p99 {}", fmt_ns(ledger.contention.percentiles().p99)),
+    ]);
+    for l in ledger.hottest(2) {
+        rows.push(vec![
+            format!("hot link #{} ({})", l.edge, l.link),
+            format!("{} -> {}", l.src, l.dst),
+            format!("util {:.0}%", 100.0 * l.utilization),
+            format!("{} carried, peak {} flows", crate::benchkit::fmt_bytes(l.payload), l.peak_flows),
+        ]);
+    }
+
+    Table {
+        title: "Scenario tax — open-loop serving: latency vs offered load on the contended supercluster".into(),
+        headers: vec!["metric", "A", "B", "delta / telemetry"],
+        rows,
+    }
+}
+
 /// Experiment driver function type (one per paper table/figure).
 pub type TableFn = fn() -> Table;
 
@@ -1707,6 +1800,7 @@ pub fn registry() -> Vec<(&'static str, TableFn)> {
         ("train-tax", train_tax),
         ("rag-tax", rag_tax),
         ("dlrm-tax", dlrm_tax),
+        ("scenario-tax", scenario_tax),
     ]
 }
 

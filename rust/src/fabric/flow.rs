@@ -95,7 +95,7 @@ use super::routing::RoutingPolicy;
 use super::topology::{NodeId, Topology};
 use super::EdgeId;
 use crate::sim::stats::TimeWeighted;
-use crate::sim::{Engine, SimTime, Summary};
+use crate::sim::{Engine, HookId, SimTime, Summary};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
@@ -644,6 +644,21 @@ struct FlowNet {
     trace: Vec<TraceRec>,
     trace_cap: usize,
     scratch: SolveScratch,
+    /// Hook ids registered with the engine currently driving this fabric —
+    /// the allocation-free lane for the three hot event shapes (flow
+    /// activation, completion timer, admission flush). Re-registered
+    /// lazily whenever a different engine shows up (`Engine::id`).
+    hooks: Option<FlowHooks>,
+}
+
+/// Per-engine handles into [`Engine::register_hook`] — `Copy`, so the hot
+/// path reads them out of the borrow before scheduling.
+#[derive(Clone, Copy)]
+struct FlowHooks {
+    engine: u64,
+    activate: HookId,
+    complete: HookId,
+    flush: HookId,
 }
 
 impl FlowNet {
@@ -691,6 +706,7 @@ impl FlowNet {
             trace: Vec::new(),
             trace_cap: 1 << 16,
             scratch: SolveScratch::default(),
+            hooks: None,
         }
     }
 
@@ -1472,8 +1488,10 @@ impl FabricSim {
         self.net.borrow_mut().pending_cb.insert(id, Box::new(done));
         // The message head pays the fixed per-hop latencies up front; the
         // body starts streaming (and competing for bandwidth) after them.
-        let net = self.net.clone();
-        eng.schedule_in(hop_lat, move |e| Self::activate(net, e, id));
+        // Hook lane: one registered handler, a bare u64 payload per event —
+        // no boxed closure per submission.
+        let h = Self::engine_hooks(&self.net, eng);
+        eng.schedule_hook_in(hop_lat, h.activate, id);
         Some(id)
     }
 
@@ -1503,6 +1521,34 @@ impl FabricSim {
         }
         let d = slot.borrow_mut().take();
         d
+    }
+
+    /// Hook ids for this fabric on `eng`, registering them on first use
+    /// (or when a different engine starts driving the fabric, e.g. a fresh
+    /// engine per [`FabricSim::transfer_sync`] call). Registration pushes
+    /// no events, so the `(time, seq)` schedule is byte-identical to the
+    /// boxed-closure lane it replaces.
+    fn engine_hooks(net: &Rc<RefCell<FlowNet>>, eng: &mut Engine) -> FlowHooks {
+        if let Some(h) = net.borrow().hooks {
+            if h.engine == eng.id() {
+                return h;
+            }
+        }
+        let n = net.clone();
+        let activate = eng.register_hook(move |e, id| Self::activate(n.clone(), e, id));
+        let n = net.clone();
+        let complete = eng.register_hook(move |e, epoch| {
+            // a later rate change bumped the epoch ⇒ stale timer, no-op
+            let live = n.borrow().epoch == epoch;
+            if live {
+                Self::complete_due(n.clone(), e);
+            }
+        });
+        let n = net.clone();
+        let flush = eng.register_hook(move |e, gen| Self::flush_admissions(n.clone(), e, gen));
+        let h = FlowHooks { engine: eng.id(), activate, complete, flush };
+        net.borrow_mut().hooks = Some(h);
+        h
     }
 
     fn activate(net: Rc<RefCell<FlowNet>>, eng: &mut Engine, id: FlowId) {
@@ -1537,8 +1583,8 @@ impl FabricSim {
         if solved {
             Self::drive(&net, eng);
         } else if let Some(gen) = flush_gen {
-            let netc = net.clone();
-            eng.defer(move |e| Self::flush_admissions(netc, e, gen));
+            let h = Self::engine_hooks(&net, eng);
+            eng.defer_hook(h.flush, gen);
         }
     }
 
@@ -1577,13 +1623,11 @@ impl FabricSim {
             (n.heap.peek().map(|(t, _)| t).filter(|t| t.is_finite()), n.epoch)
         };
         if let Some(t) = next {
-            let netc = net.clone();
-            eng.schedule_at(t, move |e| {
-                let live = netc.borrow().epoch == epoch;
-                if live {
-                    Self::complete_due(netc, e);
-                }
-            });
+            // completion timers are the dominant event shape at scale: the
+            // hook lane carries the epoch as the payload (the fire-time
+            // liveness check lives in the registered handler)
+            let h = Self::engine_hooks(net, eng);
+            eng.schedule_hook_at(t, h.complete, epoch);
         }
     }
 

@@ -48,6 +48,7 @@ pub mod fabric;
 pub mod mem;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod sim;
 pub mod testkit;

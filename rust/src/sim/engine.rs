@@ -1,13 +1,31 @@
 //! Binary-heap discrete-event engine.
 //!
-//! The engine owns a priority queue of `(time, seq, callback)` events.
-//! Callbacks are boxed `FnOnce(&mut Engine)` closures, so handlers can
-//! schedule follow-on events. Determinism: ties on time are broken by
-//! insertion sequence number, so two runs with the same seed produce
-//! identical traces.
+//! The engine owns a priority queue of `(time, seq, action)` events.
+//! Determinism: ties on time are broken by insertion sequence number, so
+//! two runs with the same seed produce identical traces.
+//!
+//! Events come in two shapes sharing one queue and one sequence counter:
+//!
+//! * **Boxed closures** — `FnOnce(&mut Engine)` scheduled via
+//!   [`Engine::schedule_at`] / [`Engine::schedule_in`] / [`Engine::defer`].
+//!   General-purpose, but each costs a fresh heap allocation.
+//! * **Hook events** — the allocation-light lane for high-volume event
+//!   shapes (flow completion timers, open-loop arrival ticks). A handler
+//!   is registered **once** via [`Engine::register_hook`] (one `Rc`
+//!   allocation, recycled for every firing) and then scheduled any number
+//!   of times via [`Engine::schedule_hook_at`] /
+//!   [`Engine::schedule_hook_in`] / [`Engine::defer_hook`], each carrying
+//!   only a plain `u64` payload — no per-event `Box`.
+//!
+//! Both lanes draw from the same `next_seq` counter and compare with the
+//! same `(time, seq)` order, so interleavings — and therefore golden
+//! traces — are byte-identical to an all-boxed schedule.
 
+use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 
 /// Simulated time in nanoseconds.
 pub type SimTime = f64;
@@ -15,12 +33,23 @@ pub type SimTime = f64;
 /// Identifier assigned to each scheduled event (insertion order).
 pub type EventId = u64;
 
+/// Identifier of a handler registered with [`Engine::register_hook`].
+pub type HookId = usize;
+
 type Callback = Box<dyn FnOnce(&mut Engine)>;
+type HookFn = Rc<RefCell<dyn FnMut(&mut Engine, u64)>>;
+
+/// What a popped event does: run a one-shot boxed closure, or fire a
+/// registered hook with its payload (no allocation on the schedule path).
+enum Action {
+    Boxed(Callback),
+    Hook { hook: HookId, payload: u64 },
+}
 
 struct Event {
     time: SimTime,
     seq: EventId,
-    cb: Option<Callback>,
+    act: Option<Action>,
 }
 
 impl PartialEq for Event {
@@ -45,6 +74,12 @@ impl Ord for Event {
     }
 }
 
+/// Process-unique engine identities, so long-lived components (e.g. a
+/// [`crate::fabric::flow::FabricSim`] driven by several engines over its
+/// lifetime) can tell whether their registered hooks belong to *this*
+/// engine.
+static ENGINE_IDS: AtomicU64 = AtomicU64::new(1);
+
 /// Discrete-event simulation engine.
 ///
 /// ```no_run
@@ -66,6 +101,9 @@ pub struct Engine {
     processed: u64,
     /// Optional hard stop; events beyond this time are not executed.
     horizon: Option<SimTime>,
+    /// Registered hook handlers (slab: a `HookId` is an index here).
+    hooks: Vec<HookFn>,
+    id: u64,
 }
 
 impl Default for Engine {
@@ -77,7 +115,20 @@ impl Default for Engine {
 impl Engine {
     /// New engine with clock at t=0.
     pub fn new() -> Self {
-        Engine { now: 0.0, queue: BinaryHeap::new(), next_seq: 0, processed: 0, horizon: None }
+        Engine {
+            now: 0.0,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            processed: 0,
+            horizon: None,
+            hooks: Vec::new(),
+            id: ENGINE_IDS.fetch_add(1, AtomicOrdering::Relaxed),
+        }
+    }
+
+    /// Process-unique identity of this engine instance.
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Current simulated time (ns).
@@ -100,13 +151,17 @@ impl Engine {
         self.horizon = Some(t);
     }
 
-    /// Schedule `cb` at absolute time `t` (clamped to now if in the past).
-    pub fn schedule_at<F: FnOnce(&mut Engine) + 'static>(&mut self, t: SimTime, cb: F) -> EventId {
+    fn push(&mut self, t: SimTime, act: Action) -> EventId {
         let t = if t < self.now { self.now } else { t };
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.queue.push(Event { time: t, seq, cb: Some(Box::new(cb)) });
+        self.queue.push(Event { time: t, seq, act: Some(act) });
         seq
+    }
+
+    /// Schedule `cb` at absolute time `t` (clamped to now if in the past).
+    pub fn schedule_at<F: FnOnce(&mut Engine) + 'static>(&mut self, t: SimTime, cb: F) -> EventId {
+        self.push(t, Action::Boxed(Box::new(cb)))
     }
 
     /// Schedule `cb` after a relative delay `dt >= 0`.
@@ -127,6 +182,35 @@ impl Engine {
         self.schedule_at(now, cb)
     }
 
+    /// Register a reusable hook handler; the returned [`HookId`] can be
+    /// scheduled any number of times with a `u64` payload and no per-event
+    /// allocation. Handlers live as long as the engine.
+    pub fn register_hook<F: FnMut(&mut Engine, u64) + 'static>(&mut self, f: F) -> HookId {
+        self.hooks.push(Rc::new(RefCell::new(f)));
+        self.hooks.len() - 1
+    }
+
+    /// Schedule hook `hook` to fire with `payload` at absolute time `t`
+    /// (clamped to now if in the past). Allocation-free event push.
+    pub fn schedule_hook_at(&mut self, t: SimTime, hook: HookId, payload: u64) -> EventId {
+        debug_assert!(hook < self.hooks.len(), "unregistered hook {hook}");
+        self.push(t, Action::Hook { hook, payload })
+    }
+
+    /// Schedule hook `hook` after a relative delay `dt >= 0`.
+    pub fn schedule_hook_in(&mut self, dt: SimTime, hook: HookId, payload: u64) -> EventId {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        let now = self.now;
+        self.schedule_hook_at(now + dt.max(0.0), hook, payload)
+    }
+
+    /// Hook twin of [`Engine::defer`]: fire `hook` at the current instant,
+    /// after every event already queued at this time.
+    pub fn defer_hook(&mut self, hook: HookId, payload: u64) -> EventId {
+        let now = self.now;
+        self.schedule_hook_at(now, hook, payload)
+    }
+
     /// Execute a single event. Returns false when the queue is empty or the
     /// horizon has been reached.
     pub fn step(&mut self) -> bool {
@@ -141,8 +225,15 @@ impl Engine {
                 debug_assert!(ev.time >= self.now, "time went backwards");
                 self.now = ev.time;
                 self.processed += 1;
-                if let Some(cb) = ev.cb.take() {
-                    cb(self);
+                match ev.act.take() {
+                    Some(Action::Boxed(cb)) => cb(self),
+                    Some(Action::Hook { hook, payload }) => {
+                        // clone the Rc out of the slab so the handler can
+                        // take `&mut Engine` (and even register new hooks)
+                        let h = self.hooks[hook].clone();
+                        (h.borrow_mut())(self, payload);
+                    }
+                    None => {}
                 }
                 true
             }
@@ -284,5 +375,89 @@ mod tests {
         assert_eq!(e.pending(), 1);
         e.run();
         assert_eq!(e.now(), 50.0);
+    }
+
+    #[test]
+    fn engine_identities_are_unique() {
+        let a = Engine::new();
+        let b = Engine::new();
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn hook_events_interleave_with_boxed_in_insertion_order() {
+        // same-time hook and boxed events must fire in exact insertion
+        // order — the hook lane draws from the same seq counter
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        let o = order.clone();
+        let hook = e.register_hook(move |eng, p| {
+            assert_eq!(eng.now(), 5.0);
+            o.borrow_mut().push(p as u32);
+        });
+        for i in 0..8u32 {
+            if i % 2 == 0 {
+                e.schedule_hook_at(5.0, hook, i as u64);
+            } else {
+                let o = order.clone();
+                e.schedule_at(5.0, move |_| o.borrow_mut().push(i));
+            }
+        }
+        e.run();
+        assert_eq!(*order.borrow(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hook_can_reschedule_itself() {
+        // self-rescheduling hook = the open-loop arrival tick shape
+        let count = Rc::new(RefCell::new(0u64));
+        let c = count.clone();
+        let mut e = Engine::new();
+        let hook = e.register_hook(move |eng, remaining| {
+            *c.borrow_mut() += 1;
+            if remaining > 1 {
+                eng.schedule_hook_in(1.0, 0, remaining - 1);
+            }
+        });
+        assert_eq!(hook, 0);
+        e.schedule_hook_at(0.0, hook, 100);
+        e.run();
+        assert_eq!(*count.borrow(), 100);
+        assert_eq!(e.now(), 99.0);
+        assert_eq!(e.processed(), 100);
+    }
+
+    #[test]
+    fn defer_hook_runs_after_queued_same_time_events() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        let o = order.clone();
+        let hook = e.register_hook(move |_, p| o.borrow_mut().push(p as u32));
+        let (o2, h2) = (order.clone(), hook);
+        e.schedule_at(1.0, move |eng| {
+            o2.borrow_mut().push(0);
+            eng.defer_hook(h2, 10);
+        });
+        let o3 = order.clone();
+        e.schedule_at(1.0, move |_| o3.borrow_mut().push(1));
+        e.schedule_hook_at(1.0, hook, 2);
+        e.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 10]);
+        assert_eq!(e.now(), 1.0);
+    }
+
+    #[test]
+    fn hooks_respect_horizon() {
+        let fired = Rc::new(RefCell::new(0u32));
+        let f = fired.clone();
+        let mut e = Engine::new();
+        let hook = e.register_hook(move |_, _| *f.borrow_mut() += 1);
+        e.set_horizon(15.0);
+        for t in [5.0, 10.0, 20.0] {
+            e.schedule_hook_at(t, hook, 0);
+        }
+        e.run();
+        assert_eq!(*fired.borrow(), 2);
+        assert_eq!(e.now(), 15.0);
     }
 }

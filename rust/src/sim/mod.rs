@@ -10,7 +10,7 @@ pub mod rng;
 pub mod stats;
 pub mod trace;
 
-pub use engine::{Engine, EventId, SimTime};
+pub use engine::{Engine, EventId, HookId, SimTime};
 pub use rng::Rng;
 pub use stats::{Percentiles, Summary, TimeWeighted};
 pub use trace::{Trace, TraceEvent};

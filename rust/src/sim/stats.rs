@@ -1,29 +1,120 @@
 //! Streaming statistics: summaries and percentiles for experiment reports.
+//!
+//! [`Summary`] is exact while small and bounded while huge: below a
+//! configurable sample threshold it retains every sample and computes
+//! percentiles on the sorted vector (byte-identical to the historical
+//! behavior, so small-n tests and golden traces are unaffected); past the
+//! threshold it folds the retained samples into a deterministic
+//! Greenwald–Khanna quantile sketch with a uniform rank-error guarantee of
+//! [`Summary::SKETCH_EPSILON`] (0.1% of n — comfortably inside the 0.5%
+//! band the scenario suite pins) and drops the vector, so a million-request
+//! open-loop run keeps O((1/ε)·log εn) state instead of one `f64` per
+//! request. `count`/`sum`/`min`/`max`/`mean` stay exact in both regimes;
+//! `std` switches to Welford's streaming recurrence in sketch mode.
+//! [`Summary::exact`] opts out of sketching entirely (conservation tests).
+
+/// Default retained-sample count above which a [`Summary`] switches from
+/// the exact sorted path to the bounded-memory sketch.
+const DEFAULT_SKETCH_THRESHOLD: usize = 8192;
 
 /// Accumulating summary over f64 samples.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Summary {
+    /// Retained samples (exact regime only; emptied on sketch handoff).
     samples: Vec<f64>,
+    sketch: Option<GkSketch>,
+    threshold: usize,
+    count: u64,
     sum: f64,
     min: f64,
     max: f64,
+    /// Welford running mean / M2, for `std()` once samples are dropped.
+    w_mean: f64,
+    w_m2: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        // mirrors the historically derived Default (zeroed min/max rather
+        // than new()'s infinities) so zero-initialized holders keep their
+        // exact observable behavior
+        Summary {
+            samples: Vec::new(),
+            sketch: None,
+            threshold: DEFAULT_SKETCH_THRESHOLD,
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            w_mean: 0.0,
+            w_m2: 0.0,
+        }
+    }
 }
 
 impl Summary {
-    /// Empty summary.
+    /// Uniform rank-error bound of the sketch regime: a percentile query
+    /// returns a sample whose true rank is within `ε·n` of the target.
+    pub const SKETCH_EPSILON: f64 = 0.001;
+
+    /// Empty summary (sketches past the default threshold).
     pub fn new() -> Self {
-        Summary { samples: Vec::new(), sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Summary { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    /// Empty summary that retains every sample forever — the escape hatch
+    /// for byte-conservation tests and anything else that must stay exact
+    /// at any n.
+    pub fn exact() -> Self {
+        Summary { threshold: usize::MAX, ..Self::new() }
+    }
+
+    /// Empty summary switching to the sketch once more than `threshold`
+    /// samples have been retained.
+    pub fn with_sketch_threshold(threshold: usize) -> Self {
+        Summary { threshold, ..Self::new() }
+    }
+
+    /// True once this summary has handed its samples to the sketch.
+    pub fn is_sketching(&self) -> bool {
+        self.sketch.is_some()
+    }
+
+    /// Elements of state held for percentile queries (retained samples, or
+    /// sketch tuples + insert buffer). Bounded in sketch mode regardless
+    /// of `count` — the observable the scale tests pin.
+    pub fn retained(&self) -> usize {
+        match &self.sketch {
+            Some(sk) => sk.tuples.len() + sk.buf.len(),
+            None => self.samples.len(),
+        }
     }
 
     /// Record one sample.
     pub fn add(&mut self, x: f64) {
-        self.samples.push(x);
+        self.count += 1;
         self.sum += x;
         if x < self.min {
             self.min = x;
         }
         if x > self.max {
             self.max = x;
+        }
+        let d = x - self.w_mean;
+        self.w_mean += d / self.count as f64;
+        self.w_m2 += d * (x - self.w_mean);
+        if let Some(sk) = self.sketch.as_mut() {
+            sk.insert(x);
+        } else {
+            self.samples.push(x);
+            if self.samples.len() > self.threshold {
+                let mut sk = GkSketch::new(Self::SKETCH_EPSILON);
+                for &v in &self.samples {
+                    sk.insert(v);
+                }
+                self.samples = Vec::new();
+                self.sketch = Some(sk);
+            }
         }
     }
 
@@ -36,7 +127,7 @@ impl Summary {
 
     /// Number of samples.
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
     /// Sum of samples.
@@ -46,22 +137,27 @@ impl Summary {
 
     /// Arithmetic mean (0 if empty).
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             0.0
         } else {
-            self.sum / self.samples.len() as f64
+            self.sum / self.count as f64
         }
     }
 
-    /// Sample standard deviation (0 if < 2 samples).
+    /// Sample standard deviation (0 if < 2 samples). Two-pass over the
+    /// retained samples in the exact regime (bit-compatible with the
+    /// historical formula); Welford in the sketch regime.
     pub fn std(&self) -> f64 {
-        let n = self.samples.len();
+        let n = self.count;
         if n < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
-        var.sqrt()
+        if self.sketch.is_none() {
+            let m = self.mean();
+            let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+            return var.sqrt();
+        }
+        (self.w_m2 / (n - 1) as f64).sqrt()
     }
 
     /// Minimum (inf if empty).
@@ -74,20 +170,37 @@ impl Summary {
         self.max
     }
 
-    /// Percentile in [0, 100] by linear interpolation on the sorted sample.
+    /// Percentile in [0, 100]: linear interpolation on the sorted sample
+    /// in the exact regime, a sketch query (≤ [`Self::SKETCH_EPSILON`]
+    /// rank error) past the threshold. For several cuts prefer one
+    /// [`Self::percentiles`] snapshot — it sorts/flushes once.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return 0.0;
+        }
+        if let Some(sk) = &self.sketch {
+            return self.sketch_cut(&sk.flushed(), p);
         }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         percentile_of_sorted(&sorted, p)
     }
 
-    /// Common latency percentiles.
+    /// Common latency percentiles, computed from one sorted (or flushed)
+    /// snapshot — never once per cut.
     pub fn percentiles(&self) -> Percentiles {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return Percentiles::default();
+        }
+        if let Some(sk) = &self.sketch {
+            let snap = sk.flushed();
+            return Percentiles {
+                p50: self.sketch_cut(&snap, 50.0),
+                p90: self.sketch_cut(&snap, 90.0),
+                p95: self.sketch_cut(&snap, 95.0),
+                p99: self.sketch_cut(&snap, 99.0),
+                p999: self.sketch_cut(&snap, 99.9),
+            };
         }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -96,7 +209,20 @@ impl Summary {
             p90: percentile_of_sorted(&sorted, 90.0),
             p95: percentile_of_sorted(&sorted, 95.0),
             p99: percentile_of_sorted(&sorted, 99.0),
+            p999: percentile_of_sorted(&sorted, 99.9),
         }
+    }
+
+    /// One sketch cut, with exact endpoints (the sketch keeps the global
+    /// min/max tuples, but p=0/100 deserve the tracked exact extremes).
+    fn sketch_cut(&self, snap: &GkSketch, p: f64) -> f64 {
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        snap.query(p).clamp(self.min, self.max)
     }
 }
 
@@ -112,13 +238,153 @@ fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi.min(n - 1)] * frac
 }
 
-/// p50/p90/p95/p99 bundle.
+/// p50/p90/p95/p99/p999 bundle.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Percentiles {
     pub p50: f64,
     pub p90: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
+}
+
+/// Deterministic Greenwald–Khanna ε-approximate quantile sketch.
+///
+/// Maintains sorted tuples `(v, g, Δ)` where `g` is the rank gap to the
+/// previous tuple and `Δ` bounds the rank uncertainty, with the invariant
+/// `g + Δ ≤ ⌊2εn⌋` — which guarantees any quantile query lands within
+/// `εn` ranks of the target. Inserts are buffered and merged in sorted
+/// batches so the amortized per-sample cost is O(log B) instead of one
+/// O(s) memmove each. Fully deterministic (no randomness), so summaries
+/// feeding golden traces stay byte-identical across runs.
+#[derive(Clone, Debug)]
+struct GkSketch {
+    eps: f64,
+    /// Samples folded into `tuples` so far.
+    n: u64,
+    tuples: Vec<GkTuple>,
+    buf: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct GkTuple {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// Insert-buffer capacity: amortizes the O(s + B) batch merge down to a
+/// few operations per sample.
+const GK_BUF: usize = 512;
+
+impl GkSketch {
+    fn new(eps: f64) -> Self {
+        GkSketch { eps, n: 0, tuples: Vec::new(), buf: Vec::with_capacity(GK_BUF) }
+    }
+
+    fn insert(&mut self, x: f64) {
+        self.buf.push(x);
+        if self.buf.len() >= GK_BUF {
+            self.flush();
+        }
+    }
+
+    /// Self with any buffered inserts folded in (queries need a fully
+    /// merged tuple list; clone-to-flush keeps the query path `&self`).
+    fn flushed(&self) -> GkSketch {
+        if self.buf.is_empty() {
+            return self.clone();
+        }
+        let mut c = self.clone();
+        c.flush();
+        c
+    }
+
+    /// Merge the sorted buffer into the tuple list in one pass, then
+    /// compress under the invariant.
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        self.buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n_after = self.n + self.buf.len() as u64;
+        let cap = (2.0 * self.eps * n_after as f64).floor() as u64;
+        let new_delta = cap.saturating_sub(1);
+        let mut merged: Vec<GkTuple> = Vec::with_capacity(self.tuples.len() + self.buf.len());
+        let (mut ti, mut bi) = (0usize, 0usize);
+        while ti < self.tuples.len() || bi < self.buf.len() {
+            let take_tuple = match (self.tuples.get(ti), self.buf.get(bi)) {
+                (Some(t), Some(&b)) => t.v <= b,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!(),
+            };
+            if take_tuple {
+                merged.push(self.tuples[ti]);
+                ti += 1;
+            } else {
+                merged.push(GkTuple { v: self.buf[bi], g: 1, delta: new_delta });
+                bi += 1;
+            }
+        }
+        // the global extremes have exactly-known ranks
+        if let Some(first) = merged.first_mut() {
+            first.delta = 0;
+        }
+        if let Some(last) = merged.last_mut() {
+            last.delta = 0;
+        }
+        self.n = n_after;
+        self.tuples = merged;
+        self.buf.clear();
+        self.compress(cap);
+    }
+
+    /// Fold tuples into their successor while `g_i + g_{i+1} + Δ_{i+1}`
+    /// stays under the invariant cap; the min tuple always survives.
+    fn compress(&mut self, cap: u64) {
+        let mut out: Vec<GkTuple> = Vec::with_capacity(self.tuples.len());
+        for t in self.tuples.drain(..) {
+            if let Some(prev) = out.last() {
+                if out.len() > 1 && prev.g + t.g + t.delta <= cap {
+                    let prev = out.pop().expect("non-empty");
+                    let mut t = t;
+                    t.g += prev.g;
+                    out.push(t);
+                    continue;
+                }
+            }
+            out.push(t);
+        }
+        self.tuples = out;
+    }
+
+    /// Value whose rank is within `εn` of the `p`-percentile rank.
+    /// Requires a flushed sketch (`buf` empty).
+    fn query(&self, p: f64) -> f64 {
+        debug_assert!(self.buf.is_empty(), "query on unflushed sketch");
+        if self.tuples.is_empty() {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        // 1-based target rank, matching the exact path's interpolation
+        // anchor (p/100)·(n−1)
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1.0) + 1.0;
+        let e = self.eps * n;
+        let mut rmin = 0u64;
+        for (i, t) in self.tuples.iter().enumerate() {
+            rmin += t.g;
+            match self.tuples.get(i + 1) {
+                Some(nx) => {
+                    if (rmin + nx.g + nx.delta) as f64 > rank + e {
+                        return t.v;
+                    }
+                }
+                None => return t.v,
+            }
+        }
+        self.tuples[self.tuples.len() - 1].v
+    }
 }
 
 /// Piecewise-constant signal tracked over simulated time: call
@@ -180,6 +446,7 @@ pub fn geomean(xs: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::Rng;
 
     #[test]
     fn mean_min_max() {
@@ -212,7 +479,7 @@ mod tests {
         let mut s = Summary::new();
         s.extend((0..1000).map(|i| (i % 37) as f64));
         let p = s.percentiles();
-        assert!(p.p50 <= p.p90 && p.p90 <= p.p95 && p.p95 <= p.p99);
+        assert!(p.p50 <= p.p90 && p.p90 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.p999);
     }
 
     #[test]
@@ -220,6 +487,88 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn exact_summary_never_sketches() {
+        let mut s = Summary::exact();
+        s.extend((0..50_000).map(|i| i as f64));
+        assert!(!s.is_sketching());
+        assert_eq!(s.retained(), 50_000);
+        assert!((s.percentile(50.0) - 24_999.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sketch_engages_past_threshold_with_bounded_state() {
+        let mut s = Summary::with_sketch_threshold(1000);
+        let mut r = Rng::new(7);
+        for _ in 0..200_000 {
+            s.add(r.f64() * 1.0e6);
+        }
+        assert!(s.is_sketching());
+        assert_eq!(s.count(), 200_000);
+        // bounded: orders of magnitude below the sample count
+        assert!(s.retained() < 20_000, "retained {}", s.retained());
+        let p = s.percentiles();
+        assert!(p.p50 <= p.p90 && p.p90 <= p.p99 && p.p99 <= p.p999);
+        assert_eq!(s.percentile(0.0), s.min());
+        assert_eq!(s.percentile(100.0), s.max());
+    }
+
+    #[test]
+    fn sketch_percentiles_within_rank_error_band() {
+        // rank error of each sketch cut vs the exact sorted data must stay
+        // within the pinned band (0.5% of n; the sketch promises 0.1%)
+        let mut sketch = Summary::with_sketch_threshold(512);
+        let mut exact: Vec<f64> = Vec::new();
+        let mut r = Rng::new(42);
+        let n = 60_000usize;
+        for _ in 0..n {
+            // heavy-tailed-ish mixture, the shape latency data takes
+            let x = if r.chance(0.05) { r.f64() * 5.0e7 } else { r.exp(1.0e6) };
+            sketch.add(x);
+            exact.push(x);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [10.0, 50.0, 90.0, 99.0, 99.9] {
+            let v = sketch.percentile(p);
+            let rank = exact.partition_point(|&x| x < v) as f64;
+            let target = (p / 100.0) * (n - 1) as f64 + 1.0;
+            let err = (rank - target).abs() / n as f64;
+            assert!(err <= 0.005, "p{p}: rank {rank} vs target {target} (err {err})");
+        }
+    }
+
+    #[test]
+    fn sketch_mean_sum_std_stay_sane() {
+        let mut s = Summary::with_sketch_threshold(100);
+        let mut exact_v: Vec<f64> = Vec::new();
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.normal(500.0, 25.0);
+            s.add(x);
+            exact_v.push(x);
+        }
+        let n = exact_v.len() as f64;
+        let mean = exact_v.iter().sum::<f64>() / n;
+        let var = exact_v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+        assert!((s.mean() - mean).abs() < 1e-9);
+        assert!((s.std() - var.sqrt()).abs() / var.sqrt() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_is_deterministic() {
+        let feed = |seed| {
+            let mut s = Summary::with_sketch_threshold(256);
+            let mut r = Rng::new(seed);
+            for _ in 0..30_000 {
+                s.add(r.exp(2.0e6));
+            }
+            let p = s.percentiles();
+            (p.p50.to_bits(), p.p99.to_bits(), p.p999.to_bits())
+        };
+        assert_eq!(feed(9), feed(9));
+        assert_ne!(feed(9), feed(10));
     }
 
     #[test]

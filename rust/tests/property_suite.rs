@@ -822,3 +822,87 @@ fn property_dlrm_flow_gather_byte_conservation() {
     )
     .assert_ok();
 }
+
+#[test]
+fn property_scenario_open_loop_conservation() {
+    // the open-loop scenario generator conserves requests at any stopping
+    // point: requests in == completions + in-flight, the latency summary
+    // holds exactly one sample per completion, and with no horizon the
+    // stream drains completely — across random loads, tenancies, rate
+    // curves and seeds
+    use commtax::scenario::{run_scenario, RateCurve, ScenarioConfig, ScenarioTopology};
+    use commtax::workload::Platform;
+    check(
+        8,
+        |rng| {
+            let requests = 50 + rng.below(150);
+            let rps = 500.0 + rng.f64() * 8_000.0;
+            let tenants = 2 + rng.index(5);
+            let horizon = if rng.chance(0.5) { Some(5.0e6 + rng.f64() * 60.0e6) } else { None };
+            let curve = match rng.index(3) {
+                0 => RateCurve::Constant,
+                1 => RateCurve::Diurnal { trough: 0.2 + rng.f64() * 0.6, period: 20.0e6 },
+                _ => RateCurve::Bursty { mult: 2.0 + rng.f64() * 6.0, duty: 0.2, period: 20.0e6 },
+            };
+            (requests, rps, tenants, horizon, curve, rng.next_u64())
+        },
+        |&(requests, rps, tenants, horizon, curve, seed)| {
+            let cfg = ScenarioConfig {
+                requests,
+                rps,
+                tenants,
+                horizon,
+                curve,
+                seed,
+                users: 50_000,
+                topology: ScenarioTopology { clusters: 2, accels_per_cluster: 4, ..Default::default() },
+                ..Default::default()
+            };
+            let (r, _, _) = run_scenario(&cfg, &Platform::composable_cxl());
+            let conserved = r.generated == r.completed + r.in_flight && r.completed as usize == r.latency.count();
+            let drained = horizon.is_some() || (r.generated == requests && r.in_flight == 0);
+            conserved && drained && r.generated <= requests
+        },
+    )
+    .assert_ok();
+}
+
+#[test]
+fn property_sketch_percentiles_track_exact_rank() {
+    // sketch-mode Summary stays within the pinned rank-error band of the
+    // exact order statistics on arbitrary heavy-tailed workloads: every
+    // reported cut is a real sample whose rank interval overlaps the
+    // target rank within ceil(eps * n) + 1
+    use commtax::sim::{Rng, Summary};
+    check(
+        10,
+        |rng| (20_000 + rng.index(30_000), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut sk = Summary::with_sketch_threshold(1024);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                // mostly short exponentials with occasional large outliers
+                let v = if rng.chance(0.05) { 1.0e6 + rng.exp(5.0e6) } else { rng.exp(1.0e4) };
+                sk.add(v);
+                vals.push(v);
+            }
+            assert!(sk.is_sketching(), "past the threshold the summary must sketch");
+            assert!(sk.retained() < n / 2, "sketch must retain far fewer than n samples");
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = sk.percentiles();
+            let band = (Summary::SKETCH_EPSILON * n as f64).ceil() + 1.0;
+            for (p, got) in [(50.0, pct.p50), (90.0, pct.p90), (95.0, pct.p95), (99.0, pct.p99), (99.9, pct.p999)] {
+                let target = (p / 100.0) * (n - 1) as f64;
+                // rank interval of the returned value among the exact data
+                let lo = vals.partition_point(|&v| v < got) as f64;
+                let hi = vals.partition_point(|&v| v <= got) as f64 - 1.0;
+                if target + band < lo || hi + band < target {
+                    return false;
+                }
+            }
+            true
+        },
+    )
+    .assert_ok();
+}

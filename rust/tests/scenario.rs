@@ -1,0 +1,107 @@
+//! Open-loop scenario integration tests: golden determinism of the
+//! arrival stream and of the full run (trace, ledger, statistics) across
+//! repeats and seeds, plus the bounded-memory contract of sketch-mode
+//! latency summaries at scale.
+
+use commtax::scenario::{run_scenario, RateCurve, ScenarioConfig, ScenarioTopology};
+use commtax::workload::Platform;
+
+fn base() -> ScenarioConfig {
+    ScenarioConfig {
+        users: 100_000,
+        tenants: 4,
+        requests: 500,
+        rps: 3_000.0,
+        topology: ScenarioTopology { clusters: 3, accels_per_cluster: 4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The arrival-stream prefix of a scenario trace (everything before the
+/// scheduler-event section).
+fn arrival_stream(trace: &str) -> &str {
+    trace.split("---- events ----").next().expect("trace has an arrival section")
+}
+
+#[test]
+fn golden_same_config_is_byte_identical() {
+    let cfg = base();
+    let p = Platform::composable_cxl();
+    let (r1, l1, t1) = run_scenario(&cfg, &p);
+    let (r2, l2, t2) = run_scenario(&cfg, &p);
+    // the whole trace — arrival stream, scheduler events, flow trace —
+    // must be byte-identical run to run
+    assert_eq!(t1, t2, "same config must replay identically");
+    assert_eq!(r1.generated, r2.generated);
+    assert_eq!(r1.completed, r2.completed);
+    assert_eq!(r1.queue_peak, r2.queue_peak);
+    assert_eq!(r1.makespan.to_bits(), r2.makespan.to_bits());
+    let (p1, p2) = (r1.latency.percentiles(), r2.latency.percentiles());
+    for (a, b) in [(p1.p50, p2.p50), (p1.p99, p2.p99), (p1.p999, p2.p999)] {
+        assert_eq!(a.to_bits(), b.to_bits(), "percentiles must be bit-identical");
+    }
+    assert_eq!(l1.flows, l2.flows);
+    assert_eq!(l1.total_payload, l2.total_payload);
+    assert_eq!(l1.contention.mean().to_bits(), l2.contention.mean().to_bits());
+}
+
+#[test]
+fn golden_holds_under_shaped_arrivals() {
+    let cfg = ScenarioConfig {
+        curve: RateCurve::Diurnal { trough: 0.3, period: 40.0e6 },
+        ..base()
+    };
+    let p = Platform::composable_cxl();
+    let (_, _, t1) = run_scenario(&cfg, &p);
+    let (_, _, t2) = run_scenario(&cfg, &p);
+    assert_eq!(t1, t2, "thinned (shaped) arrival streams must replay identically");
+    let bursty = ScenarioConfig { curve: RateCurve::Bursty { mult: 6.0, duty: 0.15, period: 40.0e6 }, ..base() };
+    let (_, _, b1) = run_scenario(&bursty, &p);
+    let (_, _, b2) = run_scenario(&bursty, &p);
+    assert_eq!(b1, b2);
+    assert_ne!(arrival_stream(&t1), arrival_stream(&b1), "different curves shape different streams");
+}
+
+#[test]
+fn seeds_move_the_arrival_stream() {
+    let p = Platform::composable_cxl();
+    let (_, _, t1) = run_scenario(&base(), &p);
+    let (_, _, t2) = run_scenario(&ScenarioConfig { seed: 1337, ..base() }, &p);
+    let (a1, a2) = (arrival_stream(&t1), arrival_stream(&t2));
+    assert!(!a1.is_empty() && a1.contains("arrive tenant="));
+    assert_ne!(a1, a2, "a different seed must produce a different arrival stream");
+    // but each seed remains individually reproducible
+    let (_, _, t2b) = run_scenario(&ScenarioConfig { seed: 1337, ..base() }, &p);
+    assert_eq!(t2, t2b);
+}
+
+#[test]
+fn sketch_mode_bounds_retention_at_scale() {
+    // past the sketch threshold the latency summary holds a bounded
+    // digest, not one sample per request — and its percentiles still
+    // order correctly
+    let cfg = ScenarioConfig { requests: 20_000, rps: 30_000.0, ..base() };
+    let (r, _, _) = run_scenario(&cfg, &Platform::composable_cxl());
+    assert_eq!(r.completed, 20_000);
+    assert!(r.latency.is_sketching(), "2e4 samples must engage the sketch");
+    assert!(
+        r.latency.retained() < 10_000,
+        "sketch retained {} samples for {} requests",
+        r.latency.retained(),
+        r.completed
+    );
+    let pct = r.latency.percentiles();
+    assert!(pct.p50 <= pct.p99 && pct.p99 <= pct.p999);
+    assert!(pct.p999 > 0.0);
+    // exact mode on the identical run retains everything and agrees on
+    // the count
+    let exact_cfg = ScenarioConfig { exact_stats: true, ..cfg };
+    let (re, _, _) = run_scenario(&exact_cfg, &Platform::composable_cxl());
+    assert_eq!(re.completed, r.completed);
+    assert_eq!(re.latency.retained(), 20_000);
+    // sketch percentiles track the exact ones (coarse end-to-end band;
+    // the tight rank-error property lives in the property suite)
+    let pe = re.latency.percentiles();
+    assert!((pct.p50 - pe.p50).abs() <= 0.05 * pe.p50.max(1.0), "{} vs {}", pct.p50, pe.p50);
+    assert!((pct.p99 - pe.p99).abs() <= 0.05 * pe.p99.max(1.0), "{} vs {}", pct.p99, pe.p99);
+}
