@@ -1,0 +1,337 @@
+//! Minimal Rust lexer for detlint.
+//!
+//! Produces an identifier/punct token stream with line numbers plus the
+//! line-comment list (the waiver-grammar surface). It handles every Rust
+//! literal form that could otherwise fake a token: line and nested block
+//! comments, string / raw-string / byte-string literals, char literals vs
+//! lifetimes, and numeric literals (with float detection for the
+//! float-order rule). It is not a parser by design: detlint's rules are
+//! token-pattern checks (see `rules`), which keeps the tool
+//! dependency-free — the container image this repo builds in has no
+//! network registry, so a `syn`-based AST pass is deliberately out of
+//! reach, and the fixture suite pins the patterns that matter instead.
+
+/// One lexed token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (keywords are not distinguished).
+    Ident(String),
+    /// Single punctuation character; multi-char operators arrive as
+    /// adjacent tokens (`::` is two `:` tokens).
+    Punct(char),
+    /// Numeric literal; `float` is true for `1.0`, `1e9`, `2f64`, ….
+    Num { float: bool },
+    /// String / byte-string / raw-string literal (content discarded).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+/// Token with its 1-based source line (the line it starts on).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+/// One `//` line comment, trimmed, without the `//` (doc comments keep
+/// their extra `/` or `!` prefix so waiver parsing can exclude them).
+#[derive(Clone, Debug)]
+pub struct LineComment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+}
+
+/// Lex `src` into tokens and line comments. Never panics on malformed
+/// input: unterminated literals simply consume to end-of-file.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(LineComment { line, text: src[start..j].trim().to_string() });
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let start_line = line;
+            i = skip_string(b, i, &mut line);
+            toks.push(Tok { line: start_line, kind: TokKind::Str });
+        } else if c == b'\'' {
+            if i + 1 < n && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_') && (i + 2 >= n || b[i + 2] != b'\'') {
+                // lifetime: consume the ident chars
+                i += 2;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(Tok { line, kind: TokKind::Lifetime });
+            } else {
+                let start_line = line;
+                i = skip_char(b, i, &mut line);
+                toks.push(Tok { line: start_line, kind: TokKind::Char });
+            }
+        } else if c.is_ascii_digit() {
+            let (j, float) = lex_number(b, i);
+            toks.push(Tok { line, kind: TokKind::Num { float } });
+            i = j;
+        } else if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            let id = &src[start..i];
+            // raw / byte literal prefixes
+            if (id == "r" || id == "br") && i < n && (b[i] == b'"' || b[i] == b'#') {
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    let start_line = line;
+                    i = skip_raw_string(b, j, hashes, &mut line);
+                    toks.push(Tok { line: start_line, kind: TokKind::Str });
+                } else {
+                    // `r#ident` raw identifier: skip the hashes, the ident
+                    // lexes on the next iteration
+                    toks.push(Tok { line, kind: TokKind::Ident(id.to_string()) });
+                    i = j;
+                }
+            } else if id == "b" && i < n && b[i] == b'"' {
+                let start_line = line;
+                i = skip_string(b, i, &mut line);
+                toks.push(Tok { line: start_line, kind: TokKind::Str });
+            } else if id == "b" && i < n && b[i] == b'\'' {
+                let start_line = line;
+                i = skip_char(b, i, &mut line);
+                toks.push(Tok { line: start_line, kind: TokKind::Char });
+            } else {
+                toks.push(Tok { line, kind: TokKind::Ident(id.to_string()) });
+            }
+        } else {
+            toks.push(Tok { line, kind: TokKind::Punct(c as char) });
+            i += 1;
+        }
+    }
+    Lexed { toks, comments }
+}
+
+/// Skip a `"…"` literal (escapes honoured); `b[i]` must be the opening
+/// quote. Returns the index just past the closing quote.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    i += 1;
+    while i < n {
+        match b[i] {
+            b'\\' => {
+                // keep line numbers honest across `\`-continuations
+                if i + 1 < n && b[i + 1] == b'\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a `'…'` char literal; `b[i]` must be the opening quote.
+fn skip_char(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    i += 1;
+    while i < n {
+        match b[i] {
+            b'\\' => {
+                if i + 1 < n && b[i + 1] == b'\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'\'' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string whose opening quote is at `b[i]`, closed by `"`
+/// followed by `hashes` `#` characters.
+fn skip_raw_string(b: &[u8], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    i += 1;
+    while i < n {
+        if b[i] == b'\n' {
+            *line += 1;
+        } else if b[i] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && i + 1 + h < n && b[i + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Lex a numeric literal starting at `b[i]`; returns (end index, is_float).
+fn lex_number(b: &[u8], mut i: usize) -> (usize, bool) {
+    let n = b.len();
+    if b[i] == b'0' && i + 1 < n && (b[i + 1] == b'x' || b[i + 1] == b'b' || b[i + 1] == b'o') {
+        i += 2;
+        while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+            i += 1;
+        }
+        return (i, false);
+    }
+    let mut float = false;
+    while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+        i += 1;
+    }
+    if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+        float = true;
+        i += 1;
+        while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+            i += 1;
+        }
+    }
+    if i < n && (b[i] == b'e' || b[i] == b'E') {
+        let mut j = i + 1;
+        if j < n && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        if j < n && b[j].is_ascii_digit() {
+            float = true;
+            i = j;
+            while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                i += 1;
+            }
+        }
+    }
+    let s = i;
+    while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+        i += 1;
+    }
+    if &b[s..i] == b"f32" || &b[s..i] == b"f64" {
+        float = true;
+    }
+    (i, float)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_content() {
+        let src = "let a = \"HashMap\"; // HashMap in a comment\n/* HashMap\n nested /* HashMap */ */ let b = 1;";
+        assert!(!idents(src).iter().any(|s| s == "HashMap"));
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.comments[0].text, "HashMap in a comment");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_opaque() {
+        let src = "let a = r#\"HashMap \" still \"#; let b = b\"HashMap\"; let c = br\"x\";";
+        assert!(!idents(src).iter().any(|s| s == "HashMap"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = lx.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let lx = lex(r"let q = '\''; let n = '\n'; let u = '\u{1F600}';");
+        let chars = lx.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn float_detection() {
+        let floats: Vec<bool> = lex("1 1.5 1e9 2f64 0x1F 10u64 3.0_f32 1..4")
+            .toks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Num { float } => Some(float),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(floats, vec![false, true, true, true, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_literals() {
+        let src = "let a = \"x\ny\";\nlet b = 1;";
+        let lx = lex(src);
+        let b_line = lx.toks.iter().find(|t| matches!(&t.kind, TokKind::Ident(s) if s == "b")).map(|t| t.line);
+        assert_eq!(b_line, Some(3));
+    }
+}

@@ -1,0 +1,129 @@
+//! detlint — the repo-specific determinism lint for the `commtax`
+//! workspace.
+//!
+//! Run it from the workspace root (or repo root; the CLI autodetects):
+//!
+//! ```text
+//! cargo run -p detlint                      # lint, exit 1 on findings
+//! cargo run -p detlint -- --update-baseline # refresh the panic ratchet
+//! ```
+//!
+//! See [`rules`] for what is checked and why, and `lint/tests/` for the
+//! fixture suite that pins each rule's fire/suppress behaviour.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::{Baseline, Finding, PanicCounts};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The directories scanned, relative to the workspace root. `lint/tests`
+/// is deliberately absent: fixtures contain intentional violations.
+pub const SCAN_DIRS: [&str; 4] = ["src", "benches", "tests", "lint/src"];
+
+/// Name of the committed ratchet file, relative to the workspace root.
+pub const BASELINE_PATH: &str = "lint/panic_baseline.tsv";
+
+/// Result of scanning the whole workspace.
+pub struct TreeReport {
+    /// All findings (rule violations + waiver hygiene + ratchet busts),
+    /// sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Non-fatal notes (ratchet improvements, stale baseline entries).
+    pub notes: Vec<String>,
+    /// Measured per-file panic counts (for `--update-baseline`).
+    pub counts: Baseline,
+    pub files_scanned: usize,
+    pub waivers_used: usize,
+}
+
+/// Collect every `.rs` file under `root/<dir>` for each scan dir, as
+/// (workspace-relative path with forward slashes, absolute path), sorted
+/// by relative path so output order is itself deterministic.
+pub fn collect_files(root: &Path) -> std::io::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for dir in SCAN_DIRS {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            walk(&abs, &mut |p| {
+                if p.extension().is_some_and(|e| e == "rs") {
+                    let rel = p.strip_prefix(root).unwrap_or(p);
+                    let rel = rel.to_string_lossy().replace('\\', "/");
+                    out.push((rel, p.to_path_buf()));
+                }
+            })?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, f: &mut dyn FnMut(&Path)) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, f)?;
+        } else {
+            f(&p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole workspace rooted at `root`, comparing panic counts
+/// against `baseline` (pass an empty map to skip ratcheting, e.g. before
+/// the baseline exists).
+pub fn scan_tree(root: &Path, baseline: &Baseline) -> std::io::Result<TreeReport> {
+    let files = collect_files(root)?;
+    let mut findings = Vec::new();
+    let mut counts: Baseline = BTreeMap::new();
+    let mut waivers_used = 0usize;
+    let files_scanned = files.len();
+    for (rel, abs) in &files {
+        let src = fs::read_to_string(abs)?;
+        let analysis = rules::analyze(rel, &src);
+        findings.extend(analysis.findings);
+        waivers_used += analysis.used_waivers;
+        if analysis.counts != PanicCounts::default() || baseline.contains_key(rel) {
+            counts.insert(rel.clone(), analysis.counts);
+        }
+    }
+    let (ratchet_findings, notes) = rules::ratchet(&counts, baseline);
+    findings.extend(ratchet_findings);
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    // Drop zero-count entries that only existed to ratchet against the
+    // baseline, so --update-baseline never writes all-zero rows.
+    counts.retain(|_, c| c.total() > 0);
+    Ok(TreeReport { findings, notes, counts, files_scanned, waivers_used })
+}
+
+/// Render a report for terminal output. Returns (text, clean?).
+pub fn render(report: &TreeReport) -> (String, bool) {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    for n in &report.notes {
+        out.push_str(&format!("note: {n}\n"));
+    }
+    let clean = report.findings.is_empty();
+    out.push_str(&format!(
+        "detlint: {} file(s), {} active rule(s), {} waiver(s) in effect — {}\n",
+        report.files_scanned,
+        rules::RULES.len(),
+        report.waivers_used,
+        if clean { "clean".to_string() } else { format!("{} finding(s)", report.findings.len()) }
+    ));
+    (out, clean)
+}
+
+/// Locate the cargo workspace root (`rust/`) from `start`: accepts the
+/// workspace root itself, the repo root (containing `rust/`), or the
+/// `lint/` member dir.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let candidates = [start.to_path_buf(), start.join("rust"), start.join("..")];
+    candidates.into_iter().find(|c| c.join("src/lib.rs").is_file() && c.join("lint/src/lib.rs").is_file())
+}

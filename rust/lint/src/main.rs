@@ -1,0 +1,83 @@
+//! detlint CLI. `cargo run -p detlint` from the workspace (or repo)
+//! root; exit 0 = clean, 1 = findings, 2 = usage / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut update_baseline = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--update-baseline" => update_baseline = true,
+            "--help" | "-h" => {
+                println!(
+                    "detlint — determinism lint for the commtax workspace\n\n\
+                     USAGE: cargo run -p detlint [-- --root <dir>] [--update-baseline]\n\n\
+                     Rules: {}\n\
+                     Waiver grammar: // detlint: allow(<rule>) -- <reason>",
+                    detlint::rules::RULES.join(", ")
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let Some(root) = root.or_else(|| detlint::find_root(&cwd)) else {
+        eprintln!("detlint: cannot locate the workspace root (expected src/lib.rs and lint/src/lib.rs); use --root");
+        return ExitCode::from(2);
+    };
+
+    let baseline_path = root.join(detlint::BASELINE_PATH);
+    let baseline = if update_baseline {
+        Default::default()
+    } else {
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => match detlint::rules::parse_baseline(&text) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("detlint: {e}");
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("detlint: cannot read {}: {e} (run --update-baseline to create it)", baseline_path.display());
+                return ExitCode::from(2);
+            }
+        }
+    };
+
+    let report = match detlint::scan_tree(&root, &baseline) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if update_baseline {
+        let text = detlint::rules::format_baseline(&report.counts);
+        if let Err(e) = std::fs::write(&baseline_path, text) {
+            eprintln!("detlint: cannot write {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!("detlint: wrote {} ({} file(s) with panic sites)", baseline_path.display(), report.counts.len());
+    }
+
+    let (text, clean) = detlint::render(&report);
+    print!("{text}");
+    if clean { ExitCode::SUCCESS } else { ExitCode::from(1) }
+}

@@ -1,0 +1,656 @@
+//! The five determinism rules, applied as token-pattern checks.
+//!
+//! Every headline number this repo produces rests on one contract: a
+//! seeded run yields byte-identical traces, ledgers, and float results
+//! regardless of thread count, solver mode, or admission batching. The
+//! hazards that break that contract are static properties of the source,
+//! so they are checked here, per file:
+//!
+//! * **hash-order** — no `HashMap`/`HashSet` (or aliases of them) in
+//!   sim-affecting modules, and no iteration (`keys`/`values`/`iter`/
+//!   `drain`/`for … in`) over one that survives under a waiver. Fires at
+//!   declaration, constructor, *and* iteration sites: a container you
+//!   cannot declare is a container you cannot iterate, and a waived
+//!   declaration ("keyed lookup only") still trips the iteration check if
+//!   someone later loops over it.
+//! * **wall-clock** — no `Instant`/`SystemTime`/`thread_rng`/`env::var`
+//!   reads in sim-affecting modules; `src/benchkit.rs` (the timing
+//!   harness) is the one blessed module and is simply out of scope.
+//! * **float-order** — no float reduction (`sum`/`product`/`fold`) in a
+//!   statement that iterates an unordered container, and no float
+//!   accumulation lexically inside a `thread::scope` closure outside the
+//!   blessed `fill_component` solver path (whose per-component summation
+//!   order is fixed by construction).
+//! * **panic-hygiene** — `.unwrap()` / `.expect(…)` / direct `[…]`
+//!   indexing in library code is *ratcheted*: per-file counts may never
+//!   exceed the committed baseline (`lint/panic_baseline.tsv`), so the
+//!   inventory can only shrink. Waived lines are excluded from the count.
+//! * **waiver-hygiene** — the inline waiver grammar itself is checked:
+//!   a waiver comment must parse, name a known rule, carry a non-empty
+//!   reason, and actually suppress something. Waiver-hygiene findings are
+//!   not waivable.
+//!
+//! The waiver grammar (one rule per comment, reason mandatory):
+//!
+//! ```text
+//! // detlint: allow(hash-order) -- keyed lookup only, never iterated
+//! ```
+//!
+//! A trailing waiver applies to its own line; a standalone waiver applies
+//! to the next line that holds code.
+
+use crate::lexer::{lex, LineComment, Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The active rule names, in reporting order.
+pub const RULES: [&str; 5] = ["hash-order", "wall-clock", "float-order", "panic-hygiene", "waiver-hygiene"];
+
+const HASH_BASE: [&str; 2] = ["HashMap", "HashSet"];
+const ITER_METHODS: [&str; 10] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "into_keys", "into_values", "retain"];
+const CLOCK_IDENTS: [&str; 6] = ["Instant", "SystemTime", "UNIX_EPOCH", "thread_rng", "from_entropy", "getrandom"];
+const REDUCERS: [&str; 3] = ["sum", "product", "fold"];
+/// Keywords that may legally precede `[` without forming an index
+/// expression (slice patterns, array types after `->`, …).
+const NON_INDEX_KEYWORDS: [&str; 12] =
+    ["let", "in", "if", "else", "match", "return", "mut", "ref", "move", "as", "where", "use"];
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+fn mk(file: &str, line: u32, rule: &'static str, msg: String) -> Finding {
+    Finding { file: file.to_string(), line, rule, msg }
+}
+
+/// Per-file panic-hygiene occurrence counts (library code, test modules
+/// and waived lines excluded).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanicCounts {
+    pub unwrap: u32,
+    pub expect: u32,
+    pub index: u32,
+}
+
+impl PanicCounts {
+    pub fn total(&self) -> u32 {
+        self.unwrap + self.expect + self.index
+    }
+}
+
+/// Result of analyzing one file.
+pub struct Analysis {
+    /// Waiver-applied findings (hash-order, wall-clock, float-order,
+    /// waiver-hygiene). Panic-hygiene findings are produced later, by
+    /// comparing [`Analysis::counts`] against the committed baseline.
+    pub findings: Vec<Finding>,
+    pub counts: PanicCounts,
+    /// Waivers that parsed and suppressed at least one occurrence.
+    pub used_waivers: usize,
+}
+
+/// Is this path (workspace-relative, forward slashes) a sim-affecting
+/// module — one whose execution can reach a trace, ledger, or float
+/// result?
+fn sim_affecting(rel: &str) -> bool {
+    const DIRS: [&str; 9] =
+        ["sim", "fabric", "scenario", "serve", "mem", "workload", "coordinator", "datacenter", "runtime"];
+    match rel.strip_prefix("src/") {
+        Some(rest) => DIRS.iter().any(|d| rest.starts_with(&format!("{d}/"))),
+        None => false,
+    }
+}
+
+/// Library code: everything under a `src/` tree (the simulator crate and
+/// detlint itself) — the panic ratchet's scope.
+fn library_code(rel: &str) -> bool {
+    rel.starts_with("src/") || rel.starts_with("lint/src/")
+}
+
+struct Waiver {
+    rule: String,
+    line: u32,
+    target: Option<u32>,
+    used: bool,
+}
+
+/// Parse one comment as a waiver attempt. `None` = not a waiver; `Err` =
+/// malformed attempt (a waiver-hygiene finding).
+fn parse_waiver(text: &str) -> Option<Result<(String, String), String>> {
+    let t = text.trim();
+    let rest = t.strip_prefix("detlint:")?;
+    let rest = rest.trim_start();
+    let rest = match rest.strip_prefix("allow(") {
+        Some(r) => r,
+        None => return Some(Err("expected `detlint: allow(<rule>) -- <reason>`".to_string())),
+    };
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => return Some(Err("unclosed `allow(`".to_string())),
+    };
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let reason = match after.strip_prefix("--") {
+        Some(r) => r,
+        None => return Some(Err("missing ` -- <reason>`".to_string())),
+    };
+    Some(Ok((rule, reason.trim().to_string())))
+}
+
+/// Mark every waiver for `rule` that targets `line` as used; returns
+/// whether at least one matched (i.e. the occurrence is suppressed).
+fn waive(rule: &str, line: u32, waivers: &mut [Waiver]) -> bool {
+    let mut hit = false;
+    for w in waivers.iter_mut() {
+        if w.rule == rule && w.target == Some(line) {
+            w.used = true;
+            hit = true;
+        }
+    }
+    hit
+}
+
+/// Token-stream structure shared by the rule passes.
+struct Ctx {
+    toks: Vec<Tok>,
+    /// Per-token: inside a `use …;` item.
+    in_use: Vec<bool>,
+    /// Per-token: inside a `#[cfg(test)] mod … { … }` block.
+    in_test: Vec<bool>,
+    /// Per-token: lexically inside a `thread::scope(…)` closure body.
+    in_scope_closure: Vec<bool>,
+    /// Per-token: innermost enclosing fn is `fill_component` (the one
+    /// blessed float-accumulation path).
+    blessed: Vec<bool>,
+    /// Statement boundaries: token ranges split at `;` `{` `}`.
+    stmts: Vec<(usize, usize)>,
+    /// Lines that hold at least one token.
+    token_lines: BTreeSet<u32>,
+}
+
+fn ident(t: &Tok) -> Option<&str> {
+    match &t.kind {
+        TokKind::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Tok, c: char) -> bool {
+    t.kind == TokKind::Punct(c)
+}
+
+fn build_ctx(toks: Vec<Tok>) -> Ctx {
+    let n = toks.len();
+    let mut in_use = vec![false; n];
+    let mut in_test = vec![false; n];
+    let mut in_scope_closure = vec![false; n];
+    let mut blessed = vec![false; n];
+    let mut stmts = Vec::new();
+    let mut token_lines = BTreeSet::new();
+
+    // use-item spans: `use` is a reserved keyword, so any `use` ident
+    // starts an item that ends at the next `;`.
+    let mut i = 0usize;
+    while i < n {
+        if ident(&toks[i]) == Some("use") {
+            let mut j = i;
+            while j < n && !is_punct(&toks[j], ';') {
+                in_use[j] = true;
+                j += 1;
+            }
+            if j < n {
+                in_use[j] = true;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+
+    // brace depth + statement segmentation + fn / cfg(test) / scope spans
+    let mut depth = 0i32;
+    let mut stmt_start = 0usize;
+    // (fn name, depth of its body) stack
+    let mut fn_stack: Vec<(String, i32)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    // depth at which a #[cfg(test)] mod body closes
+    let mut test_until: Option<i32> = None;
+    let mut pending_test_mod = false;
+    // depths of open thread::scope closure bodies
+    let mut scope_until: Vec<i32> = Vec::new();
+    let mut pending_scope = false;
+
+    for k in 0..n {
+        token_lines.insert(toks[k].line);
+        let t = &toks[k];
+        // #[cfg(test)] attribute: # [ cfg ( test ) ]
+        if is_punct(t, '#')
+            && k + 6 < n
+            && is_punct(&toks[k + 1], '[')
+            && ident(&toks[k + 2]) == Some("cfg")
+            && is_punct(&toks[k + 3], '(')
+            && ident(&toks[k + 4]) == Some("test")
+            && is_punct(&toks[k + 5], ')')
+            && is_punct(&toks[k + 6], ']')
+        {
+            pending_test_mod = true;
+        }
+        if ident(t) == Some("fn") {
+            if let Some(name) = toks.get(k + 1).and_then(ident) {
+                pending_fn = Some(name.to_string());
+            }
+        }
+        if ident(t) == Some("scope")
+            && k >= 3
+            && is_punct(&toks[k - 1], ':')
+            && is_punct(&toks[k - 2], ':')
+            && ident(&toks[k - 3]) == Some("thread")
+        {
+            pending_scope = true;
+        }
+        match t.kind {
+            TokKind::Punct('{') => {
+                stmts.push((stmt_start, k));
+                stmt_start = k + 1;
+                depth += 1;
+                if let Some(name) = pending_fn.take() {
+                    fn_stack.push((name, depth));
+                }
+                if pending_test_mod && test_until.is_none() {
+                    // the first block after #[cfg(test)] … `mod` is the
+                    // test module body; attributes between were skipped
+                    test_until = Some(depth);
+                }
+                pending_test_mod = false;
+                if pending_scope {
+                    scope_until.push(depth);
+                    pending_scope = false;
+                }
+            }
+            TokKind::Punct('}') => {
+                stmts.push((stmt_start, k));
+                stmt_start = k + 1;
+                if test_until == Some(depth) {
+                    test_until = None;
+                }
+                while fn_stack.last().map(|f| f.1) == Some(depth) {
+                    fn_stack.pop();
+                }
+                while scope_until.last() == Some(&depth) {
+                    scope_until.pop();
+                }
+                depth -= 1;
+            }
+            TokKind::Punct(';') => {
+                stmts.push((stmt_start, k));
+                stmt_start = k + 1;
+                pending_fn = None;
+            }
+            _ => {}
+        }
+        in_test[k] = test_until.is_some();
+        in_scope_closure[k] = !scope_until.is_empty();
+        blessed[k] = fn_stack.last().map(|f| f.0.as_str()) == Some("fill_component");
+    }
+    stmts.push((stmt_start, n));
+    stmts.retain(|&(a, b)| a < b);
+
+    Ctx { toks, in_use, in_test, in_scope_closure, blessed, stmts, token_lines }
+}
+
+/// Walk back from the hash-typed token at `idx` to the identifier that
+/// owns it: `name: …Hash…` (field / let-with-type / param) or
+/// `name = …Hash…` (let-binding initialized from a constructor).
+fn owner_name(toks: &[Tok], idx: usize) -> Option<String> {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        match &toks[j].kind {
+            TokKind::Ident(_)
+            | TokKind::Punct('<')
+            | TokKind::Punct('(')
+            | TokKind::Punct('&')
+            | TokKind::Lifetime => {}
+            TokKind::Punct(':') => {
+                if j > 0 && is_punct(&toks[j - 1], ':') {
+                    j -= 1; // path separator `::`
+                } else {
+                    return toks.get(j.wrapping_sub(1)).and_then(ident).map(str::to_string);
+                }
+            }
+            TokKind::Punct('=') => {
+                if j > 0 && is_punct(&toks[j - 1], '=') {
+                    return None; // comparison, not a binding
+                }
+                return toks.get(j.wrapping_sub(1)).and_then(ident).map(str::to_string);
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Does the identifier at `k` form a `.name(` method call?
+fn method_call(toks: &[Tok], k: usize, name: &str) -> bool {
+    ident(&toks[k]) == Some(name)
+        && k >= 1
+        && is_punct(&toks[k - 1], '.')
+        && toks.get(k + 1).is_some_and(|t| is_punct(t, '('))
+}
+
+/// May the token preceding `[` complete an indexable expression?
+fn index_base(prev: &Tok) -> bool {
+    match &prev.kind {
+        TokKind::Ident(s) => !NON_INDEX_KEYWORDS.contains(&s.as_str()),
+        TokKind::Punct(')') | TokKind::Punct(']') => true,
+        _ => false,
+    }
+}
+
+/// Env-reading method names after `env::` (`var`, `var_os`, `args`,
+/// `args_os`, `vars`).
+fn env_read(m: &str) -> bool {
+    m.starts_with("var") || m.starts_with("args") || m == "vars"
+}
+
+/// Any float literal or `f32`/`f64` ident in the statement.
+fn float_evidence(stmt: &[Tok]) -> bool {
+    stmt.iter().any(|t| matches!(t.kind, TokKind::Num { float: true }) || matches!(ident(t), Some("f64") | Some("f32")))
+}
+
+/// `. sum|product|fold` at a window of two tokens.
+fn reducer_at(w: &[Tok]) -> bool {
+    is_punct(&w[0], '.') && ident(&w[1]).is_some_and(|m| REDUCERS.contains(&m))
+}
+
+/// `+=` / `-=` accumulation at a window of two tokens.
+fn acc_op(w: &[Tok]) -> bool {
+    (is_punct(&w[0], '+') || is_punct(&w[0], '-')) && is_punct(&w[1], '=')
+}
+
+/// Analyze one file. `rel` is the workspace-relative path with forward
+/// slashes (e.g. `src/fabric/flow.rs`); it selects which rules apply.
+pub fn analyze(rel: &str, src: &str) -> Analysis {
+    let lexed = lex(src);
+    let ctx = build_ctx(lexed.toks);
+    let toks = &ctx.toks;
+    let n = toks.len();
+
+    let hash_scope = sim_affecting(rel) || rel.starts_with("tests/") || rel.starts_with("benches/");
+    let clock_scope = sim_affecting(rel);
+    let float_scope = sim_affecting(rel);
+    let panic_scope = library_code(rel);
+
+    // ---- waivers ---------------------------------------------------------
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for LineComment { line, text } in &lexed.comments {
+        match parse_waiver(text) {
+            None => {}
+            Some(Err(e)) => {
+                findings.push(mk(rel, *line, "waiver-hygiene", format!("malformed waiver: {e}")));
+            }
+            Some(Ok((rule, reason))) => {
+                if !RULES.contains(&rule.as_str()) {
+                    findings.push(mk(rel, *line, "waiver-hygiene", format!("waiver names unknown rule `{rule}`")));
+                } else if rule == "waiver-hygiene" {
+                    findings.push(mk(rel, *line, "waiver-hygiene", "waiver-hygiene is not waivable".to_string()));
+                } else if reason.is_empty() {
+                    findings.push(mk(rel, *line, "waiver-hygiene", format!("waiver for `{rule}` has an empty reason")));
+                } else {
+                    let target = if ctx.token_lines.contains(line) {
+                        Some(*line)
+                    } else {
+                        ctx.token_lines.range(line + 1..).next().copied()
+                    };
+                    waivers.push(Waiver { rule, line: *line, target, used: false });
+                }
+            }
+        }
+    }
+
+    // ---- hash-order ------------------------------------------------------
+    // raw (rule, line, msg) findings before waiver application
+    let mut raw: Vec<(&'static str, u32, String)> = Vec::new();
+    let mut hash_names: BTreeSet<String> = BTreeSet::new();
+    if hash_scope {
+        // pass 1: aliases (`type X = HashMap<…>`), one level deep
+        let mut hash_idents: BTreeSet<String> = HASH_BASE.iter().map(|s| s.to_string()).collect();
+        for &(a, b) in &ctx.stmts {
+            let stmt = &toks[a..b];
+            let has_base = stmt.iter().any(|t| ident(t).is_some_and(|s| HASH_BASE.contains(&s)));
+            if has_base {
+                for (i, t) in stmt.iter().enumerate() {
+                    if ident(t) == Some("type") {
+                        if let Some(alias) = stmt.get(i + 1).and_then(ident) {
+                            hash_idents.insert(alias.to_string());
+                        }
+                    }
+                }
+            }
+        }
+        // pass 2: declared owner names + declaration/constructor findings
+        let mut seen_lines: BTreeSet<u32> = BTreeSet::new();
+        for k in 0..n {
+            if ctx.in_use[k] {
+                continue;
+            }
+            let Some(id) = ident(&toks[k]) else { continue };
+            if !hash_idents.contains(id) {
+                continue;
+            }
+            if let Some(name) = owner_name(toks, k) {
+                hash_names.insert(name);
+            }
+            if seen_lines.insert(toks[k].line) {
+                raw.push(("hash-order", toks[k].line, format!("unordered `{id}` — use an ordered container")));
+            }
+        }
+        // pass 3: iteration over a declared unordered container
+        for k in 0..n {
+            let Some(name) = ident(&toks[k]) else { continue };
+            if !hash_names.contains(name) {
+                continue;
+            }
+            if k + 2 < n && is_punct(&toks[k + 1], '.') {
+                if let Some(m) = ident(&toks[k + 2]) {
+                    if ITER_METHODS.contains(&m) {
+                        raw.push(("hash-order", toks[k + 2].line, format!("iteration `{name}.{m}()` leaks order")));
+                    }
+                }
+            }
+            // `for … in [&[mut]] name {`
+            if k >= 1 {
+                let mut p = k;
+                while p >= 1 && (is_punct(&toks[p - 1], '&') || ident(&toks[p - 1]) == Some("mut")) {
+                    p -= 1;
+                }
+                if p >= 1 && ident(&toks[p - 1]) == Some("in") && toks.get(k + 1).is_some_and(|t| is_punct(t, '{')) {
+                    raw.push(("hash-order", toks[k].line, format!("`for … in {name}` over an unordered container")));
+                }
+            }
+        }
+    }
+
+    // ---- wall-clock ------------------------------------------------------
+    if clock_scope {
+        let mut seen: BTreeSet<u32> = BTreeSet::new();
+        for k in 0..n {
+            let Some(id) = ident(&toks[k]) else { continue };
+            let env_tail = k + 3 < n
+                && is_punct(&toks[k + 1], ':')
+                && is_punct(&toks[k + 2], ':')
+                && ident(&toks[k + 3]).is_some_and(env_read);
+            let hit = CLOCK_IDENTS.contains(&id) || (id == "env" && env_tail);
+            if hit && seen.insert(toks[k].line) {
+                raw.push(("wall-clock", toks[k].line, format!("`{id}` read in a sim-affecting module")));
+            }
+        }
+    }
+
+    // ---- float-order -----------------------------------------------------
+    if float_scope {
+        let mut seen: BTreeSet<u32> = BTreeSet::new();
+        for &(a, b) in &ctx.stmts {
+            let stmt = &toks[a..b];
+            // (a) float reduction over an unordered-container iteration
+            let iterates_hash = stmt.windows(3).any(|w| {
+                ident(&w[0]).is_some_and(|s| hash_names.contains(s))
+                    && is_punct(&w[1], '.')
+                    && ident(&w[2]).is_some_and(|m| ITER_METHODS.contains(&m))
+            });
+            let red = stmt.windows(2).position(reducer_at);
+            if iterates_hash && red.is_some() && float_evidence(stmt) {
+                let line = stmt[red.map_or(0, |r| r + 1)].line;
+                if seen.insert(line) {
+                    raw.push(("float-order", line, "float reduction over an unordered container".to_string()));
+                }
+            }
+            // (b) float accumulation inside a thread::scope closure
+            if a < n && ctx.in_scope_closure[a] && !ctx.blessed[a] {
+                let accumulates = stmt.windows(2).any(acc_op) || red.is_some();
+                if accumulates && float_evidence(stmt) {
+                    let line = stmt[0].line;
+                    if seen.insert(line) {
+                        raw.push(("float-order", line, "float accumulation in a thread::scope closure".to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- apply waivers to raw findings ----------------------------------
+    for (rule, line, msg) in raw {
+        if !waive(rule, line, &mut waivers) {
+            findings.push(Finding { file: rel.to_string(), line, rule, msg });
+        }
+    }
+
+    // ---- panic-hygiene occurrence counting ------------------------------
+    let mut counts = PanicCounts::default();
+    if panic_scope {
+        let mut panic_waived: BTreeSet<u32> = BTreeSet::new();
+        for w in &waivers {
+            if w.rule == "panic-hygiene" {
+                panic_waived.extend(w.target);
+            }
+        }
+        let mut waiver_hits: BTreeSet<u32> = BTreeSet::new();
+        for k in 0..n {
+            if ctx.in_test[k] {
+                continue;
+            }
+            let line = toks[k].line;
+            let occurrence = if method_call(toks, k, "unwrap") {
+                Some(0)
+            } else if method_call(toks, k, "expect") {
+                Some(1)
+            } else if is_punct(&toks[k], '[') && k >= 1 && index_base(&toks[k - 1]) {
+                Some(2)
+            } else {
+                None
+            };
+            if let Some(which) = occurrence {
+                if panic_waived.contains(&line) {
+                    waiver_hits.insert(line);
+                } else {
+                    match which {
+                        0 => counts.unwrap += 1,
+                        1 => counts.expect += 1,
+                        _ => counts.index += 1,
+                    }
+                }
+            }
+        }
+        for w in waivers.iter_mut() {
+            if w.rule == "panic-hygiene" && w.target.is_some_and(|t| waiver_hits.contains(&t)) {
+                w.used = true;
+            }
+        }
+    }
+
+    // ---- unused waivers --------------------------------------------------
+    let mut used_waivers = 0usize;
+    for w in &waivers {
+        if w.used {
+            used_waivers += 1;
+        } else {
+            findings.push(mk(rel, w.line, "waiver-hygiene", format!("unused waiver for `{}`", w.rule)));
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    Analysis { findings, counts, used_waivers }
+}
+
+/// Baseline map: workspace-relative path -> allowed counts.
+pub type Baseline = BTreeMap<String, PanicCounts>;
+
+/// Parse the committed `panic_baseline.tsv` (path, unwrap, expect, index).
+pub fn parse_baseline(text: &str) -> Result<Baseline, String> {
+    let mut map = Baseline::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line = raw_line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let path = parts.next().unwrap_or_default().to_string();
+        let nums: Vec<u32> = parts.map(|p| p.trim().parse::<u32>().unwrap_or(u32::MAX)).collect();
+        if path.is_empty() || nums.len() != 3 || nums.contains(&u32::MAX) {
+            return Err(format!("panic_baseline.tsv:{}: expected `path<TAB>unwrap<TAB>expect<TAB>index`", i + 1));
+        }
+        map.insert(path, PanicCounts { unwrap: nums[0], expect: nums[1], index: nums[2] });
+    }
+    Ok(map)
+}
+
+/// Render a baseline map back to TSV (sorted, with a header comment).
+pub fn format_baseline(map: &Baseline) -> String {
+    let mut out = String::from(
+        "# detlint panic-hygiene ratchet baseline (path<TAB>unwrap<TAB>expect<TAB>index).\n\
+         # Per-file counts of .unwrap() / .expect(…) / direct […] indexing in library\n\
+         # code (cfg(test) modules and waived lines excluded). Counts may only go\n\
+         # down; refresh with `cargo run -p detlint -- --update-baseline`.\n",
+    );
+    for (path, c) in map {
+        out.push_str(&format!("{path}\t{}\t{}\t{}\n", c.unwrap, c.expect, c.index));
+    }
+    out
+}
+
+/// Compare measured counts against the baseline. Returns (findings,
+/// ratchet-improvement notes).
+pub fn ratchet(counts: &Baseline, baseline: &Baseline) -> (Vec<Finding>, Vec<String>) {
+    let mut findings = Vec::new();
+    let mut notes = Vec::new();
+    for (path, c) in counts {
+        let allowed = baseline.get(path).copied().unwrap_or_default();
+        for (what, have, max) in [
+            ("unwrap", c.unwrap, allowed.unwrap),
+            ("expect", c.expect, allowed.expect),
+            ("index", c.index, allowed.index),
+        ] {
+            if have > max {
+                findings.push(mk(path, 1, "panic-hygiene", format!("{what} count {have} exceeds baseline {max}")));
+            }
+        }
+        if c.unwrap < allowed.unwrap || c.expect < allowed.expect || c.index < allowed.index {
+            notes.push(format!(
+                "{path}: counts below baseline ({}/{}/{} vs {}/{}/{}) — refresh with --update-baseline",
+                c.unwrap, c.expect, c.index, allowed.unwrap, allowed.expect, allowed.index
+            ));
+        }
+    }
+    for path in baseline.keys() {
+        if !counts.contains_key(path) {
+            notes.push(format!("{path}: in baseline but not on disk — refresh with --update-baseline"));
+        }
+    }
+    (findings, notes)
+}

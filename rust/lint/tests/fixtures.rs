@@ -1,0 +1,147 @@
+//! Fixture suite pinning detlint's behaviour: each rule fires exactly
+//! once on its fire-fixture, each waiver suppresses it, scope boundaries
+//! hold, and a clean file produces nothing. Fixtures live under
+//! `fixtures/` (outside the scan roots, so their deliberate violations
+//! never fail the workspace lint) and are analyzed under virtual
+//! sim-affecting paths.
+
+use detlint::rules::{analyze, PanicCounts};
+
+/// Findings of one rule when `src` is linted as `rel`.
+fn count(rel: &str, src: &str, rule: &str) -> usize {
+    analyze(rel, src).findings.iter().filter(|f| f.rule == rule).count()
+}
+
+const SIM_PATH: &str = "src/fabric/fixture.rs";
+const LIB_PATH: &str = "src/fixture.rs";
+
+#[test]
+fn hash_order_fires_exactly_once() {
+    let src = include_str!("fixtures/hash_order_fires.rs");
+    let a = analyze(SIM_PATH, src);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+    assert_eq!(a.findings[0].rule, "hash-order");
+}
+
+#[test]
+fn hash_order_waiver_suppresses() {
+    let a = analyze(SIM_PATH, include_str!("fixtures/hash_order_waived.rs"));
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+    assert_eq!(a.used_waivers, 1);
+}
+
+#[test]
+fn hash_order_for_loop_fires_despite_declaration_waiver() {
+    let src = include_str!("fixtures/hash_order_for_loop_fires.rs");
+    let a = analyze(SIM_PATH, src);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+    assert!(a.findings[0].msg.contains("for"), "{:?}", a.findings);
+}
+
+#[test]
+fn hash_order_only_in_scope() {
+    // Same source outside sim-affecting / tests / benches paths: silent.
+    let src = include_str!("fixtures/hash_order_fires.rs");
+    assert_eq!(count("src/config/fixture.rs", src, "hash-order"), 0);
+    assert_eq!(count("tests/fixture.rs", src, "hash-order"), 1);
+}
+
+#[test]
+fn wall_clock_fires_exactly_once() {
+    let src = include_str!("fixtures/wall_clock_fires.rs");
+    let a = analyze("src/sim/fixture.rs", src);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+    assert_eq!(a.findings[0].rule, "wall-clock");
+}
+
+#[test]
+fn wall_clock_waiver_suppresses() {
+    let a = analyze("src/sim/fixture.rs", include_str!("fixtures/wall_clock_waived.rs"));
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+    assert_eq!(a.used_waivers, 1);
+}
+
+#[test]
+fn wall_clock_blessed_module_is_out_of_scope() {
+    // benchkit (src/benchkit.rs) is not sim-affecting: timing is its job.
+    let src = include_str!("fixtures/wall_clock_fires.rs");
+    assert_eq!(count("src/benchkit.rs", src, "wall-clock"), 0);
+}
+
+#[test]
+fn float_order_fires_exactly_once() {
+    let src = include_str!("fixtures/float_order_fires.rs");
+    let a = analyze(SIM_PATH, src);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+    assert_eq!(a.findings[0].rule, "float-order");
+}
+
+#[test]
+fn float_order_waiver_suppresses() {
+    let a = analyze(SIM_PATH, include_str!("fixtures/float_order_waived.rs"));
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn float_order_fires_in_scope_closures() {
+    let src = include_str!("fixtures/float_order_scope_fires.rs");
+    assert_eq!(count(SIM_PATH, src, "float-order"), 1);
+}
+
+#[test]
+fn float_order_blesses_fill_component() {
+    let a = analyze(SIM_PATH, include_str!("fixtures/float_order_blessed_clean.rs"));
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn panic_hygiene_counts_each_kind_once() {
+    let a = analyze(LIB_PATH, include_str!("fixtures/panic_fires.rs"));
+    assert_eq!(a.counts, PanicCounts { unwrap: 1, expect: 1, index: 1 });
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn panic_hygiene_waived_lines_are_excluded() {
+    let a = analyze(LIB_PATH, include_str!("fixtures/panic_waived.rs"));
+    assert_eq!(a.counts, PanicCounts::default());
+    assert_eq!(a.used_waivers, 3);
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn panic_hygiene_skips_test_modules_and_non_library_code() {
+    let src = include_str!("fixtures/panic_fires.rs");
+    assert_eq!(analyze("benches/fixture.rs", src).counts, PanicCounts::default());
+    let in_test_mod = format!("#[cfg(test)]\nmod tests {{\n{src}\n}}\n");
+    assert_eq!(analyze(LIB_PATH, &in_test_mod).counts, PanicCounts::default());
+}
+
+#[test]
+fn waiver_hygiene_flags_unused_waivers() {
+    let src = include_str!("fixtures/waiver_hygiene_fires.rs");
+    let a = analyze(LIB_PATH, src);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+    assert_eq!(a.findings[0].rule, "waiver-hygiene");
+    assert_eq!(a.used_waivers, 0);
+}
+
+#[test]
+fn waiver_hygiene_flags_malformed_unknown_and_empty() {
+    let malformed = "// detlint: allowed(hash-order) -- typo\npub fn f() {}\n";
+    assert_eq!(count(LIB_PATH, malformed, "waiver-hygiene"), 1);
+    let unknown = "// detlint: allow(made-up-rule) -- nope\npub fn f() {}\n";
+    assert_eq!(count(LIB_PATH, unknown, "waiver-hygiene"), 1);
+    let empty = "// detlint: allow(hash-order) --\npub fn f() {}\n";
+    assert_eq!(count(LIB_PATH, empty, "waiver-hygiene"), 1);
+    let self_waiver = "// detlint: allow(waiver-hygiene) -- not allowed\npub fn f() {}\n";
+    assert_eq!(count(LIB_PATH, self_waiver, "waiver-hygiene"), 1);
+}
+
+#[test]
+fn clean_file_passes() {
+    let a = analyze(SIM_PATH, include_str!("fixtures/clean.rs"));
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+    assert_eq!(a.counts, PanicCounts::default());
+    assert_eq!(a.used_waivers, 0);
+}

@@ -1,0 +1,7 @@
+// Fixture: deterministic code — ordered containers, sim time only, no
+// panic sites — must produce zero findings and zero panic counts.
+use std::collections::BTreeMap;
+
+pub fn total(m: &BTreeMap<u64, u64>) -> u64 {
+    m.values().sum()
+}

@@ -1,0 +1,16 @@
+// Fixture: the blessed `fill_component` path may accumulate floats even
+// inside a thread::scope closure — its summation order is fixed by
+// construction.
+pub fn solve(xs: &mut [f64]) {
+    std::thread::scope(|s| {
+        let _ = s;
+        fn fill_component(ys: &mut [f64]) {
+            let mut acc = 0.0f64;
+            for y in ys.iter() {
+                acc += *y * 1.0;
+            }
+            ys[0] = acc;
+        }
+        fill_component(xs);
+    });
+}

@@ -1,0 +1,16 @@
+// Fixture: a float reduction over an unordered container must raise
+// exactly one float-order finding (the hash-order findings on the same
+// code are waived so the fixture isolates the float rule).
+use std::collections::HashMap;
+
+pub struct S {
+    // detlint: allow(hash-order) -- fixture: focus on float-order
+    m: HashMap<u64, f64>,
+}
+
+impl S {
+    pub fn total(&self) -> f64 {
+        // detlint: allow(hash-order) -- fixture: focus on float-order
+        self.m.values().sum::<f64>()
+    }
+}

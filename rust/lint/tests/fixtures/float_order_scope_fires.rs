@@ -1,0 +1,10 @@
+// Fixture: float accumulation inside a thread::scope closure must raise
+// exactly one float-order finding.
+pub fn accumulate(xs: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    std::thread::scope(|s| {
+        let _ = s;
+        acc += xs[0] * 1.0;
+    });
+    acc
+}

@@ -1,0 +1,16 @@
+// Fixture: the same reduction under a reasoned float-order waiver is
+// clean.
+use std::collections::HashMap;
+
+pub struct S {
+    // detlint: allow(hash-order) -- fixture: focus on float-order
+    m: HashMap<u64, f64>,
+}
+
+impl S {
+    pub fn total(&self) -> f64 {
+        // detlint: allow(hash-order) -- fixture: focus on float-order
+        // detlint: allow(float-order) -- fixture: values are exact integers stored as f64
+        self.m.values().sum::<f64>()
+    }
+}

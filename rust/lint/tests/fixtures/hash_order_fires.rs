@@ -1,0 +1,7 @@
+// Fixture: a HashMap declaration in a sim-affecting module must raise
+// exactly one hash-order finding.
+use std::collections::HashMap;
+
+pub struct Fixture {
+    map: HashMap<u64, u64>,
+}

@@ -1,0 +1,12 @@
+// Fixture: `for … in` over a declared unordered container fires even
+// when the declaration itself is waived — a "keyed lookup only" waiver
+// does not license iteration.
+use std::collections::HashMap;
+
+pub fn sum(m: HashMap<u64, u64>) -> u64 { // detlint: allow(hash-order) -- fixture: focus on the for-loop check
+    let mut acc = 0;
+    for (_k, v) in &m {
+        acc += v;
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// Fixture: the same declaration under a reasoned waiver is clean.
+use std::collections::HashMap;
+
+pub struct Fixture {
+    // detlint: allow(hash-order) -- fixture: keyed lookup only, never iterated
+    map: HashMap<u64, u64>,
+}

@@ -1,0 +1,7 @@
+// Fixture: one unwrap, one expect, one direct index — the panic-hygiene
+// counters must report exactly (1, 1, 1).
+pub fn f(xs: &[u64]) -> u64 {
+    let a = xs.first().unwrap();
+    let b: u64 = "7".parse().expect("parse");
+    a + b + xs[0]
+}

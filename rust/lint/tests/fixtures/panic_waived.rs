@@ -1,0 +1,9 @@
+// Fixture: waived lines are excluded from the panic-hygiene counts.
+pub fn f(xs: &[u64]) -> u64 {
+    // detlint: allow(panic-hygiene) -- fixture: nonempty by construction
+    let a = xs.first().unwrap();
+    // detlint: allow(panic-hygiene) -- fixture: literal always parses
+    let b: u64 = "7".parse().expect("parse");
+    // detlint: allow(panic-hygiene) -- fixture: bounds checked above
+    a + b + xs[0]
+}

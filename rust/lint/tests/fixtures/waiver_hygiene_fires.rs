@@ -1,0 +1,6 @@
+// Fixture: a waiver that suppresses nothing must raise exactly one
+// waiver-hygiene finding.
+pub fn plain() -> u64 {
+    // detlint: allow(hash-order) -- fixture: nothing to suppress here
+    7
+}

@@ -1,0 +1,5 @@
+// Fixture: a wall-clock read in a sim-affecting module must raise
+// exactly one wall-clock finding.
+pub fn now_ms() -> u128 {
+    std::time::Instant::now().elapsed().as_millis()
+}

@@ -1,0 +1,5 @@
+// Fixture: the same read under a reasoned waiver is clean.
+pub fn now_ms() -> u128 {
+    // detlint: allow(wall-clock) -- fixture: value never reaches sim state
+    std::time::Instant::now().elapsed().as_millis()
+}

@@ -1,0 +1,18 @@
+//! The whole workspace must lint clean: `cargo test` enforces detlint
+//! even where CI wiring is bypassed, and any new finding (or a panic
+//! count above the committed ratchet baseline) fails this test with the
+//! full report.
+
+use std::path::Path;
+
+#[test]
+fn workspace_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("lint/ lives under the workspace root");
+    let baseline_text = std::fs::read_to_string(root.join(detlint::BASELINE_PATH))
+        .expect("lint/panic_baseline.tsv must be committed (cargo run -p detlint -- --update-baseline)");
+    let baseline = detlint::rules::parse_baseline(&baseline_text).expect("baseline parses");
+    let report = detlint::scan_tree(root, &baseline).expect("workspace scan");
+    let (text, clean) = detlint::render(&report);
+    assert!(clean, "detlint must exit clean on the committed tree:\n{text}");
+    assert!(report.files_scanned > 50, "scan found only {} files — wrong root?", report.files_scanned);
+}

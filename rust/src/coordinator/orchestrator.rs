@@ -6,7 +6,7 @@ use crate::fabric::cxl::CxlVersion;
 use crate::mem::media::MediaSpec;
 use crate::mem::pool::{MemoryDevice, MemoryPool, PoolError, PoolHandle};
 use crate::GIB;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// What a workload asks the orchestrator for.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,7 +43,7 @@ pub struct Orchestrator {
     /// Accelerator inventory: index -> in-use flag.
     accels: Vec<bool>,
     pool: MemoryPool,
-    live: HashMap<u64, (Vec<usize>, Option<PoolHandle>)>,
+    live: BTreeMap<u64, (Vec<usize>, Option<PoolHandle>)>,
     next_id: u64,
     /// Spare memory trays available for hot-plug (devices each).
     spare_trays: Vec<Vec<MemoryDevice>>,
@@ -72,7 +72,7 @@ impl Orchestrator {
         Orchestrator {
             accels: vec![false; accelerators],
             pool,
-            live: HashMap::new(),
+            live: BTreeMap::new(),
             next_id: 0,
             spare_trays: spares,
             hot_plugs: 0,
@@ -230,7 +230,7 @@ mod tests {
             |rng| (0..30).map(|_| (1 + rng.index(4), rng.chance(0.4))).collect::<Vec<_>>(),
             |script| {
                 let mut o = Orchestrator::new(8, 2, 1);
-                let mut live: std::collections::HashMap<u64, Vec<usize>> = Default::default();
+                let mut live: std::collections::BTreeMap<u64, Vec<usize>> = Default::default();
                 for &(n, release_one) in script {
                     if release_one {
                         if let Some(&id) = live.keys().next() {

@@ -16,7 +16,7 @@
 //! migration traffic to a congested fabric's tax.
 
 use crate::mem::tier::Tier;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Per-region tracking state.
 #[derive(Clone, Copy, Debug)]
@@ -29,7 +29,7 @@ struct RegionState {
 /// Placement policy with temperature tracking and hysteresis.
 #[derive(Debug)]
 pub struct PlacementPolicy {
-    regions: HashMap<u64, RegionState>,
+    regions: BTreeMap<u64, RegionState>,
     /// EMA decay per observation window, in (0,1).
     decay: f64,
     /// Temperature above which a region belongs in tier-1.
@@ -50,7 +50,7 @@ impl PlacementPolicy {
     /// Policy with a tier-1 budget.
     pub fn new(local_budget: u64) -> Self {
         PlacementPolicy {
-            regions: HashMap::new(),
+            regions: BTreeMap::new(),
             decay: 0.5,
             hot_threshold: 4.0,
             cold_threshold: 0.25,

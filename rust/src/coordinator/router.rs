@@ -41,6 +41,7 @@ pub struct Router {
     utilization: Vec<f64>,
     rr_next: usize,
     /// session -> cluster affinity map.
+    // detlint: allow(hash-order) -- keyed get/insert by session id only; routing decisions read one entry at a time, never iterate
     affinity: HashMap<u64, usize>,
     pub routed: u64,
     pub affinity_hits: u64,
@@ -56,6 +57,7 @@ impl Router {
             in_flight: vec![0; clusters],
             utilization: vec![0.0; clusters],
             rr_next: 0,
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only map waived at its declaration
             affinity: HashMap::new(),
             routed: 0,
             affinity_hits: 0,

@@ -444,6 +444,7 @@ const PARALLEL_SOLVE_THRESHOLD: usize = 256;
 /// carries no extra dependencies) — falling back to the machine's
 /// available parallelism. `0` or garbage means "use the fallback".
 fn default_solver_threads() -> usize {
+    // detlint: allow(wall-clock) -- worker-count knob only; solved rates are byte-identical for any thread count (pinned by the parallel-vs-serial equivalence tests)
     match std::env::var("RAYON_NUM_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
         Some(n) if n >= 1 => n,
         _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -591,6 +592,7 @@ struct FlowNet {
     active: BTreeMap<FlowId, FlowState>,
     /// Flows submitted but still paying the head-of-message hop latency.
     staged: BTreeMap<FlowId, FlowState>,
+    // detlint: allow(hash-order) -- keyed insert/remove by FlowId only; callbacks fire in event-heap order, the map is never iterated
     pending_cb: HashMap<FlowId, DoneCb>,
     next_id: FlowId,
     /// Generation counter: bumped on every rate repair so completion
@@ -615,6 +617,7 @@ struct FlowNet {
     /// Open aggregates by route key (only populated under
     /// [`AggregationPolicy::SameRoute`]; entries always refer to active
     /// flows and the newest same-key leader wins).
+    // detlint: allow(hash-order) -- keyed get/insert/remove by AggKey only; aggregate membership decisions never iterate this map
     agg_index: HashMap<AggKey, FlowId>,
     /// Members that joined an existing aggregate (introspection).
     joined: u64,
@@ -680,6 +683,7 @@ impl FlowNet {
             admission_flushes: 0,
             active: BTreeMap::new(),
             staged: BTreeMap::new(),
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only map waived at its declaration
             pending_cb: HashMap::new(),
             next_id: 0,
             epoch: 0,
@@ -689,6 +693,7 @@ impl FlowNet {
             edge_seen: vec![0.0; ne],
             heap: FinishHeap::new(),
             active_members: 0,
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only map waived at its declaration
             agg_index: HashMap::new(),
             joined: 0,
             mark: 0,

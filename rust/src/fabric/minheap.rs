@@ -18,6 +18,7 @@ use std::collections::HashMap;
 pub struct FinishHeap {
     heap: Vec<(SimTime, u64)>,
     /// id -> current index in `heap`.
+    // detlint: allow(hash-order) -- hot-path bookkeeping, get/insert/remove by id only; ordering authority is the heap array itself
     pos: HashMap<u64, usize>,
 }
 

@@ -39,6 +39,7 @@ impl Hasher for PairHasher {
     }
 }
 
+// detlint: allow(hash-order) -- fixed (non-random) PairHasher and keyed-lookup-only use: both caches memoize per-pair route results and are never iterated
 type PairMap<V> = HashMap<(NodeId, NodeId), V, BuildHasherDefault<PairHasher>>;
 
 /// Node identifier within a topology.
@@ -88,8 +89,10 @@ pub struct Topology {
     /// adjacency: node -> [(neighbor, edge id)]
     adj: Vec<Vec<(NodeId, usize)>>,
     endpoints: Vec<NodeId>,
+    // detlint: allow(hash-order) -- per-pair memo cache, get/insert by (src, dst) key only
     route_cache: RwLock<PairMap<Option<Arc<Vec<usize>>>>>,
     /// Equal-cost candidate sets for PBR (computed once per pair).
+    // detlint: allow(hash-order) -- per-pair memo cache, get/insert by (src, dst) key only
     ecmp_cache: RwLock<PairMap<Arc<Vec<Vec<usize>>>>>,
 }
 
@@ -102,7 +105,9 @@ impl Topology {
             edges: Vec::new(),
             adj: Vec::new(),
             endpoints: Vec::new(),
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only cache waived at its declaration
             route_cache: RwLock::new(HashMap::default()),
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only cache waived at its declaration
             ecmp_cache: RwLock::new(HashMap::default()),
         }
     }

@@ -14,7 +14,7 @@
 //!   this is the "redundant data transfers and complex software
 //!   interventions" path (§4.2).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Agent (accelerator / CPU) id within a coherence domain.
 pub type AgentId = usize;
@@ -30,11 +30,13 @@ pub enum AccessMode {
     Write,
 }
 
-/// Directory entry state (MSI-style at region granularity).
+/// Directory entry state (MSI-style at region granularity). Sharer sets
+/// are `BTreeSet` so invalidation fan-out enumerates agents in a fixed
+/// order — sharer order must never leak into traces.
 #[derive(Clone, Debug, PartialEq, Eq)]
 enum DirState {
     Uncached,
-    Shared(HashSet<AgentId>),
+    Shared(BTreeSet<AgentId>),
     Exclusive(AgentId),
 }
 
@@ -52,9 +54,9 @@ pub struct CoherenceOutcome {
 /// Directory-based hardware coherence (CXL.cache semantics).
 #[derive(Debug, Default)]
 pub struct Directory {
-    state: HashMap<RegionId, DirState>,
+    state: BTreeMap<RegionId, DirState>,
     /// Region size in bytes per region id.
-    sizes: HashMap<RegionId, u64>,
+    sizes: BTreeMap<RegionId, u64>,
     pub total_invalidations: u64,
     pub total_fetches: u64,
     pub total_fetch_bytes: u64,
@@ -85,7 +87,7 @@ impl Directory {
         match mode {
             AccessMode::Read => match st {
                 DirState::Uncached => {
-                    *st = DirState::Shared(HashSet::from([agent]));
+                    *st = DirState::Shared(BTreeSet::from([agent]));
                     self.total_fetches += 1;
                     self.total_fetch_bytes += bytes;
                     CoherenceOutcome { cache_hit: false, fetch_bytes: bytes, invalidations: 0 }
@@ -108,7 +110,7 @@ impl Directory {
                     } else {
                         // downgrade owner to shared; dirty data flows to reader
                         let o = *owner;
-                        *st = DirState::Shared(HashSet::from([o, agent]));
+                        *st = DirState::Shared(BTreeSet::from([o, agent]));
                         self.total_fetches += 1;
                         self.total_fetch_bytes += bytes;
                         CoherenceOutcome { cache_hit: false, fetch_bytes: bytes, invalidations: 0 }

@@ -37,6 +37,7 @@ pub struct KvCache {
     local_budget_pages: u64,
     local_used_pages: u64,
     pool_used_pages: u64,
+    // detlint: allow(hash-order) -- keyed get/insert/remove by sequence id only; eviction and spill order come from explicit token lists
     seqs: HashMap<u64, SeqEntry>,
     /// Bytes moved to/from the pool due to spill/fetch.
     pub spill_bytes: u64,
@@ -54,6 +55,7 @@ impl KvCache {
             local_budget_pages: if page_bytes == 0 { 0 } else { local_budget / page_bytes },
             local_used_pages: 0,
             pool_used_pages: 0,
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only map waived at its declaration
             seqs: HashMap::new(),
             spill_bytes: 0,
             fetch_bytes: 0,

@@ -63,6 +63,7 @@ pub struct MemoryPool {
     version: CxlVersion,
     devices: Vec<MemoryDevice>,
     allocators: Vec<RangeAllocator>,
+    // detlint: allow(hash-order) -- keyed by allocation handle; the only non-keyed use is an order-insensitive existence check in hot_remove
     allocs: HashMap<u64, PoolAlloc>,
     next_handle: u64,
     /// Practical (not theoretical) device cap for this deployment.
@@ -81,6 +82,7 @@ impl MemoryPool {
             version,
             devices: Vec::new(),
             allocators: Vec::new(),
+            // detlint: allow(hash-order) -- ctor of the keyed-lookup-only map waived at its declaration
             allocs: HashMap::new(),
             next_handle: 0,
             device_cap: version.practical_memory_devices_per_port(),
@@ -144,6 +146,7 @@ impl MemoryPool {
         if !self.version.hot_plug() {
             return Err(PoolError::HotPlugUnsupported(self.version));
         }
+        // detlint: allow(hash-order) -- existential `.any()` over values: true/false is order-insensitive, no order reaches a trace
         if self.allocs.values().any(|a| a.extents.iter().any(|(d, _)| *d == device)) {
             return Err(PoolError::DeviceBusy);
         }

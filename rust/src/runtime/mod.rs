@@ -16,18 +16,27 @@ pub use artifacts::{ArtifactManifest, ArtifactSpec};
 
 use crate::Result;
 use anyhow::{anyhow, Context};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
-/// A loaded PJRT engine with an executable cache.
+/// Executable names of `m` in deterministic (lexicographic) order — the
+/// `BTreeMap` guarantees it, this helper just centralizes the listing so
+/// `names()` and `Debug` can't drift apart.
+fn ordered_names<V>(m: &BTreeMap<String, V>) -> Vec<&str> {
+    m.keys().map(|s| s.as_str()).collect()
+}
+
+/// A loaded PJRT engine with an executable cache. `BTreeMap`, not
+/// `HashMap`: `names()` feeds logs and manifests, so listing order must
+/// not vary run-to-run.
 pub struct Runtime {
     client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime").field("executables", &self.exes.keys().collect::<Vec<_>>()).finish()
+        f.debug_struct("Runtime").field("executables", &ordered_names(&self.exes)).finish()
     }
 }
 
@@ -35,7 +44,7 @@ impl Runtime {
     /// CPU PJRT client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, exes: HashMap::new() })
+        Ok(Runtime { client, exes: BTreeMap::new() })
     }
 
     /// Platform name reported by PJRT.
@@ -69,9 +78,9 @@ impl Runtime {
         self.exes.contains_key(name)
     }
 
-    /// Loaded executable names.
+    /// Loaded executable names, in deterministic lexicographic order.
     pub fn names(&self) -> Vec<&str> {
-        self.exes.keys().map(|s| s.as_str()).collect()
+        ordered_names(&self.exes)
     }
 
     /// Execute `name` with f32 tensor inputs `(data, shape)`; returns the
@@ -122,5 +131,14 @@ mod tests {
     fn platform_is_cpu() {
         let rt = Runtime::cpu().unwrap();
         assert_eq!(rt.platform().to_lowercase(), "cpu");
+    }
+
+    #[test]
+    fn names_are_sorted_regardless_of_insertion_order() {
+        let mut m: BTreeMap<String, ()> = BTreeMap::new();
+        for k in ["zeta", "alpha", "mid"] {
+            m.insert(k.to_string(), ());
+        }
+        assert_eq!(ordered_names(&m), vec!["alpha", "mid", "zeta"]);
     }
 }

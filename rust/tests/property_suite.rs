@@ -113,8 +113,8 @@ fn property_coherence_single_writer() {
             // a cache hit is legal iff the agent touched the region after
             // the most recent *foreign* write (its copy is still valid)
             let mut seq = 0u64;
-            let mut last_touch: std::collections::HashMap<(usize, u64), u64> = Default::default();
-            let mut last_foreign_write: std::collections::HashMap<u64, (usize, u64)> = Default::default();
+            let mut last_touch: std::collections::BTreeMap<(usize, u64), u64> = Default::default();
+            let mut last_foreign_write: std::collections::BTreeMap<u64, (usize, u64)> = Default::default();
             for &(agent, region, is_write) in script {
                 seq += 1;
                 let mode = if is_write { AccessMode::Write } else { AccessMode::Read };
@@ -305,7 +305,7 @@ fn property_kv_pages_resident_in_exactly_one_tier() {
             let page_tokens = 16u64;
             let budget_pages = 8u64;
             let mut kv = KvCache::new(budget_pages * page_tokens, page_tokens, 1);
-            let mut tokens: std::collections::HashMap<u64, u64> = Default::default();
+            let mut tokens: std::collections::BTreeMap<u64, u64> = Default::default();
             for &(seq, t, release) in script {
                 if release {
                     kv.release(seq);
